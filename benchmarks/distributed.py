@@ -1,0 +1,88 @@
+"""Distributed engine benchmark: replicate vs shuffle merge on a real
+multi-device host mesh (the paper's §1 centralise-vs-replicate trade).
+
+Runs in a subprocess with 8 forced host devices (the parent process has
+already locked jax to 1 device); reports per-strategy wall time and the
+collective schedule from the lowered HLO — the triclustering §Perf cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import print_table, save_json
+
+_WORKER = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax
+from repro.core import BatchMiner, DistributedMiner, pad_tuples
+from repro.data import synthetic
+from repro.analysis.hlo import profile_module
+
+ctx = synthetic.movielens_like(n_tuples=int(%(n)d), seed=0)
+auto = (jax.sharding.AxisType.Auto,)
+mesh = jax.make_mesh((8,), ("data",), axis_types=auto)
+tuples = pad_tuples(ctx.tuples, 8)
+out = {}
+bm = BatchMiner(ctx.sizes)
+r = bm(tuples); jax.block_until_ready(r.sig_lo)
+t0 = time.perf_counter(); r = bm(tuples); jax.block_until_ready(r.sig_lo)
+out["batch_1dev_ms"] = (time.perf_counter() - t0) * 1e3
+for strategy in ("replicate", "shuffle"):
+    dm = DistributedMiner(ctx.sizes, mesh, axes="data", strategy=strategy)
+    r = dm(tuples); jax.block_until_ready(r.sig_lo)
+    t0 = time.perf_counter(); r = dm(tuples); jax.block_until_ready(r.sig_lo)
+    ms = (time.perf_counter() - t0) * 1e3
+    comp = dm._compiled if hasattr(dm, "_compiled") else None
+    prof = None
+    try:
+        lowered = dm.lowered(tuples)
+        prof = profile_module(lowered.compile().as_text(), 8)
+    except Exception:
+        pass
+    out[strategy] = {"ms": ms,
+                     "n_clusters": int(np.asarray(r.is_unique).sum()),
+                     "overflow": int(getattr(r, "overflow", 0))}
+    if prof is not None:
+        out[strategy]["collectives"] = {k: list(v)
+                                        for k, v in prof.by_kind.items()}
+        out[strategy]["coll_operand_bytes"] = prof.operand_bytes
+        out[strategy]["coll_wire_bytes"] = prof.wire_bytes
+print("RESULT " + json.dumps(out))
+'''
+
+
+def run(n_tuples: int = 40_000):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(root, "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    proc = subprocess.run([sys.executable, "-c", _WORKER % {"n": n_tuples}],
+                          capture_output=True, text=True, env=env,
+                          timeout=1200)
+    out = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            out = json.loads(line[len("RESULT "):])
+    if not out:
+        print(proc.stdout[-2000:])
+        print(proc.stderr[-2000:])
+        raise RuntimeError("distributed benchmark worker failed")
+    rows = [["batch (1 dev)", f"{out['batch_1dev_ms']:.1f}", "-", "-"]]
+    for s in ("replicate", "shuffle"):
+        d = out[s]
+        rows.append([s, f"{d['ms']:.1f}", f"{d['n_clusters']:,}",
+                     f"{d.get('coll_wire_bytes', 0) / 1e6:.2f}MB"])
+    print_table(f"Distributed mining, 8-device mesh, |I|={n_tuples:,}",
+                ["engine", "ms", "#clusters", "collective wire"], rows)
+    save_json("distributed.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

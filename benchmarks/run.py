@@ -1,0 +1,50 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (+ the distributed mesh benchmark).
+``--scale`` shrinks dataset sizes to the CPU budget (default settings
+finish in a few minutes on one core); every run saves raw JSON under
+results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.12,
+                    help="dataset size multiplier vs the paper's")
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--only", default="",
+                    help="comma list: table3,table4,table5,scaling,"
+                    "distributed")
+    args = ap.parse_args(argv)
+
+    from . import distributed, scaling, table3, table4, table5
+    jobs = {
+        "table3": lambda: table3.run(scale=args.scale * 3,
+                                     repeat=args.repeat),
+        "table4": lambda: table4.run(scale=args.scale, repeat=args.repeat),
+        "table5": lambda: table5.run(scale=args.scale / 2,
+                                     repeat=args.repeat),
+        "scaling": lambda: scaling.run(scale=args.scale,
+                                       repeat=args.repeat),
+        "distributed": lambda: distributed.run(
+            n_tuples=int(320_000 * args.scale)),
+    }
+    only = [s for s in args.only.split(",") if s] or list(jobs)
+    rc = 0
+    for name in only:
+        print(f"\n######## {name} ########", flush=True)
+        try:
+            jobs[name]()
+        except Exception:
+            traceback.print_exc()
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Paper Fig. 2/3: runtime-vs-|I| scaling curves.
+
+Fig. 2 analogue: pipeline time as a function of tuple count on the
+MovieLens-like stream (expects ~linear — the paper's O(|I|·Σ|A_j|)).
+Fig. 3 analogue: NOAC time vs tuple count (two parameterisations,
+expecting parameter-independence of runtime, the paper's observation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BatchMiner, NOACMiner
+from repro.data import synthetic as S
+
+from .common import print_table, save_json, timeit
+
+
+def run(scale: float = 0.2, repeat: int = 3):
+    raw = {"fig2": [], "fig3": []}
+    full = S.movielens_like(n_tuples=int(1_000_000 * scale), seed=0)
+    fracs = (0.1, 0.25, 0.5, 0.75, 1.0)
+    miner = BatchMiner(full.sizes)
+    rows = []
+    for f in fracs:
+        n = max(int(full.tuples.shape[0] * f), 64)
+        t, res = timeit(miner, full.tuples[:n], repeat=repeat)
+        n_cl = int(np.asarray(res.is_unique).sum())
+        rows.append([f"{n:,}", f"{t * 1e3:,.1f}", f"{n_cl:,}",
+                     f"{t / n * 1e6:.2f}"])
+        raw["fig2"].append({"n": n, "ms": t * 1e3, "clusters": n_cl})
+    print_table("Fig. 2 — pipeline scaling (MovieLens-like)",
+                ["|I|", "ms", "#clusters", "µs/tuple"], rows)
+
+    frames = S.semantic_frames_like(n_tuples=int(100_000 * scale), seed=0)
+    rows = []
+    for delta, rho, minsup in [(100.0, 0.8, 2), (100.0, 0.5, 0)]:
+        nm = NOACMiner(frames.sizes, delta=delta, rho_min=rho, minsup=minsup)
+        for f in fracs:
+            n = max(int(frames.tuples.shape[0] * f), 64)
+            vals = frames.values[:n]
+            t, res = timeit(nm, frames.tuples[:n], vals, repeat=repeat)
+            rows.append([f"NOAC({delta:.0f},{rho},{minsup})", f"{n:,}",
+                         f"{t * 1e3:,.1f}",
+                         int(np.asarray(res.keep).sum())])
+            raw["fig3"].append({"params": [delta, rho, minsup], "n": n,
+                                "ms": t * 1e3})
+    print_table("Fig. 3 — NOAC scaling (frames-like)",
+                ["params", "|I|", "ms", "#kept"], rows)
+    save_json("scaling.json", raw)
+    return raw
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Batched serving demo: ragged prompts through prefill + decode.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch mixtral-8x7b]
+
+Uses the reduced config of the chosen family (CPU-sized) and the same
+ServeEngine / decode_step the decode_32k dry-run cells lower at
+production size.
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+    rc = S.main(["--arch", args.arch, "--smoke", "--batch", "4",
+                 "--prompt-len", "24", "--new-tokens", "12",
+                 "--max-len", "128"])
+    assert rc == 0
+    print("serve_batch: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Inject rendered roofline tables into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.analysis.report import dryrun_summary, load, roofline_table  # noqa
+
+
+def main():
+    rows = load("results/dryrun_final.jsonl")
+    summary = dryrun_summary(rows)
+    tables = []
+    for mesh in ("1pod", "2pod"):
+        tables.append(f"### {mesh} "
+                      f"({'256' if mesh == '1pod' else '512'} chips)\n")
+        tables.append(roofline_table(rows, mesh))
+        tables.append("")
+    final_tables = "\n".join(tables)
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- ROOFLINE_SUMMARY -->", summary)
+    text = text.replace("<!-- FINAL_TABLES -->", final_tables)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("injected summary + tables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,609 @@
+"""Scan-aware post-optimisation HLO profiler (DESIGN.md §9).
+
+``compiled.as_text()`` of an SPMD executable is the *per-device* module:
+every shape literal is a shard shape and the SPMD partitioner has already
+inserted the explicit collectives. Two things XLA's built-in
+``cost_analysis()`` gets wrong for our purposes:
+
+* a ``while`` body (scan-over-layers) is counted **once**, not
+  ``trip_count`` times — an 80-layer model looks like a 1-layer model;
+* collective traffic is not reported at all.
+
+This module re-derives all three roofline inputs from the HLO text with a
+call-graph walk:
+
+1. parse computations and instructions (name -> dtype/dims, opcode, refs);
+2. propagate *multiplicity* from ENTRY through the call graph — ``while``
+   bodies/conditions multiply by ``backend_config.known_trip_count``,
+   fusions/calls/branches inherit the caller's multiplicity;
+3. FLOPs: ``dot`` = 2·|result|·K (K from ``lhs_contracting_dims``),
+   ``convolution`` = 2·|result|·|kernel|/out_channels, elementwise = |result|
+   (fusion internals traversed, since they execute per fusion call);
+4. HBM traffic: Σ over *top-level* instructions (fusion internals excluded —
+   they live in registers/VMEM) of unique-operand bytes + result bytes;
+5. collectives: operand/wire bytes × multiplicity, grouped by kind.
+
+The result is the profile the perf loop iterates on (the brief's
+"your profile is ``lowered.as_text()`` + ``cost_analysis()``").
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# ops that move no HBM bytes at the top level
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "while",
+             "conditional", "call", "custom-call", "domain", "token",
+             "opt-barrier"}
+
+# 1-flop-per-element arithmetic (XLA-style); transcendentals included
+_EW_OPS = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+           "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "negate",
+           "abs", "cosine", "sine", "logistic", "remainder", "atan2",
+           "exponential-minus-one", "log-plus-one", "cbrt", "erf"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+# computation header: "%name (params) -> type {" — params may nest parens
+# (tuple-typed args), so anchor on the trailing "-> ... {" instead
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-~!]+)\s+\(.*->.*\{\s*$")
+_NAME_RE = re.compile(r"%[\w.\-~!]+")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+
+
+def _parse_shapes(text: str):
+    """All dtype[dims] literals -> list of (dtype, [dims])."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shapes_bytes(shapes) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems(shapes) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list          # [(dtype, dims), ...]
+    operand_names: list
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shapes_bytes(self.result_shapes)
+
+    @property
+    def result_elems(self) -> int:
+        return _elems(self.result_shapes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict                  # name -> Instr
+    order: list                   # instruction names in text order
+
+    @property
+    def root(self) -> Optional["Instr"]:
+        for iname in reversed(self.order):
+            if "ROOT " in self.instrs[iname].line:
+                return self.instrs[iname]
+        return self.instrs[self.order[-1]] if self.order else None
+
+
+def parse_module(hlo: str) -> tuple[dict, str]:
+    """-> ({computation name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cname, instrs, order = None, {}, []
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            if cname is not None:
+                comps[cname] = Computation(cname, instrs, order)
+            cname, instrs, order = m.group(2).lstrip("%"), {}, []
+            if m.group(1):
+                entry = cname
+            continue
+        if cname is None:
+            continue
+        if line.strip() == "}":
+            comps[cname] = Computation(cname, instrs, order)
+            cname, instrs, order = None, {}, []
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        # result type: leading shape literal(s); tuple results start with '('
+        if rhs.startswith("("):
+            head = rhs[:rhs.index(")") + 1]
+            rest = rhs[len(head):].lstrip()
+        else:
+            head, _, rest = rhs.partition(" ")
+        om = _OPCODE_RE.match(rest)
+        opcode = om.group(1) if om else rest.split("(")[0].strip()
+        # operand names: inside the first balanced parens after the opcode
+        paren = rest.find("(")
+        names = []
+        if paren >= 0:
+            depth, end = 0, len(rest)
+            for i in range(paren, len(rest)):
+                depth += (rest[i] == "(") - (rest[i] == ")")
+                if depth == 0:
+                    end = i
+                    break
+            names = _NAME_RE.findall(rest[paren:end + 1])
+        instrs[name] = Instr(name, opcode, _parse_shapes(head), names, line)
+        order.append(name)
+    if cname is not None:
+        comps[cname] = Computation(cname, instrs, order)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+_CALL_ATTRS = (("calls", True), ("body", False), ("condition", False),
+               ("to_apply", True), ("branch_computations", True))
+
+
+def _callees(line: str):
+    """[(callee_name, is_plain_call)]; whiles return (body/cond, False)."""
+    out = []
+    for attr, plain in _CALL_ATTRS:
+        for m in re.finditer(attr + r"=(\{[^}]*\}|%?[\w.\-~!]+)", line):
+            val = m.group(1)
+            names = (_NAME_RE.findall(val) if val.startswith("{")
+                     else [val if val.startswith("%") else "%" + val])
+            for n in names:
+                out.append((n.lstrip("%"), plain))
+    return out
+
+
+def _multiplicities(comps: dict, entry: str) -> dict:
+    """Execution count per computation: topological propagation over the
+    call-graph DAG (edges weighted by while trip counts)."""
+    edges: dict[str, list] = defaultdict(list)   # caller -> [(callee, w)]
+    indeg: dict[str, int] = defaultdict(int)
+    for cname, comp in comps.items():
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            trip = 1
+            if ins.opcode == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+            for callee, plain in _callees(ins.line):
+                if callee in comps:
+                    edges[cname].append((callee, 1 if plain else trip))
+                    indeg[callee] += 1
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # Kahn's algorithm from roots (entry has indegree 0 in valid HLO)
+    queue = [c for c in comps if indeg[c] == 0]
+    while queue:
+        cname = queue.pop()
+        for callee, w in edges.get(cname, ()):  # propagate then release
+            mult[callee] += mult[cname] * w
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+    return mult
+
+
+def _fusion_callees(comps: dict) -> set:
+    """Computations reached only via fusion `calls=` (register-level)."""
+    fused = set()
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.opcode == "fusion":
+                for callee, _ in _callees(ins.line):
+                    fused.add(callee)
+    return fused
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> int:
+    k = 1
+    m = _LHS_CONTRACT_RE.search(ins.line)
+    lhs = comp.instrs.get(ins.operand_names[0]) if ins.operand_names else None
+    if m and lhs is not None and lhs.result_shapes:
+        dims = lhs.result_shapes[0][1]
+        for di in (int(x) for x in m.group(1).split(",") if x):
+            if di < len(dims):
+                k *= dims[di]
+    elif lhs is not None and lhs.result_shapes:
+        dims = lhs.result_shapes[0][1]
+        k = dims[-1] if dims else 1
+    return 2 * ins.result_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> int:
+    if len(ins.operand_names) < 2:
+        return 2 * ins.result_elems
+    ker = comp.instrs.get(ins.operand_names[1])
+    if ker is None or not ker.result_shapes:
+        return 2 * ins.result_elems
+    kdims = ker.result_shapes[0][1]
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    out_ch = kdims[-1] if kdims else 1
+    m = _DIMLABELS_RE.search(ins.line)
+    if m:
+        klabels = m.group(2)
+        oi = klabels.find("o")
+        if 0 <= oi < len(kdims):
+            out_ch = kdims[oi]
+    return 2 * ins.result_elems * (kelems // max(out_ch, 1))
+
+
+def _dus_update_bytes(ins: Instr, comp: Computation) -> int:
+    """dynamic-update-slice runs in place: traffic = read+write of the
+    update slice, not of the whole buffer."""
+    if len(ins.operand_names) >= 2:
+        upd = comp.instrs.get(ins.operand_names[1])
+        if upd is not None:
+            return 2 * upd.result_bytes
+    return 2 * ins.result_bytes
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_sub(ins: Instr, comps: dict) -> Optional[Computation]:
+    for callee, _ in _callees(ins.line):
+        sub = comps.get(callee)
+        if sub is not None:
+            return sub
+    return None
+
+
+_PLUMBING = ("bitcast", "copy", "convert")
+# "convert" counts as plumbing: XLA-CPU's bf16 legalisation wraps in-place
+# DUS updates in full-buffer f32<->bf16 round trips that the TPU backend
+# (native bf16) never materialises.
+
+
+def _unwrap(sub: Computation, name: str, steps: int = 4):
+    """Follow bitcast/copy/convert chains to the underlying instr."""
+    for _ in range(steps):
+        src = sub.instrs.get(name)
+        if src is None:
+            return None
+        if src.opcode in _PLUMBING and src.operand_names:
+            name = src.operand_names[0]
+            continue
+        return src
+    return sub.instrs.get(name)
+
+
+def _dus_roots(sub: Computation) -> list:
+    """The effective dynamic-update-slice root(s) of a fused computation
+    (unwrapped through plumbing; [] if the fusion is not an in-place DUS)."""
+    root = sub.root
+    if root is None:
+        return []
+    cands = ([sub.instrs.get(n) for n in root.operand_names]
+             if root.opcode == "tuple" else [root])
+    out = []
+    for c in cands:
+        if c is None:
+            return []
+        if c.opcode in _PLUMBING:
+            c = _unwrap(sub, c.name)
+        if c is None or c.opcode != "dynamic-update-slice":
+            return []
+        out.append(c)
+    return out
+
+
+def _dus_buffer_params(sub: Computation) -> set:
+    """Names of fused-computation parameters that are only the *updated
+    buffer* of a dynamic-update-slice (aliased in place — not read)."""
+    out = set()
+    for r in _dus_roots(sub):
+        if not r.operand_names:
+            continue
+        src = _unwrap(sub, r.operand_names[0])
+        if src is not None and src.opcode == "parameter":
+            out.add(src.name)
+    return out
+
+
+def _fusion_operand_bytes(ins: Instr, comp: Computation,
+                          sub: Computation) -> int:
+    """Bytes *read* by a fusion: a parameter consumed only through
+    dynamic-slice / gather ops inside the fused computation reads the
+    slices, not the whole array (scan bodies read one layer's slice of
+    each stacked tensor per iteration); a parameter that is only the
+    in-place-updated buffer of a DUS is not read at all."""
+    # parameter index -> instr name in the fused computation
+    pname = {}
+    for iname in sub.order:
+        m = _PARAM_IDX_RE.search(sub.instrs[iname].line)
+        if m:
+            pname[int(m.group(1))] = iname
+    # uses of each instruction inside the fusion
+    uses: dict[str, list] = defaultdict(list)
+    for iname in sub.order:
+        for on in sub.instrs[iname].operand_names:
+            uses[on].append(sub.instrs[iname])
+    dus_bufs = _dus_buffer_params(sub)
+    total, seen = 0, set()
+    for idx, opname in enumerate(ins.operand_names):
+        if opname in seen:
+            continue
+        seen.add(opname)
+        src = comp.instrs.get(opname)
+        if src is None or src.opcode == "constant":
+            continue
+        full = src.result_bytes
+        pi = pname.get(idx)
+        if pi is not None:
+            if pi in dus_bufs:
+                continue                      # aliased buffer, not a read
+            us = uses.get(pi, ())
+            if us and all(u.opcode in ("dynamic-slice", "gather")
+                          for u in us):
+                full = min(full, sum(u.result_bytes for u in us))
+        total += full
+    return total
+
+
+# operands at or below this size that are loop parameters / carried tuple
+# elements are assumed VMEM-resident across iterations (charged once, not
+# per trip) — e.g. the sLSTM recurrent matrices re-read every timestep
+_VMEM_RESIDENT = 16 << 20
+
+
+def _resident_operand_bytes(ins: Instr, comp: Computation) -> int:
+    """Bytes of small parameter/GTE operands (VMEM-resident in loops)."""
+    out = 0
+    for on in dict.fromkeys(ins.operand_names):
+        src = comp.instrs.get(on)
+        if (src is not None
+                and src.opcode in ("parameter", "get-tuple-element")
+                and src.result_bytes <= _VMEM_RESIDENT):
+            out += src.result_bytes
+    return out
+
+
+def _instr_traffic(ins: Instr, comp: Computation,
+                   comps: dict) -> tuple[int, int]:
+    """-> (per-execution bytes, loop-resident bytes) of one top-level
+    instruction. Resident bytes are charged once regardless of trip
+    count (fusion-aware; in-place DUS; slice-reads)."""
+    op = ins.opcode
+    if op == "dynamic-update-slice":
+        return _dus_update_bytes(ins, comp), 0
+    if op == "dynamic-slice":
+        return 2 * ins.result_bytes, 0
+    if op == "fusion":
+        sub = _fusion_sub(ins, comps)
+        if sub is not None:
+            reads = _fusion_operand_bytes(ins, comp, sub)
+            res = min(_resident_operand_bytes(ins, comp), reads)
+            reads -= res
+            dus = _dus_roots(sub)
+            if dus:  # in-place: write only the updated slice(s)
+                writes = sum(_dus_update_bytes(r, sub) // 2 for r in dus)
+                return reads + writes, res
+            return reads + ins.result_bytes, res
+    ob = 0
+    for on in dict.fromkeys(ins.operand_names):
+        src = comp.instrs.get(on)
+        if src is not None and src.opcode not in ("constant",):
+            ob += src.result_bytes
+    res = min(_resident_operand_bytes(ins, comp), ob)
+    return ob - res + ins.result_bytes, res
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    operand_bytes: int     # per-device shard bytes, × multiplicity NOT applied
+    result_bytes: int
+    group_size: int
+    computation: str
+    mult: float = 1.0
+
+    @property
+    def wire_bytes(self) -> int:
+        """Ring-algorithm per-device traffic estimate (one occurrence)."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0
+        b = self.operand_bytes
+        if self.kind == "all-gather":
+            return b * (n - 1)
+        if self.kind == "all-reduce":
+            return int(2 * b * (n - 1) / n)
+        if self.kind in ("reduce-scatter", "all-to-all"):
+            return int(b * (n - 1) / n)
+        return b  # collective-permute
+
+
+@dataclasses.dataclass
+class HLOProfile:
+    flops: float                # scan-aware total (incl. elementwise)
+    mxu_flops: float            # dot+conv only
+    traffic_bytes: float        # fusion-aware HBM traffic estimate
+    operand_bytes: float        # Σ collective operand sizes (brief's term)
+    wire_bytes: float           # ring-estimate collective traffic
+    by_kind: dict               # kind -> [count, operand_bytes, wire_bytes]
+    collectives: list
+    trip_counts: dict           # computation -> multiplicity (whiles only)
+    # XLA *CPU* has no native bf16 matmul: it materialises fp32 upcasts of
+    # bf16 weights/caches (and fp32 shadows of bf16 while-carries). The TPU
+    # MXU consumes bf16 directly, so these buffers/moves do not exist on
+    # the target. Quantified here so memory numbers can be TPU-adjusted.
+    cpu_upcast_bytes: float = 0.0      # one-time buffer bytes (liveness)
+    cpu_upcast_traffic: float = 0.0    # multiplicity-weighted R+W bytes
+
+    def summary(self) -> str:
+        rows = [f"  {k:<19} n={int(c):<6} operand={ob / 1e6:10.2f}MB "
+                f"wire={wb / 1e6:10.2f}MB"
+                for k, (c, ob, wb) in sorted(self.by_kind.items())]
+        return "\n".join(rows) if rows else "  (no collectives)"
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))   # iota groups [G,S]: G groups of S devices
+    return n_devices
+
+
+def profile_module(hlo: str, n_devices: int = 1) -> HLOProfile:
+    comps, entry = parse_module(hlo)
+    mult = _multiplicities(comps, entry)
+    fused = _fusion_callees(comps)
+
+    flops = mxu = traffic = 0.0
+    upcast_b = upcast_t = 0.0
+    colls: list[Collective] = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        top_level = cname not in fused
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.opcode
+            # ---- CPU bf16->f32 upcast artifacts (absent on TPU) ----
+            # only *stored* tensors (weights, loop-carried caches) count:
+            # semantic upcasts (fp32 grad accumulation etc.) are model-
+            # requested and exist on TPU too — those operands are compute
+            # outputs, not parameters/carries. Converts may be bare or
+            # wrapped in a kLoop fusion (convert_fusion).
+            if (top_level and ins.result_shapes
+                    and ins.result_shapes[0][0] == "f32"
+                    and ins.result_bytes >= 1 << 20
+                    and op in ("convert", "fusion", "copy")):
+                conv = ins if op == "convert" else None
+                sub = None
+                if op == "fusion":
+                    for callee, _ in _callees(ins.line):
+                        sub = comps.get(callee)
+                        break
+                    root = sub.root if sub is not None else None
+                    if root is not None and root.opcode == "convert":
+                        conv = root
+                if conv is not None and conv.operand_names:
+                    host = sub if (op == "fusion" and sub) else comp
+                    src = host.instrs.get(conv.operand_names[0])
+                    if (src is not None and src.result_shapes
+                            and src.result_shapes[0][0] == "bf16"
+                            and src.opcode in ("parameter",
+                                               "get-tuple-element",
+                                               "copy", "bitcast")):
+                        upcast_b += ins.result_bytes
+                        upcast_t += m * (ins.result_bytes
+                                         + ins.result_bytes // 2)
+            # ---- flops (fusion internals execute; count everywhere) ----
+            if op == "dot":
+                f = _dot_flops(ins, comp)
+                flops += m * f
+                mxu += m * f
+            elif op == "convolution":
+                f = _conv_flops(ins, comp)
+                flops += m * f
+                mxu += m * f
+            elif op in _EW_OPS:
+                flops += m * ins.result_elems
+            # ---- HBM traffic (top-level ops only) ----
+            if top_level and op not in _FREE_OPS:
+                per_exec, resident = _instr_traffic(ins, comp, comps)
+                traffic += m * per_exec + resident
+            # ---- collectives ----
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_OPS and not op.endswith("-done"):
+                opb = sum(comp.instrs[on].result_bytes
+                          for on in ins.operand_names
+                          if on in comp.instrs)
+                if opb == 0:
+                    opb = _shapes_bytes(_parse_shapes(
+                        ins.line.split(op + "(", 1)[-1]))
+                colls.append(Collective(base, opb, ins.result_bytes,
+                                        _group_size(ins.line, n_devices),
+                                        cname, m))
+
+    by_kind: dict[str, list] = defaultdict(lambda: [0, 0, 0])
+    tot_ob = tot_wb = 0.0
+    for c in colls:
+        e = by_kind[c.kind]
+        e[0] += c.mult
+        e[1] += c.operand_bytes * c.mult
+        e[2] += c.wire_bytes * c.mult
+        tot_ob += c.operand_bytes * c.mult
+        tot_wb += c.wire_bytes * c.mult
+
+    trips = {c: m for c, m in mult.items() if m > 1}
+    return HLOProfile(flops, mxu, traffic, tot_ob, tot_wb,
+                      {k: tuple(v) for k, v in by_kind.items()},
+                      colls, trips, upcast_b, upcast_t)
+
+
+# ---------------------------------------------------------------------------
+# compatibility shim (older callers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CollectiveStats:
+    collectives: list
+    operand_bytes: int
+    wire_bytes: int
+    by_kind: dict
+
+    def summary(self) -> str:
+        rows = [f"  {k:<19} n={int(c):<6} operand={ob / 1e6:10.2f}MB "
+                f"wire={wb / 1e6:10.2f}MB"
+                for k, (c, ob, wb) in sorted(self.by_kind.items())]
+        return "\n".join(rows) if rows else "  (no collectives)"
+
+
+def parse_collectives(hlo: str, n_devices: int = 1) -> CollectiveStats:
+    p = profile_module(hlo, n_devices)
+    return CollectiveStats(p.collectives, int(p.operand_bytes),
+                           int(p.wire_bytes), p.by_kind)

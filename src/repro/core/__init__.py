@@ -1,0 +1,6 @@
+"""Core: the paper's primary contribution — prime OAC / multimodal
+clustering engines (batch, distributed, streaming, many-valued)."""
+from .multimodal import (BatchMiner, DistributedMiner, StreamingMiner,
+                         NOACMiner, MiningResult, DistributedResult,
+                         NOACResult, PolyadicContext, tricontext,
+                         from_named_triples, pad_tuples, make_miner)

@@ -1,0 +1,328 @@
+"""Distributed three-stage multimodal clustering (the paper's M/R algorithm
+mapped onto a TPU mesh with ``shard_map``; DESIGN.md §3).
+
+Tuples are block-partitioned (uniform by construction — this removes the
+paper's hash-skew problem) over one or more mesh axes. Two merge strategies,
+mirroring the centralise-vs-replicate discussion in the paper's §1:
+
+* ``replicate`` — all-gather the (small) tuple table over the data axes and
+  let every shard run the batch pipeline on the full table, keeping only its
+  own block's outputs. Communication: one all-gather of ``T×N`` int32; compute
+  is duplicated ×P. This is the paper's "data replication" choice, executed as
+  a log-depth ICI collective instead of HDFS replication-factor-3.
+
+* ``shuffle`` — the faithful M/R shuffle. Stage 1 routes each tuple's
+  ⟨subrelation, e_k⟩ record to the key's *owner shard* with a fixed-capacity
+  ``all_to_all`` (MoE-dispatch pattern); owners sort/segment/hash their key
+  ranges and answer with ⟨signature, cardinality⟩ per record (Stage 2 —
+  12 bytes instead of the paper's whole-cumulus shuffle). Stage 3 deduplicates
+  and counts generating tuples on 8-byte cluster signatures gathered over the
+  mesh. Skew shows up as capacity overflow and is *reported*, not silently
+  dropped (a reducer-OOM analogue).
+
+Both strategies return bit-identical signatures/densities to the single-shard
+``core.batch.mine`` (same hash vectors), which is what the tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import batch as B
+
+Axis = tuple[str, ...]
+
+
+@dataclasses.dataclass
+class DistributedResult:
+    """Global per-tuple outputs (sharded over the data axes)."""
+    sig_lo: jnp.ndarray
+    sig_hi: jnp.ndarray
+    is_unique: jnp.ndarray
+    gen_count: jnp.ndarray
+    volume: jnp.ndarray
+    density: jnp.ndarray
+    keep: jnp.ndarray
+    cardinalities: jnp.ndarray   # (N, T) distinct |cum_k| per tuple
+    n_clusters: jnp.ndarray      # scalar, replicated
+    overflow: jnp.ndarray        # scalar: dropped records (0 == exact)
+
+jax.tree_util.register_dataclass(
+    DistributedResult,
+    data_fields=["sig_lo", "sig_hi", "is_unique", "gen_count", "volume",
+                 "density", "keep", "cardinalities", "n_clusters", "overflow"],
+    meta_fields=[])
+
+
+def _hash_columns(cols: Sequence[jnp.ndarray], salt: int) -> jnp.ndarray:
+    """uint32 mix of int32 id columns (key → owner-shard hashing)."""
+    h = jnp.full(cols[0].shape, jnp.uint32(salt))
+    for c in cols:
+        h = (h ^ c.astype(jnp.uint32)) * jnp.uint32(0x9E3779B1)
+        h = h ^ (h >> 15)
+    return h
+
+
+def _global_sort_stage3(sig_lo, sig_hi, tuple_first, theta):
+    """Stage 3 on gathered signature arrays (identical on every shard)."""
+    t = sig_lo.shape[0]
+    order = B.lex_perm([sig_lo, sig_hi])
+    s_lo, s_hi = sig_lo[order], sig_hi[order]
+    cstart = B.segment_starts([s_lo, s_hi])
+    cseg = jnp.cumsum(cstart) - 1
+    gen = jax.ops.segment_sum(tuple_first[order].astype(jnp.int32), cseg,
+                              num_segments=t)
+    gen_of = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
+    pos = jnp.arange(t)
+    first_pos = jax.ops.segment_min(
+        jnp.where(tuple_first[order], pos, t), cseg, num_segments=t)
+    uniq_sorted = (pos == first_pos[cseg]) & tuple_first[order]
+    is_unique = jnp.zeros((t,), bool).at[order].set(uniq_sorted)
+    return gen_of, is_unique
+
+
+# ---------------------------------------------------------------------------
+# Shuffle strategy internals (per shard_map body)
+# ---------------------------------------------------------------------------
+
+def _dispatch(records: jnp.ndarray, owner: jnp.ndarray, n_shards: int,
+              capacity: int):
+    """Pack ``records`` (L, W) into a (n_shards*capacity, W) send buffer by
+    owner shard, plus validity mask, slot handle per record and overflow."""
+    l = records.shape[0]
+    # position of each record within its owner's group
+    order = jnp.argsort(owner, stable=True)
+    sorted_owner = owner[order]
+    pos_in_group = jnp.arange(l) - jnp.searchsorted(sorted_owner, sorted_owner,
+                                                    side="left")
+    rank = jnp.zeros((l,), jnp.int32).at[order].set(pos_in_group.astype(jnp.int32))
+    ok = rank < capacity
+    nslots = n_shards * capacity
+    # overflowed records go to a trash slot one past the end
+    slot_safe = jnp.where(ok, owner * capacity + rank, nslots)
+    buf = jnp.zeros((nslots + 1, records.shape[1]), records.dtype)
+    buf = buf.at[slot_safe].set(records)[:nslots]
+    valid = jnp.zeros((nslots + 1,), bool).at[slot_safe].set(ok)[:nslots]
+    overflow = (~ok).sum()
+    return buf, valid, slot_safe, ok, overflow
+
+
+def _owner_stage(recv: jnp.ndarray, rvalid: jnp.ndarray, n_other: int,
+                 r_lo: jnp.ndarray, r_hi: jnp.ndarray):
+    """Owner-side Reduce-1: segment received ⟨key, e⟩ records, compute per-
+    record (set-signature, distinct cardinality, tuple-first flag)."""
+    big = jnp.int32(np.iinfo(np.int32).max)
+    key_cols = [jnp.where(rvalid, recv[:, j], big) for j in range(n_other)]
+    e_col = jnp.where(rvalid, recv[:, n_other], big)
+    l = recv.shape[0]
+    perm = B.lex_perm(key_cols + [e_col])
+    s_keys = [c[perm] for c in key_cols]
+    s_e = e_col[perm]
+    s_valid = rvalid[perm]
+    seg_flag = B.segment_starts(s_keys)
+    seg = jnp.cumsum(seg_flag) - 1
+    first_occ = B.segment_starts(s_keys + [s_e]) & s_valid
+    e_safe = jnp.where(s_valid, s_e, 0)
+    w_lo = jnp.where(first_occ, r_lo[e_safe], jnp.uint32(0))
+    w_hi = jnp.where(first_occ, r_hi[e_safe], jnp.uint32(0))
+    sig_lo = jax.ops.segment_sum(w_lo, seg, num_segments=l)
+    sig_hi = jax.ops.segment_sum(w_hi, seg, num_segments=l)
+    distinct = jax.ops.segment_sum(first_occ.astype(jnp.int32), seg,
+                                   num_segments=l)
+    # per-received-record responses, back in recv-slot order
+    inv = jnp.zeros((l,), jnp.int32).at[perm].set(jnp.arange(l, dtype=jnp.int32))
+    return (sig_lo[seg][inv], sig_hi[seg][inv], distinct[seg][inv],
+            first_occ[inv])
+
+
+def _shuffle_mode(tuples, k, axes, n_shards, capacity, r_lo, r_hi):
+    """Stages 1+2 of the M/R algorithm for one mode over ``axes``."""
+    n = tuples.shape[1]
+    others = [tuples[:, j] for j in range(n) if j != k]
+    owner = (_hash_columns(others, 0xA11CE + k) %
+             jnp.uint32(n_shards)).astype(jnp.int32)
+    gidx = jnp.arange(tuples.shape[0], dtype=jnp.int32)
+    records = jnp.stack(others + [tuples[:, k], gidx], axis=1)
+    buf, valid, slot, ok, overflow = _dispatch(records, owner, n_shards,
+                                               capacity)
+    recv = jax.lax.all_to_all(buf, axes, 0, 0, tiled=True)
+    rvalid = jax.lax.all_to_all(valid.astype(jnp.int32), axes, 0, 0,
+                                tiled=True).astype(bool)
+    sig_lo, sig_hi, card, tfirst = _owner_stage(recv, rvalid, n - 1,
+                                                r_lo, r_hi)
+    resp = jnp.stack([sig_lo, sig_hi, card.astype(jnp.uint32),
+                      tfirst.astype(jnp.uint32)], axis=1)
+    resp = jax.lax.all_to_all(resp, axes, 0, 0, tiled=True)
+    got = resp[slot]   # (L, 4) in original record order (garbage if !ok)
+    return (got[:, 0], got[:, 1], got[:, 2].astype(jnp.int32),
+            got[:, 3].astype(bool), ok, overflow)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class DistributedMiner:
+    """Multi-device multimodal clustering over a mesh.
+
+    Args:
+      sizes: mode cardinalities.
+      mesh: jax Mesh containing ``axes``.
+      axes: data-parallel mesh axis name(s) the tuple table is sharded over.
+      theta: minimal density threshold (paper Alg. 7 θ).
+      strategy: 'replicate' | 'shuffle'.
+      capacity_factor: shuffle per-destination buffer slack (≥1).
+    """
+
+    def __init__(self, sizes: Sequence[int], mesh, axes="data",
+                 theta: float = 0.0, strategy: str = "replicate",
+                 capacity_factor: float = 2.0, seed: int = 0x5EED,
+                 max_retries: int = 4):
+        self.sizes = tuple(int(s) for s in sizes)
+        self.mesh = mesh
+        self.axes: Axis = (axes,) if isinstance(axes, str) else tuple(axes)
+        self.theta = float(theta)
+        self.strategy = strategy
+        self.capacity_factor = float(capacity_factor)
+        self.max_retries = int(max_retries)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
+        vecs = B.mode_hash_vectors(self.sizes, seed)
+        self._lo = [jnp.asarray(lo) for lo, _ in vecs]
+        self._hi = [jnp.asarray(hi) for _, hi in vecs]
+        if strategy not in ("replicate", "shuffle"):
+            raise ValueError(strategy)
+        self._fn = None
+        self._t_global = None
+
+    # -- shard bodies -------------------------------------------------------
+
+    def _body_replicate(self, tuples, lo, hi):
+        axes = self.axes
+        full = jax.lax.all_gather(tuples, axes, tiled=True)
+        res = B.mine(full, lo, hi, theta=self.theta)
+        # keep this shard's block
+        shard_id = jax.lax.axis_index(axes)
+        tl = tuples.shape[0]
+        sl = jax.lax.dynamic_slice_in_dim
+        start = shard_id * tl
+        card = jnp.stack([m.seg_distinct[m.seg_of_tuple] for m in res.modes])
+        out = DistributedResult(
+            sig_lo=sl(res.sig_lo, start, tl),
+            sig_hi=sl(res.sig_hi, start, tl),
+            is_unique=sl(res.is_unique, start, tl),
+            gen_count=sl(res.gen_count, start, tl),
+            volume=sl(res.volume, start, tl),
+            density=sl(res.density, start, tl),
+            keep=sl(res.keep, start, tl),
+            cardinalities=sl(card, start, tl, axis=1),
+            n_clusters=res.is_unique.sum(),
+            overflow=jnp.int32(0))
+        return out
+
+    def _body_shuffle(self, tuples, lo, hi):
+        axes, nsh = self.axes, self.n_shards
+        tl, n = tuples.shape
+        capacity = max(1, int(np.ceil(tl / nsh * self.capacity_factor)))
+        per_lo, per_hi, cards = [], [], []
+        overflow = jnp.int32(0)
+        tuple_first = None
+        ok_all = jnp.ones((tl,), bool)
+        for k in range(n):
+            slo, shi, card, tfirst, ok, ovf = _shuffle_mode(
+                tuples, k, axes, nsh, capacity, lo[k], hi[k])
+            per_lo.append(slo)
+            per_hi.append(shi)
+            cards.append(card)
+            overflow = overflow + ovf.astype(jnp.int32)
+            ok_all = ok_all & ok
+            if k == 0:
+                tuple_first = tfirst
+        sig_lo, sig_hi = B._mix_signatures(per_lo, per_hi)
+        volume = jnp.ones((tl,), jnp.float32)
+        for c in cards:
+            volume = volume * c.astype(jnp.float32)
+        # Stage 3 on gathered signatures (12 bytes/tuple on the wire).
+        g_lo = jax.lax.all_gather(sig_lo, axes, tiled=True)
+        g_hi = jax.lax.all_gather(sig_hi, axes, tiled=True)
+        g_tf = jax.lax.all_gather(tuple_first, axes, tiled=True)
+        gen_of, is_unique = _global_sort_stage3(g_lo, g_hi, g_tf, self.theta)
+        shard_id = jax.lax.axis_index(axes)
+        sl = jax.lax.dynamic_slice_in_dim
+        start = shard_id * tl
+        gen_l = sl(gen_of, start, tl)
+        uniq_l = sl(is_unique, start, tl)
+        density = gen_l.astype(jnp.float32) / jnp.maximum(volume, 1.0)
+        keep = uniq_l & (density >= jnp.float32(self.theta))
+        overflow = jax.lax.psum(overflow, axes)
+        return DistributedResult(
+            sig_lo=sig_lo, sig_hi=sig_hi, is_unique=uniq_l, gen_count=gen_l,
+            volume=volume, density=density, keep=keep,
+            cardinalities=jnp.stack(cards), n_clusters=is_unique.sum(),
+            overflow=overflow)
+
+    # -- public -------------------------------------------------------------
+
+    def _build(self, t_global: int):
+        body = (self._body_replicate if self.strategy == "replicate"
+                else self._body_shuffle)
+        data_spec = P(self.axes)
+        card_spec = P(None, self.axes)
+        out_specs = DistributedResult(
+            sig_lo=data_spec, sig_hi=data_spec, is_unique=data_spec,
+            gen_count=data_spec, volume=data_spec, density=data_spec,
+            keep=data_spec, cardinalities=card_spec, n_clusters=P(),
+            overflow=P())
+        fn = jax.shard_map(body, mesh=self.mesh,
+                           in_specs=(P(self.axes, None), P(), P()),
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(fn)
+
+    def lowered(self, tuples):
+        """Lower (no execution) for dry-run / roofline analysis of the
+        mining pipeline itself — same artifact path as the LM cells."""
+        tuples = jnp.asarray(tuples, jnp.int32)
+        fn = self._build(tuples.shape[0])
+        structs = (jax.ShapeDtypeStruct(tuples.shape, jnp.int32),
+                   [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._lo],
+                   [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._hi])
+        with self.mesh:
+            return fn.lower(*structs)
+
+    def __call__(self, tuples) -> DistributedResult:
+        """Run the pipeline. On shuffle-capacity overflow (the M/R skew
+        failure mode the paper's §1 warns about) the capacity factor is
+        doubled and the job re-executed — the analogue of Hadoop re-running
+        a failed reducer with more memory."""
+        tuples = jnp.asarray(tuples, jnp.int32)
+        t = tuples.shape[0]
+        if t % self.n_shards:
+            raise ValueError(
+                f"tuple count {t} not divisible by shard count "
+                f"{self.n_shards}; pad with duplicated rows (idempotent)")
+        if self._fn is None or self._t_global != t:
+            self._fn = self._build(t)
+            self._t_global = t
+        res = self._fn(tuples, self._lo, self._hi)
+        for _ in range(self.max_retries):
+            if self.strategy != "shuffle" or int(res.overflow) == 0:
+                break
+            self.capacity_factor *= 2.0
+            self._fn = self._build(t)
+            res = self._fn(tuples, self._lo, self._hi)
+        return res
+
+
+def pad_tuples(tuples: np.ndarray, multiple: int) -> np.ndarray:
+    """Pad the tuple table to a multiple by repeating the first row — the
+    mining algebra is duplicate-idempotent (paper §5.1 / K3 argument)."""
+    t = tuples.shape[0]
+    pad = (-t) % multiple
+    if pad == 0:
+        return tuples
+    return np.concatenate([tuples, np.repeat(tuples[:1], pad, 0)], 0)

@@ -1,0 +1,47 @@
+"""Public API: multimodal (N-ary) OAC clustering with selectable backend.
+
+Mirrors the paper's naming: the three M/R stages of §4.1 correspond to
+
+  Stage 1 (Alg. 2+3)  -> per-mode sort/segment + set hashing
+  Stage 2 (Alg. 4+5)  -> gather cumuli back to generating tuples
+  Stage 3 (Alg. 6+7)  -> signature dedup + density (θ) filtering
+
+Backends: ``batch`` (single shard), ``distributed`` (shard_map mesh,
+'replicate' or 'shuffle' merge strategy), ``streaming`` (online ingestion).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from .batch import BatchMiner, MiningResult
+from .context import PolyadicContext, from_named_triples, tricontext
+from .distributed import DistributedMiner, DistributedResult, pad_tuples
+from .manyvalued import NOACMiner, NOACResult
+from .streaming import StreamingMiner
+
+__all__ = [
+    "BatchMiner", "DistributedMiner", "StreamingMiner", "NOACMiner",
+    "MiningResult", "DistributedResult", "NOACResult",
+    "PolyadicContext", "tricontext", "from_named_triples", "pad_tuples",
+    "make_miner",
+]
+
+
+def make_miner(sizes: Sequence[int], backend: str = "batch",
+               theta: float = 0.0, mesh=None, axes="data",
+               strategy: str = "replicate", delta: Optional[float] = None,
+               rho_min: float = 0.0, minsup: int = 0, **kw):
+    """Factory selecting the backend (the paper's algorithm variants)."""
+    if delta is not None:
+        return NOACMiner(sizes, delta=delta, rho_min=rho_min, minsup=minsup,
+                         **kw)
+    if backend == "batch":
+        return BatchMiner(sizes, theta=theta, **kw)
+    if backend == "streaming":
+        return StreamingMiner(sizes, theta=theta, **kw)
+    if backend == "distributed":
+        if mesh is None:
+            raise ValueError("distributed backend needs a mesh")
+        return DistributedMiner(sizes, mesh, axes=axes, theta=theta,
+                                strategy=strategy, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

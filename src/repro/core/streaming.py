@@ -1,0 +1,77 @@
+"""Online / streaming multimodal clustering (paper §2 online setting).
+
+The paper's online Algorithm 1 keeps dictionaries and appends pointers per
+incoming triple. The accelerator analogue here is *amortised batch
+re-mining*: a capacity-doubling device buffer accumulates tuples; after
+each ingested chunk the current tricluster set is available via
+``snapshot()`` which runs the one-pass batch pipeline over the (padded)
+buffer. Padding repeats the first row — the mining algebra is
+duplicate-idempotent (DESIGN.md §3), so snapshots are exact at any point.
+
+Properties kept from the paper's online algorithm:
+* one pass over the data (each tuple enters the buffer once),
+* per-chunk latency O(|buffer| log |buffer|) with O(log T) total
+  recompilations (power-of-two buckets),
+* checkpointable: the state is two numpy-convertible arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .batch import BatchMiner, MiningResult
+
+
+@dataclasses.dataclass
+class StreamState:
+    buffer: np.ndarray    # (capacity, N) int32; rows >= count are padding
+    count: int
+
+    def checkpoint(self) -> dict:
+        return {"buffer": self.buffer[:self.count].copy(),
+                "count": self.count}
+
+    @staticmethod
+    def restore(blob: dict) -> "StreamState":
+        buf = np.asarray(blob["buffer"], np.int32)
+        return StreamState(buf, int(blob["count"]))
+
+
+class StreamingMiner:
+    """Online one-pass mining with snapshot-on-demand semantics."""
+
+    def __init__(self, sizes, theta: float = 0.0, seed: int = 0x5EED):
+        self.sizes = tuple(int(s) for s in sizes)
+        self.miner = BatchMiner(self.sizes, theta=theta, seed=seed)
+        self.state: Optional[StreamState] = None
+
+    def add(self, chunk: np.ndarray) -> None:
+        chunk = np.asarray(chunk, np.int32)
+        if self.state is None:
+            self.state = StreamState(chunk.copy(), chunk.shape[0])
+        else:
+            self.state = StreamState(
+                np.concatenate([self.state.buffer[:self.state.count], chunk]),
+                self.state.count + chunk.shape[0])
+
+    def _padded(self) -> np.ndarray:
+        buf, count = self.state.buffer[:self.state.count], self.state.count
+        cap = 1 << max(0, int(np.ceil(np.log2(max(count, 1)))))
+        if cap < count:
+            cap *= 2
+        pad = cap - count
+        if pad:
+            buf = np.concatenate([buf, np.repeat(buf[:1], pad, 0)])
+        return buf
+
+    def snapshot(self) -> MiningResult:
+        """Current tricluster set (exact; padding is idempotent)."""
+        if self.state is None or self.state.count == 0:
+            raise ValueError("no data ingested")
+        return self.miner(self._padded())
+
+    def snapshot_clusters(self, only_kept: bool = True):
+        buf = self._padded()
+        return self.miner.materialise(self.snapshot(), buf, only_kept)

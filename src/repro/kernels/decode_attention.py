@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: single-token (q_len = 1) GQA decode attention.
+
+The decode hot path: one query row against a long KV cache. The grid
+streams KV blocks (split-KV) with online-softmax partial statistics in
+VMEM; sliding windows and padded caches are handled by position masks.
+The ops.py wrapper folds (batch, heads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, window: Optional[int], kv_len: int,
+            bk: int, nk: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ik * bk
+    qpos = kv_len - 1
+    relevant = k_start <= qpos
+    if window is not None:
+        relevant &= k_start + bk - 1 > qpos - window
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     group: int, window: Optional[int] = None,
+                     kv_len: Optional[int] = None,
+                     scale: Optional[float] = None, bk: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q (BHq, 1, D); k, v (BHkv, Skv, D) -> (BHq, 1, D)."""
+    bhq, one, d = q.shape
+    bhkv, skv, _ = k.shape
+    assert one == 1 and bhq == bhkv * group
+    if kv_len is None:
+        kv_len = skv
+    if scale is None:
+        scale = d ** -0.5
+    assert skv % bk == 0, (skv, bk)
+    nk = skv // bk
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               kv_len=kv_len, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda h, ik: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, ik, g=group: (h // g, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, ik, g=group: (h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, ik: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, 1, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused causal/sliding-window GQA flash attention (fwd).
+
+IO-aware attention for the LM substrate's train/prefill hot path: online
+softmax over KV blocks with fp32 running (m, l, acc) statistics in VMEM,
+one (bq × d) output tile per query block. GQA is handled by the k/v block
+index map (query head h reads kv head h // group). Sliding windows skip
+KV blocks wholly outside the band.
+
+Layout: q (BH, Sq, D), k/v (BHkv, Skv, D) — the ops.py wrapper folds
+(batch, heads) and restores them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            q_offset: int, kv_len: int, bq: int, bk: int, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    iq = pl.program_id(1)
+    q_start = iq * bq + q_offset          # global position of first q row
+    k_start = ik * bk
+
+    # block-level relevance: any (qpos, kpos) pair inside the mask?
+    relevant = k_start < kv_len
+    if causal:
+        relevant &= k_start <= q_start + bq - 1
+    if window is not None:
+        relevant &= k_start + bk - 1 > q_start - window
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                 # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    group: int, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_offset: Optional[int] = None,
+                    kv_len: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (BHq, Sq, D); k, v (BHkv, Skv, D); BHq == BHkv * group.
+
+    ``kv_len`` masks out padded keys beyond the true length; ``q_offset``
+    is the global position of q row 0 (defaults to kv_len - Sq)."""
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    assert bhq == bhkv * group
+    if kv_len is None:
+        kv_len = skv
+    if q_offset is None:
+        q_offset = kv_len - sq
+    if scale is None:
+        scale = d ** -0.5
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nk = skv // bk
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, kv_len=kv_len, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, iq, ik, g=group: (h // g, ik, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, iq, ik, g=group: (h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

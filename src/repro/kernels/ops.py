@@ -1,0 +1,170 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+Every public op here has the same calling convention as a plain jnp
+function, chooses interpret-mode automatically off-TPU (so tests and the
+CPU container execute the *kernel body*), pads ragged inputs up to the
+kernel's block grid, and exposes ``use_pallas=False`` fall-through to the
+pure-jnp oracle in ref.py. The model layers call these ops; with
+``use_pallas=False`` (default in configs) the dry-run sees real XLA FLOPs
+(custom-call kernels are opaque to ``cost_analysis`` — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .decode_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .rmsnorm import rmsnorm as _rmsnorm_kernel
+from .signature import signature as _signature_kernel
+from .tricluster_density import tricluster_density as _density_kernel
+
+
+@functools.lru_cache(None)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return not on_tpu() if flag is None else flag
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    use_pallas: bool = True,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Batched GQA attention. q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D)."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset, scale=scale)
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    kv_len = skv
+    if q_offset is None:
+        q_offset = skv - sq
+    bq_ = min(bq, max(8, sq))
+    qp = _pad_to(q.reshape(b * hq, sq, d), 1, bq_)
+    kp = _pad_to(k.reshape(b * hkv, skv, d), 1, bk)
+    vp = _pad_to(v.reshape(b * hkv, skv, d), 1, bk)
+    out = _flash_kernel(qp, kp, vp, group=group, causal=causal,
+                        window=window, q_offset=q_offset, kv_len=kv_len,
+                        scale=scale, bq=bq_, bk=bk,
+                        interpret=_interpret(interpret))
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     kv_len: Optional[int] = None,
+                     scale: Optional[float] = None, bk: int = 512,
+                     use_pallas: bool = True,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Single-token decode. q (B, Hq, D); k, v (B, Hkv, S, D)."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, window=window,
+                                        kv_len=kv_len, scale=scale)
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    if kv_len is None:
+        kv_len = s
+    bk_ = min(bk, s)
+    kp = _pad_to(k.reshape(b * hkv, s, d), 1, bk_)
+    vp = _pad_to(v.reshape(b * hkv, s, d), 1, bk_)
+    out = _decode_kernel(q.reshape(b * hq, 1, d), kp, vp, group=group,
+                         window=window, kv_len=kv_len, scale=scale, bk=bk_,
+                         interpret=_interpret(interpret))
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6, *,
+            use_pallas: bool = True,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """RMSNorm over the last axis; any leading shape."""
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, w, eps)
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    rows = int(np.prod(lead)) if lead else 1
+    x2 = x.reshape(rows, d)
+    br = min(256, rows) if rows % min(256, rows) == 0 else 1
+    out = _rmsnorm_kernel(_pad_to(x2, 0, br), w, eps=eps, br=br,
+                          interpret=_interpret(interpret))
+    return out[:rows].reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# Triclustering kernels (Stage-3 of the paper's pipeline)
+# ---------------------------------------------------------------------------
+
+def set_signature(mask: jnp.ndarray, r: jnp.ndarray, *,
+                  use_pallas: bool = True,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Order-independent set signatures: (T, E) 0/1 × (E,) u32 -> (T,) u32."""
+    if not use_pallas:
+        return ref.signature_ref(mask, r)
+    t, e = mask.shape
+    bt = 256 if t % 256 == 0 else (8 if t % 8 == 0 else 1)
+    be = 512 if e % 512 == 0 else (128 if e % 128 == 0 else e)
+    mp = _pad_to(_pad_to(mask, 0, bt), 1, be)
+    rp = _pad_to(r, 0, be)
+    out = _signature_kernel(mp, rp, bt=bt, be=be,
+                            interpret=_interpret(interpret))
+    return out[:t]
+
+
+def tricluster_density(tensor: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                       z: jnp.ndarray, *, use_pallas: bool = True,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Exact box-count numerators |X×Y×Z ∩ I| for T triclusters.
+
+    tensor (G, M, B) 0/1; x (T, G); y (T, M); z (T, B) -> (T,) f32.
+    The exact-density estimator of DESIGN.md §3 (beyond-paper: the paper's
+    Alg. 7 uses the generating-tuple count approximation).
+    """
+    if not use_pallas:
+        return ref.tricluster_density_ref(tensor, x, y, z)
+    t, g = x.shape
+    bt = 128 if t % 128 == 0 else (8 if t % 8 == 0 else 1)
+    bg = 8 if g >= 8 else 1
+    tp = _pad_to(tensor, 0, bg)
+    xp = _pad_to(_pad_to(x, 0, bt), 1, bg)
+    yp = _pad_to(y, 0, bt)
+    zp = _pad_to(z, 0, bt)
+    return _density_kernel(tp, xp, yp, zp, bt=bt, bg=bg,
+                           interpret=_interpret(interpret))[:t]
+
+
+def exact_density(tensor: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                  z: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Exact densities: numerator / volume (0 if any component empty)."""
+    num = tricluster_density(tensor, x, y, z, **kw)
+    vol = (x.sum(-1).astype(jnp.float32) * y.sum(-1).astype(jnp.float32)
+           * z.sum(-1).astype(jnp.float32))
+    return num / jnp.maximum(vol, 1.0)

@@ -1,0 +1,32 @@
+"""Pallas TPU kernel: fused RMSNorm (row statistics + scale in one pass)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (br, D)
+    w = w_ref[...].astype(jnp.float32)            # (D,)
+    var = jnp.mean(x * x, axis=1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w[None, :]).astype(
+        o_ref.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+            br: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x (R, D), w (D,) -> (R, D); rows must be a multiple of br."""
+    r, d = x.shape
+    assert r % br == 0, (r, br)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: order-independent set signatures of bitmask rows.
+
+sig[t] = Σ_e mask[t,e] · r[e]  (mod 2³², uint32 wraparound)
+
+This is the Stage-3 dedup hash of the M/R pipeline (paper Alg. 6/7 keys):
+equal entity sets hash equal regardless of order and multiplicity of the
+set's construction. Integer multiply-accumulate runs on the VPU; the grid
+tiles (T, E) so arbitrarily wide entity spaces stream through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(mask_ref, r_ref, o_ref, acc_ref, *, ne: int):
+    ie = pl.program_id(1)
+
+    @pl.when(ie == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = mask_ref[...].astype(jnp.uint32)            # (bt, be)
+    r = r_ref[...].astype(jnp.uint32)               # (be,)
+    acc_ref[...] += jnp.sum(m * r[None, :], axis=1, dtype=jnp.uint32)
+
+    @pl.when(ie == ne - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def signature(mask: jnp.ndarray, r: jnp.ndarray, *, bt: int = 256,
+              be: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """mask (T, E) 0/1, r (E,) uint32 -> (T,) uint32 signatures."""
+    t, e = mask.shape
+    assert t % bt == 0 and e % be == 0, (t, bt, e, be)
+    ne = e // be
+    return pl.pallas_call(
+        functools.partial(_kernel, ne=ne),
+        grid=(t // bt, ne),
+        in_specs=[
+            pl.BlockSpec((bt, be), lambda it, ie: (it, ie)),
+            pl.BlockSpec((be,), lambda it, ie: (ie,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda it, ie: (it,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bt,), jnp.uint32)],
+        interpret=interpret,
+    )(mask, r)

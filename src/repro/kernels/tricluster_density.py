@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: exact tricluster density numerators (beyond-paper).
+
+For T candidate triclusters with membership masks X (T,G), Y (T,M), Z (T,B)
+against the dense Boolean tensor I (G,M,B), computes
+
+    num[t] = Σ_{g,m,b} X[t,g]·Y[t,m]·Z[t,b]·I[g,m,b]
+
+The contraction is factored into two MXU matmuls per (t, g) tile
+(DESIGN.md §7):
+
+    C[t, g·B+b] = Y[t] @ I[g]           (bt×M by M×(bg·B) matmul)
+    s[t, g]     = Σ_b C[t,g,b]·Z[t,b]   (VPU multiply-reduce)
+    num[t]     += Σ_g X[t,g]·s[t,g]
+
+Grid: (T/bt, G/bg), accumulating over the g axis in a VMEM scratch.
+The MB working set per step is bg·M·B·4 bytes — pick bg so it fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(i_ref, x_ref, y_ref, z_ref, o_ref, acc_ref, *, ng: int):
+    ig = pl.program_id(1)
+
+    @pl.when(ig == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i_blk = i_ref[...].astype(jnp.float32)           # (bg, M, B)
+    bg, m, b = i_blk.shape
+    y = y_ref[...].astype(jnp.float32)               # (bt, M)
+    z = z_ref[...].astype(jnp.float32)               # (bt, B)
+    x = x_ref[...].astype(jnp.float32)               # (bt, bg)
+    # C[t, g*B+b] = Σ_m y[t,m] I[g,m,b]  — MXU matmul
+    c = jnp.dot(y, i_blk.transpose(1, 0, 2).reshape(m, bg * b),
+                preferred_element_type=jnp.float32)  # (bt, bg*B)
+    c = c.reshape(-1, bg, b)
+    s = jnp.einsum("tgb,tb->tg", c, z)               # (bt, bg)
+    acc_ref[...] += jnp.sum(s * x, axis=1)
+
+    @pl.when(ig == ng - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def tricluster_density(tensor: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+                       z: jnp.ndarray, *, bt: int = 128, bg: int = 8,
+                       interpret: bool = False) -> jnp.ndarray:
+    """(G,M,B) 0/1 tensor + (T,G)/(T,M)/(T,B) masks -> (T,) f32 numerators.
+
+    T must be a multiple of bt and G of bg (ops.py pads)."""
+    g, m, b = tensor.shape
+    t = x.shape[0]
+    assert t % bt == 0 and g % bg == 0, (t, bt, g, bg)
+    ng = g // bg
+    return pl.pallas_call(
+        functools.partial(_kernel, ng=ng),
+        grid=(t // bt, ng),
+        in_specs=[
+            pl.BlockSpec((bg, m, b), lambda it, ig: (ig, 0, 0)),
+            pl.BlockSpec((bt, bg), lambda it, ig: (it, ig)),
+            pl.BlockSpec((bt, m), lambda it, ig: (it, 0)),
+            pl.BlockSpec((bt, b), lambda it, ig: (it, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda it, ig: (it,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt,), jnp.float32)],
+        interpret=interpret,
+    )(tensor, x, y, z)

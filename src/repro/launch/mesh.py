@@ -1,0 +1,34 @@
+"""Production mesh construction (brief §MULTI-POD DRY-RUN).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run process forces 512
+host devices *before* any jax import and then calls it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_local_mesh(model: int = 1, pod: int = 0):
+    """Mesh over whatever devices exist (tests, examples, local runs):
+    (data=n/model, model) or (pod, data, model) when pod>0."""
+    n = len(jax.devices())
+    if pod:
+        shape = (pod, n // (pod * model), model)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (n // model, model)
+        axes = ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,119 @@
+"""Unified model API: one ``Model`` namespace per config, dispatched on
+family. Every driver (train, serve, dryrun, tests) goes through this.
+
+  model = get_model(cfg)
+  params = model.init(cfg, key)
+  loss, metrics = model.loss(cfg, params, batch)
+  cache, logits = model.prefill(cfg, params, inputs, max_len)
+  cache, logits = model.decode_step(cfg, params, cache, tokens)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, lm
+from .params import init_params, param_shardings, param_specs, param_structs
+
+
+class Model(NamedTuple):
+    param_defs: Callable
+    forward: Callable          # (cfg, params, batch, rules) -> (logits, aux)
+    loss: Callable             # (cfg, params, batch, rules) -> (loss, metrics)
+    prefill: Callable          # (cfg, params, inputs, max_len, rules) -> (cache, logits)
+    decode_step: Callable      # (cfg, params, cache, tokens, rules) -> (cache, logits)
+    cache_defs: Callable
+    init_cache: Callable
+    cache_structs: Callable
+
+    def init(self, cfg: ModelConfig, key, dtype=jnp.float32):
+        return init_params(self.param_defs(cfg), key, dtype)
+
+    def shardings(self, cfg: ModelConfig, rules):
+        return param_shardings(self.param_defs(cfg), rules)
+
+    def specs(self, cfg: ModelConfig, rules):
+        return param_specs(self.param_defs(cfg), rules)
+
+    def structs(self, cfg: ModelConfig, rules=None, dtype=jnp.float32):
+        return param_structs(self.param_defs(cfg), rules, dtype)
+
+
+def _lm_forward(cfg, params, batch, rules=None):
+    return lm.forward(cfg, params, batch["tokens"], batch.get("patches"),
+                      rules=rules)
+
+
+def _lm_prefill(cfg, params, inputs, max_len, rules=None):
+    return lm.prefill(cfg, params, inputs["tokens"], max_len,
+                      inputs.get("patches"), rules=rules)
+
+
+_LM = Model(
+    param_defs=lm.param_defs,
+    forward=_lm_forward,
+    loss=lm.loss_fn,
+    prefill=_lm_prefill,
+    decode_step=lm.decode_step,
+    cache_defs=lm.cache_defs,
+    init_cache=lm.init_cache,
+    cache_structs=lm.cache_structs,
+)
+
+_ENCDEC = Model(
+    param_defs=encdec.param_defs,
+    forward=encdec.forward,
+    loss=encdec.loss_fn,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+    cache_defs=encdec.cache_defs,
+    init_cache=encdec.init_cache,
+    cache_structs=encdec.cache_structs,
+)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _ENCDEC
+    if cfg.family in ("dense", "moe", "hybrid_ssm", "xlstm"):
+        return _LM
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def input_specs(cfg: ModelConfig, shape, rules=None, pad_vocab: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of one dry-run cell
+    (weak-type-correct, shardable, no device allocation).
+
+    For train/prefill kinds: the token/label/frontend batch.
+    For decode: the (B,) token vector (the cache is produced separately via
+    ``Model.cache_structs``)."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, *axes):
+        if rules is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=rules.sharding(axes, shp))
+
+    if shape.kind == "decode":
+        return {"tokens": sds((b,), jnp.int32, "batch")}
+    if cfg.family == "encdec":
+        out = {"frames": sds((b, s, cfg.frontend_dim), jnp.float32,
+                             "batch", None, None),
+               "tokens": sds((b, s), jnp.int32, "batch", None)}
+        if shape.kind == "train":
+            out["labels"] = sds((b, s), jnp.int32, "batch", None)
+        return out
+    out = {}
+    s_text = s
+    if cfg.frontend == "patch":
+        s_text = s - cfg.frontend_len
+        out["patches"] = sds((b, cfg.frontend_len, cfg.frontend_dim),
+                             jnp.float32, "batch", None, None)
+    out["tokens"] = sds((b, s_text), jnp.int32, "batch", None)
+    if shape.kind == "train":
+        out["labels"] = sds((b, s_text), jnp.int32, "batch", None)
+    return out

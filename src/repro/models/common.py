@@ -1,0 +1,356 @@
+"""Shared model primitives: norms, RoPE, attention (train/prefill/decode),
+SwiGLU MLP, and the capacity-dispatch MoE layer.
+
+All functions are pure; parameters are plain dicts produced by
+``params.init_params`` from the family's ``param_defs`` table. The MoE
+dispatch is the same fixed-capacity sort-and-route pattern as the
+triclustering shuffle engine (core/distributed.py) — the paper's M/R
+shuffle and GShard-style expert dispatch are one mechanism (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5,
+            use_pallas: bool = False) -> jnp.ndarray:
+    if use_pallas:
+        return ops.rmsnorm(x, scale, eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables (..., head_dim/2) for integer positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) — llama half-rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[..., None, :], sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+         positions: jnp.ndarray):
+    """Project + (optional) per-head QK-norm + RoPE.
+    x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, window: Optional[int]) -> jnp.ndarray:
+    """(..., Sq, Sk) causal/window mask from position arrays."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def _sdpa(q, k, v, mask, scale: float) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd), mask (B or 1, Sq, Sk).
+    bf16 operands with fp32 MXU accumulation (`preferred_element_type`) —
+    casting operands to fp32 materialises full-size fp32 copies of K/V
+    (§Perf iteration D2)."""
+    s = jnp.einsum("bqhk,bthk->bhqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None], s, _NEG)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bthk->bqhk", a.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def blocked_sdpa(q, k, v, positions, window, scale: float,
+                 q_block: int) -> jnp.ndarray:
+    """Tiled attention: ``lax.scan`` over q blocks. The scan carry
+    serialises the blocks, so peak live scores = ONE (B,H,q_block,S)
+    tile; a python loop would let XLA schedule all blocks concurrently
+    and the peak becomes S/q_block tiles (§Perf iteration P2). q/k/v are
+    (B,S,H,hd) with H already GQA-expanded."""
+    b, s = q.shape[0], q.shape[1]
+    nb = s // q_block
+
+    def qblock(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_block, q_block, 1)
+        pi = jax.lax.dynamic_slice_in_dim(positions, i * q_block,
+                                          q_block, 0)
+        mask = _mask(pi[None], positions[None], window)
+        return 0, _sdpa(qi, k, v, mask, scale)
+
+    _, o = jax.lax.scan(qblock, 0, jnp.arange(nb, dtype=jnp.int32))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, nb * q_block, *o.shape[3:])
+    if nb * q_block < s:                 # ragged tail
+        qi = jax.lax.dynamic_slice_in_dim(q, nb * q_block,
+                                          s - nb * q_block, 1)
+        pi = positions[nb * q_block:]
+        mask = _mask(pi[None], positions[None], window)
+        o = jnp.concatenate([o, _sdpa(qi, k, v, mask, scale)], 1)
+    return o
+
+
+def attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+              positions: jnp.ndarray, *, impl: str = "einsum",
+              q_block: int = 2048) -> jnp.ndarray:
+    """Full-sequence causal/SWA GQA attention (train / prefill).
+
+    impl:
+      einsum  — materialised (B,H,S,S) scores (baseline; memory-bound at
+                32k — see EXPERIMENTS.md §Perf).
+      blocked — statically unrolled q-blocks, peak scores (B,H,q_block,S).
+      pallas  — kernels/flash_attention (TPU runtime path; opaque to
+                cost_analysis, so analysis runs use einsum/blocked).
+    """
+    b, s, d = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    scale = cfg.head_dim ** -0.5
+    group = cfg.n_heads // cfg.n_kv_heads
+    if impl == "pallas":
+        o = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                causal=True, window=cfg.window, scale=scale)
+        o = o.transpose(0, 2, 1, 3)
+    else:
+        k = jnp.repeat(k, group, axis=2)   # GQA expand (KV replication, §6)
+        v = jnp.repeat(v, group, axis=2)
+        if impl == "einsum" or s <= q_block:
+            mask = _mask(positions[None], positions[None], cfg.window)
+            o = _sdpa(q, k, v, mask, scale)
+        elif impl == "blocked":
+            o = blocked_sdpa(q, k, v, positions, cfg.window, scale, q_block)
+        else:
+            raise ValueError(impl)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)
+                      .reshape(-1, d))
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     slot_pos: jnp.ndarray, pos: jnp.ndarray, rules=None):
+    """One-token decode with ring-buffer KV cache — *sequence-parallel*.
+
+    x (B,1,D); k_cache/v_cache (B,Sc,KV,hd); slot_pos (Sc,) stored position
+    per slot (-1 = empty); pos scalar int32 = current absolute position.
+    Returns (out (B,1,D), k_cache', v_cache', slot_pos').
+
+    GQA is computed *without* materialising the head-repeated cache: the
+    query is reshaped to (B,1,KV,G,hd) and contracted against the cache
+    directly. This keeps the cache in its (batch, kv_seq)-sharded layout —
+    the repeat-to-H formulation made GSPMD reshard the whole cache to a
+    head-sharded layout every step (an involuntary full rematerialisation,
+    §Perf iteration D1). Scores are pinned to kv_seq sharding, so decode
+    runs as split-KV flash-decode: local partial scores per seq shard, two
+    tiny cross-shard reductions (softmax max/sum), one psum for the values.
+    """
+    b = x.shape[0]
+    kv, group = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x, pos[None])
+    sc = k_cache.shape[1]
+    slot = (pos % sc).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, pos[None].astype(slot_pos.dtype), slot, axis=0)
+    scale = cfg.head_dim ** -0.5
+    q5 = q.reshape(b, 1, kv, group, cfg.head_dim).astype(k_cache.dtype)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q5, k_cache,
+                   preferred_element_type=jnp.float32) * scale  # (B,KV,G,1,Sc)
+    seq_ax = "long_seq" if b == 1 else "kv_seq"
+    if rules is not None:
+        s = rules.constrain(s, "batch", None, None, None, seq_ax)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.window is not None:
+        valid &= slot_pos > pos - cfg.window
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", a.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = jnp.einsum("bse,ed->bsd", o,
+                     p["wo"].astype(x.dtype).reshape(-1, x.shape[-1]))
+    return out, k_cache, v_cache, slot_pos
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE (fixed-capacity sort-and-dispatch; per-sequence capacity)
+# ---------------------------------------------------------------------------
+
+def _dispatch_row(x_row, eid, tok, w, n_experts: int, cap: int):
+    """One sequence: route S·k (token, expert) slots into (E, cap) buffers.
+    Same fixed-capacity pattern as core.distributed._dispatch."""
+    l = eid.shape[0]
+    order = jnp.argsort(eid, stable=True)
+    sorted_eid = eid[order]
+    rank = (jnp.arange(l) - jnp.searchsorted(sorted_eid, sorted_eid,
+                                             side="left")).astype(jnp.int32)
+    ok = rank < cap
+    slot = jnp.where(ok, sorted_eid * cap + rank, n_experts * cap)
+    buf = jnp.zeros((n_experts * cap + 1, x_row.shape[-1]), x_row.dtype)
+    buf = buf.at[slot].set(x_row[tok[order]])[:-1]
+    return buf, slot, order, ok
+
+
+def _moe_dispatch_ffn(cfg: ModelConfig, p: dict, x, top_e, top_w,
+                      model_axes: tuple):
+    """Local (per-shard) dispatch → expert SwiGLU → combine. Called either
+    directly (GSPMD path) or inside shard_map with x batch-LOCAL; under
+    shard_map ``model_axes`` carries the TP axis for the w_down psum."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(s * k / e * cfg.capacity_factor))
+    eid = top_e.reshape(b, s * k)
+    tok = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(-1)
+    tok = jnp.broadcast_to(tok, (b, s * k))
+    w = top_w.reshape(b, s * k)
+
+    buf, slot, order, ok = jax.vmap(
+        lambda xr, er, tr, wr: _dispatch_row(xr, er, tr, wr, e, cap)
+    )(x, eid, tok, w)
+    buf = buf.reshape(b, e, cap, d)
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    y_buf = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                       p["w_down"].astype(x.dtype)).reshape(b, e * cap, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((b, 1, d), y_buf.dtype)], 1)
+
+    def combine_row(y_row, slot_r, order_r, ok_r, w_r, tok_r):
+        contrib = y_row[slot_r] * jnp.where(
+            ok_r, w_r[order_r], 0.0)[:, None].astype(y_row.dtype)
+        out = jnp.zeros((s, d), y_row.dtype)
+        return out.at[tok_r[order_r]].add(contrib)
+
+    y = jax.vmap(combine_row)(y_buf, slot, order, ok, w, tok)
+    for ax in model_axes:   # w_down row-parallel partial sums
+        y = jax.lax.psum(y, ax)
+    return y
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jnp.ndarray, rules=None):
+    """Top-k MoE with per-sequence capacity. x (B,S,D) -> (y, aux_loss).
+
+    Two dispatch paths (§Perf iteration M1):
+
+    * ``gspmd`` — let the partitioner shard the scatter/gather dispatch.
+      GSPMD cannot keep the batch dim sharded through the scatter, so it
+      *replicates* the dispatch buffers and every device computes the full
+      microbatch's expert FFN: data_shards× redundant FLOPs + the reshard
+      collectives (the baseline rows in EXPERIMENTS.md §Perf).
+    * ``shard_map`` (default) — dispatch/FFN/combine run *per data shard*
+      (the dispatch is per-sequence, so batch-locality is exact), Megatron
+      row-parallel over the model axis with one explicit psum of y.
+
+    S == 1 (decode) uses the dense all-expert combine (standard small-batch
+    TPU path; the FLOP overcount E/k× is visible in §Roofline).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                  # (B,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux (switch-style)
+    sel = jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(2)  # (B,S,E)
+    frac_tokens = sel.mean((0, 1)) / k
+    frac_prob = probs.mean((0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_prob)
+
+    if (s > 1 and rules is not None and cfg.moe_impl == "shard_map"):
+        mesh = rules.mesh
+        data_axes = tuple(a for a in ("pod", "data")
+                          if a in mesh.axis_names)
+        model_axes = tuple(a for a in ("model",) if a in mesh.axis_names)
+        if b % max(rules.data_size, 1) == 0:
+            P_ = jax.sharding.PartitionSpec
+            bspec = (data_axes if len(data_axes) > 1
+                     else (data_axes[0] if data_axes else None))
+            xs = P_(bspec, None, None)
+            ks = P_(bspec, None, None)
+            ws = {"w_gate": P_(None, None, "model" if model_axes else None),
+                  "w_up": P_(None, None, "model" if model_axes else None),
+                  "w_down": P_(None, "model" if model_axes else None, None)}
+            pw = {k2: p[k2] for k2 in ws}
+            y = jax.shard_map(
+                lambda pw_, x_, te_, tw_: _moe_dispatch_ffn(
+                    cfg, pw_, x_, te_, tw_, model_axes),
+                mesh=mesh,
+                in_specs=(ws, xs, ks, ks),
+                out_specs=xs)(pw, x, top_e, top_w.astype(x.dtype))
+            return y.astype(x.dtype), aux
+
+    if s == 1:
+        # dense all-expert combine
+        g = jnp.einsum("bqd,edf->beqf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bqd,edf->beqf", x, p["w_up"].astype(x.dtype))
+        y_all = jnp.einsum("beqf,efd->beqd", jax.nn.silu(g) * u,
+                           p["w_down"].astype(x.dtype))
+        comb = jnp.zeros((b, e), jnp.float32)
+        comb = comb.at[jnp.arange(b)[:, None], top_e[:, 0]].add(top_w[:, 0])
+        y = jnp.einsum("beld,be->bld", y_all.astype(jnp.float32), comb)
+        return y.astype(x.dtype), aux
+
+    y = _moe_dispatch_ffn(cfg, p, x, top_e, top_w.astype(x.dtype), ())
+    return y.astype(x.dtype), aux
+
+
+def moe_dropped_fraction(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    """Diagnostics: fraction of (token, slot) routes dropped by capacity."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    _, top_e = jax.lax.top_k(logits.astype(jnp.float32), k)
+    cap = int(math.ceil(s * k / e * cfg.capacity_factor))
+    eid = top_e.reshape(b, s * k)
+    counts = jax.vmap(lambda r: jnp.bincount(r, length=e))(eid)
+    dropped = jnp.maximum(counts - cap, 0).sum()
+    return dropped / (b * s * k)

@@ -1,0 +1,339 @@
+"""Encoder-decoder transformer (seamless-m4t): speech encoder (stub fbank
+frontend) + text decoder with cross-attention.
+
+Train: (frames (B,Se,frontend_dim), tokens (B,Sd)) -> next-token loss.
+Serve: ``encode`` once, then prefill/decode over the decoder with a self
+KV ring plus a fixed cross-attention KV computed from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+from .lm import _L, _map_cache, _maybe_remat, cache_len, _ring_pack
+from .params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg, stack):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sa = ("layers",) * len(stack)
+    return {
+        "wq": ParamDef(stack + (d, h, hd), sa + (None, "heads", None)),
+        "wk": ParamDef(stack + (d, kv, hd), sa + (None, "kv_heads", None)),
+        "wv": ParamDef(stack + (d, kv, hd), sa + (None, "kv_heads", None)),
+        "wo": ParamDef(stack + (h * hd, d), sa + ("heads", None)),
+    }
+
+
+def _mlp_defs(cfg, stack):
+    d, f = cfg.d_model, cfg.d_ff
+    sa = ("layers",) * len(stack)
+    return {
+        "w_gate": ParamDef(stack + (d, f), sa + (None, "ff")),
+        "w_up": ParamDef(stack + (d, f), sa + (None, "ff")),
+        "w_down": ParamDef(stack + (f, d), sa + ("ff", None)),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    le, ld = cfg.enc_layers, cfg.n_layers
+    out = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), "normal", 1.0),
+        "frontend_adapter": ParamDef((cfg.frontend_dim, d), (None, "embed")),
+        "enc_out_norm": ParamDef((d,), (None,), "ones"),
+        "out_norm": ParamDef((d,), (None,), "ones"),
+        "lm_head": ParamDef((d, v), ("embed", "vocab")),
+        "encoder": {
+            "attn_norm": ParamDef((le, d), ("layers", None), "ones"),
+            "attn": _attn_defs(cfg, (le,)),
+            "mlp_norm": ParamDef((le, d), ("layers", None), "ones"),
+            "mlp": _mlp_defs(cfg, (le,)),
+        },
+        "decoder": {
+            "attn_norm": ParamDef((ld, d), ("layers", None), "ones"),
+            "attn": _attn_defs(cfg, (ld,)),
+            "cross_norm": ParamDef((ld, d), ("layers", None), "ones"),
+            "cross": _attn_defs(cfg, (ld,)),
+            "mlp_norm": ParamDef((ld, d), ("layers", None), "ones"),
+            "mlp": _mlp_defs(cfg, (ld,)),
+        },
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def _cross_attention(cfg, p, x, enc_k, enc_v):
+    """x (B,Sq,D) queries against precomputed encoder K/V (B,Se,KV,hd)."""
+    b, sq, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    group = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(enc_k, group, axis=2).astype(x.dtype)
+    vv = jnp.repeat(enc_v, group, axis=2).astype(x.dtype)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhk,bthk->bhqt", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthk->bqhk", a, vv.astype(jnp.float32)
+                   ).astype(x.dtype)
+    o = o.reshape(b, sq, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)
+                      .reshape(-1, d))
+
+
+def encode(cfg: ModelConfig, params, frames, rules=None):
+    """frames (B,Se,frontend_dim) -> encoder output (B,Se,D) and the
+    per-decoder-layer cross K/V (Ld,B,Se,KV,hd)."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(compute),
+                   params["frontend_adapter"].astype(compute))
+    if rules is not None:
+        x = rules.constrain(x, "batch", None, None)
+    b, se, _ = x.shape
+    positions = jnp.arange(se, dtype=jnp.int32)
+
+    def body(xx, p):
+        h = common.rmsnorm(xx, p["attn_norm"], cfg.norm_eps)
+        q, k, v = common._qkv(cfg, p["attn"], h, positions)
+        group = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(k, group, axis=2)
+        vv = jnp.repeat(v, group, axis=2)
+        mask = jnp.ones((1, se, se), bool)      # bidirectional
+        o = common._sdpa(q, kk, vv, mask, cfg.head_dim ** -0.5)
+        o = o.reshape(b, se, cfg.n_heads * cfg.head_dim)
+        xx = xx + jnp.einsum("bse,ed->bsd", o,
+                             p["attn"]["wo"].astype(xx.dtype)
+                             .reshape(-1, xx.shape[-1]))
+        h = common.rmsnorm(xx, p["mlp_norm"], cfg.norm_eps)
+        return xx + common.swiglu(p["mlp"], h), None
+
+    wrapped = _maybe_remat(cfg, lambda xx, p: body(xx, p)[0])
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, sl: (wrapped(c, sl), None), x,
+                            params["encoder"])
+    else:
+        for i in range(cfg.enc_layers):
+            x = wrapped(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    x = common.rmsnorm(x, params["enc_out_norm"], cfg.norm_eps)
+
+    # precompute cross K/V per decoder layer
+    dec = params["decoder"]["cross"]
+
+    def kv(p):
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        return k, v
+
+    if cfg.scan_layers:
+        ks, vs = jax.lax.map(kv, dec)
+    else:
+        pairs = [kv(jax.tree.map(lambda a: a[i], dec))
+                 for i in range(cfg.n_layers)]
+        ks = jnp.stack([p[0] for p in pairs])
+        vs = jnp.stack([p[1] for p in pairs])
+    return x, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_block(cfg, p, x, positions, cross_k, cross_v):
+    h = common.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + common.attention(cfg, p["attn"], h, positions,
+                             impl=cfg.attn_impl, q_block=cfg.q_block)
+    h = common.rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+    x = x + _cross_attention(cfg, p["cross"], h, cross_k, cross_v)
+    h = common.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + common.swiglu(p["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params, batch, rules=None):
+    """Training forward: logits (B,Sd,V), aux=0."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    _, cross_k, cross_v = encode(cfg, params, batch["frames"], rules)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(compute)[tokens]
+    if rules is not None:
+        x = rules.constrain(x, "batch", None, None)
+    b, sd, _ = x.shape
+    positions = jnp.arange(sd, dtype=jnp.int32)
+
+    wrapped = _maybe_remat(
+        cfg, lambda xx, sl: _dec_block(cfg, sl[0], xx, positions,
+                                       sl[1], sl[2]))
+    xs = (params["decoder"], cross_k, cross_v)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, sl: (wrapped(c, sl), None), x, xs)
+    else:
+        for i in range(cfg.n_layers):
+            x = wrapped(x, jax.tree.map(lambda a: a[i], xs))
+    x = common.rmsnorm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    if cfg.logits_fp32:
+        logits = logits.astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rules=None):
+    logits, aux = forward(cfg, params, batch, rules)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(valid.sum(), 1)
+    return loss, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache = decoder self-KV ring + fixed cross K/V
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    sc = cache_len(cfg, max_len)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    l, se = cfg.n_layers, cfg.frontend_len
+    seq_ax = "long_seq" if batch == 1 else "kv_seq"
+    return {
+        "pos": _L((), jnp.int32, 0, ()),
+        "k": _L((l, batch, sc, kv, hd), dtype, 0,
+                (None, "batch", seq_ax, "kv_heads", None)),
+        "v": _L((l, batch, sc, kv, hd), dtype, 0,
+                (None, "batch", seq_ax, "kv_heads", None)),
+        "slot_pos": _L((sc,), jnp.int32, -1, (None,)),
+        "cross_k": _L((l, batch, se, kv, hd), dtype, 0,
+                      (None, "batch", "kv_seq", "kv_heads", None)),
+        "cross_v": _L((l, batch, se, kv, hd), dtype, 0,
+                      (None, "batch", "kv_seq", "kv_heads", None)),
+    }
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, rules=None):
+    defs = cache_defs(cfg, batch, max_len, dtype)
+
+    def make(l: _L):
+        arr = jnp.full(l.shape, l.fill, l.dtype)
+        if rules is not None and l.axes:
+            arr = rules.constrain(arr, *l.axes)
+        return arr
+
+    return _map_cache(make, defs)
+
+
+def cache_structs(cfg, batch, max_len, rules, dtype=jnp.bfloat16):
+    defs = cache_defs(cfg, batch, max_len, dtype)
+    return _map_cache(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=rules.sharding(l.axes, l.shape)),
+        defs)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, rules=None):
+    """One decoder token for all sequences; cross K/V fixed in the cache."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(compute)[tokens][:, None]
+    pos = cache["pos"]
+    slot_pos = cache["slot_pos"]
+
+    def body(carry, sl):
+        xx, sp = carry
+        p, kc, vc, ck, cv = sl
+        h = common.rmsnorm(xx, p["attn_norm"], cfg.norm_eps)
+        y, kc, vc, sp = common.attention_decode(cfg, p["attn"], h, kc, vc,
+                                                sp, pos, rules)
+        xx = xx + y
+        h = common.rmsnorm(xx, p["cross_norm"], cfg.norm_eps)
+        xx = xx + _cross_attention(cfg, p["cross"], h, ck, cv)
+        h = common.rmsnorm(xx, p["mlp_norm"], cfg.norm_eps)
+        xx = xx + common.swiglu(p["mlp"], h)
+        return (xx, sp), (kc, vc)
+
+    xs = (params["decoder"], cache["k"], cache["v"],
+          cache["cross_k"], cache["cross_v"])
+    if cfg.scan_layers:
+        (x, slot_pos), (ks, vs) = jax.lax.scan(body, (x, slot_pos), xs)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            (x, slot_pos), (kc, vc) = body(
+                (x, slot_pos), jax.tree.map(lambda a: a[i], xs))
+            ks.append(kc)
+            vs.append(vc)
+        ks, vs = jnp.stack(ks), jnp.stack(vs)
+    new = dict(cache)
+    new.update(k=ks, v=vs, slot_pos=slot_pos, pos=pos + 1)
+    x = common.rmsnorm(x, params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))[:, 0]
+    return new, logits.astype(jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, batch_inputs, max_len: int,
+            rules=None):
+    """Encode frames + run the decoder over the prompt tokens, returning a
+    populated cache and last-position logits."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    frames, tokens = batch_inputs["frames"], batch_inputs["tokens"]
+    _, cross_k, cross_v = encode(cfg, params, frames, rules)
+    x = params["embed"].astype(compute)[tokens]
+    b, sd, _ = x.shape
+    positions = jnp.arange(sd, dtype=jnp.int32)
+    sc = cache_len(cfg, max_len)
+
+    def body(xx, sl):
+        p, ck, cv = sl
+        h = common.rmsnorm(xx, p["attn_norm"], cfg.norm_eps)
+        q, k, v = common._qkv(cfg, p["attn"], h, positions)
+        kr, slot_pos = _ring_pack(k, sc, sd)
+        vr, _ = _ring_pack(v, sc, sd)
+        group = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(k, group, axis=2)
+        vv = jnp.repeat(v, group, axis=2)
+        mask = common._mask(positions[None], positions[None], cfg.window)
+        o = common._sdpa(q, kk, vv, mask, cfg.head_dim ** -0.5)
+        o = o.reshape(b, sd, cfg.n_heads * cfg.head_dim)
+        xx = xx + jnp.einsum("bse,ed->bsd", o,
+                             p["attn"]["wo"].astype(xx.dtype)
+                             .reshape(-1, xx.shape[-1]))
+        h = common.rmsnorm(xx, p["cross_norm"], cfg.norm_eps)
+        xx = xx + _cross_attention(cfg, p["cross"], h, ck, cv)
+        h = common.rmsnorm(xx, p["mlp_norm"], cfg.norm_eps)
+        xx = xx + common.swiglu(p["mlp"], h)
+        return xx, (kr.astype(compute), vr.astype(compute), slot_pos)
+
+    wrapped = _maybe_remat(cfg, body)
+    xs = (params["decoder"], cross_k, cross_v)
+    if cfg.scan_layers:
+        x, (ks, vs, sps) = jax.lax.scan(lambda c, sl: wrapped(c, sl), x, xs)
+        slot_pos = sps[0]
+    else:
+        ks, vs = [], []
+        slot_pos = None
+        for i in range(cfg.n_layers):
+            x, (kr, vr, sp) = wrapped(x, jax.tree.map(lambda a: a[i], xs))
+            ks.append(kr)
+            vs.append(vr)
+            slot_pos = sp
+        ks, vs = jnp.stack(ks), jnp.stack(vs)
+    cache = {
+        "pos": jnp.asarray(sd, jnp.int32), "k": ks, "v": vs,
+        "slot_pos": slot_pos,
+        "cross_k": cross_k.astype(compute), "cross_v": cross_v.astype(compute),
+    }
+    x = common.rmsnorm(x[:, -1:], params["out_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))[:, 0]
+    return cache, logits.astype(jnp.float32)

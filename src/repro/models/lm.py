@@ -1,0 +1,853 @@
+"""Unified decoder-only LM: dense / MoE / hybrid-SSM (Zamba2) / xLSTM.
+
+One parameter-declaration table per family (``param_defs``), one forward
+for training/prefill (``forward``), and a recurrent ``decode_step`` over a
+typed cache. Layers run under ``lax.scan`` with stacked parameters
+(production path: small HLO, fast GSPMD partitioning — DESIGN.md §7);
+``cfg.scan_layers=False`` unrolls them (used by per-layer analysis for
+exact per-layer cost accounting).
+
+Block patterns:
+  dense/moe    — homogeneous stack of L blocks.
+  hybrid_ssm   — groups of ``attn_every`` Mamba2 layers, each group ending
+                 with the single *shared* attention+MLP block (Zamba2
+                 weight sharing); L %% attn_every tail Mamba2 layers.
+  xlstm        — groups of ``slstm_every`` blocks: (period-1) mLSTM + one
+                 sLSTM; tail of mLSTM blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import common, ssm, xlstm
+from .params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sa = ("layers",) * len(stack)
+    out = {
+        "wq": ParamDef(stack + (d, h, hd), sa + (None, "heads", None)),
+        "wk": ParamDef(stack + (d, kv, hd), sa + (None, "kv_heads", None)),
+        "wv": ParamDef(stack + (d, kv, hd), sa + (None, "kv_heads", None)),
+        "wo": ParamDef(stack + (h * hd, d), sa + ("heads", None)),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDef(stack + (hd,), sa + (None,), "ones")
+        out["k_norm"] = ParamDef(stack + (hd,), sa + (None,), "ones")
+    return out
+
+
+def _mlp_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    sa = ("layers",) * len(stack)
+    return {
+        "w_gate": ParamDef(stack + (d, f), sa + (None, "ff")),
+        "w_up": ParamDef(stack + (d, f), sa + (None, "ff")),
+        "w_down": ParamDef(stack + (f, d), sa + ("ff", None)),
+    }
+
+
+def _moe_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sa = ("layers",) * len(stack)
+    return {
+        "router": ParamDef(stack + (d, e), sa + (None, "experts")),
+        "w_gate": ParamDef(stack + (e, d, f), sa + ("experts", None, "moe_ff")),
+        "w_up": ParamDef(stack + (e, d, f), sa + ("experts", None, "moe_ff")),
+        "w_down": ParamDef(stack + (e, f, d), sa + ("experts", "moe_ff", None)),
+    }
+
+
+def _mamba_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, w = cfg.ssm_heads, cfg.conv_width
+    sa = ("layers",) * len(stack)
+    return {
+        "norm": ParamDef(stack + (d,), sa + (None,), "ones"),
+        "wz": ParamDef(stack + (d, di), sa + (None, "ssm_inner")),
+        "wx": ParamDef(stack + (d, di), sa + (None, "ssm_inner")),
+        "wB": ParamDef(stack + (d, n), sa + (None, None)),
+        "wC": ParamDef(stack + (d, n), sa + (None, None)),
+        "wdt": ParamDef(stack + (d, h), sa + (None, "ssm_heads")),
+        "conv_w": ParamDef(stack + (w, di + 2 * n), sa + (None, None),
+                           "normal", 0.5),
+        "conv_b": ParamDef(stack + (di + 2 * n,), sa + (None,), "zeros"),
+        "dt_bias": ParamDef(stack + (h,), sa + ("ssm_heads",), "zeros"),
+        "A_log": ParamDef(stack + (h,), sa + ("ssm_heads",), "zeros"),
+        "D_skip": ParamDef(stack + (h,), sa + ("ssm_heads",), "ones"),
+        "norm_scale": ParamDef(stack + (di,), sa + ("ssm_inner",), "ones"),
+        "out_proj": ParamDef(stack + (di, d), sa + ("ssm_inner", None)),
+    }
+
+
+def _mlstm_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d = cfg.d_model
+    dm = int(d * cfg.mlstm_proj)
+    h = cfg.n_heads
+    sa = ("layers",) * len(stack)
+    return {
+        "norm": ParamDef(stack + (d,), sa + (None,), "ones"),
+        "w_up": ParamDef(stack + (d, 2 * dm), sa + (None, "ff")),
+        "wq": ParamDef(stack + (dm, dm), sa + (None, "ff")),
+        "wk": ParamDef(stack + (dm, dm), sa + (None, "ff")),
+        "wv": ParamDef(stack + (dm, dm), sa + (None, "ff")),
+        "wi": ParamDef(stack + (dm, h), sa + (None, "heads")),
+        "wf": ParamDef(stack + (dm, h), sa + (None, "heads")),
+        "norm_scale": ParamDef(stack + (dm,), sa + ("ff",), "ones"),
+        "w_down": ParamDef(stack + (dm, d), sa + ("ff", None)),
+    }
+
+
+def _slstm_defs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d = cfg.d_model
+    h, hp = cfg.n_heads, cfg.d_model // cfg.n_heads
+    ds = int(2 * d * cfg.slstm_proj)      # gated MLP: up to 2×(proj·d)
+    sa = ("layers",) * len(stack)
+    return {
+        "norm": ParamDef(stack + (d,), sa + (None,), "ones"),
+        "w_gates": ParamDef(stack + (d, 4, d), sa + (None, None, None)),
+        "r_gates": ParamDef(stack + (4, h, hp, hp),
+                            sa + (None, "heads", None, None), "normal", 0.1),
+        "b_i": ParamDef(stack + (d,), sa + (None,), "zeros"),
+        "b_f": ParamDef(stack + (d,), sa + (None,), "ones"),
+        "norm_scale": ParamDef(stack + (d,), sa + (None,), "ones"),
+        "w_mlp_up": ParamDef(stack + (d, ds), sa + (None, "ff")),
+        "w_mlp_down": ParamDef(stack + (ds // 2, d), sa + ("ff", None)),
+    }
+
+
+def _pattern(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, period, tail) of the block pattern."""
+    period = cfg.layer_pattern_period
+    return cfg.n_layers // period, period, cfg.n_layers % period
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    out: dict = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), "normal", 1.0),
+        "out_norm": ParamDef((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    if cfg.frontend == "patch":
+        out["frontend_adapter"] = ParamDef((cfg.frontend_dim, d),
+                                           (None, "embed"))
+    layers: dict = {}
+    if cfg.family == "dense":
+        stack = (cfg.n_layers,)
+        layers = {
+            "attn_norm": ParamDef(stack + (d,), ("layers", None), "ones"),
+            "attn": _attn_defs(cfg, stack),
+            "mlp_norm": ParamDef(stack + (d,), ("layers", None), "ones"),
+            "mlp": _mlp_defs(cfg, stack),
+        }
+    elif cfg.family == "moe":
+        stack = (cfg.n_layers,)
+        layers = {
+            "attn_norm": ParamDef(stack + (d,), ("layers", None), "ones"),
+            "attn": _attn_defs(cfg, stack),
+            "mlp_norm": ParamDef(stack + (d,), ("layers", None), "ones"),
+            "moe": _moe_defs(cfg, stack),
+        }
+    elif cfg.family == "hybrid_ssm":
+        ng, period, tail = _pattern(cfg)
+        layers = {"mamba_main": _mamba_defs(cfg, (ng, period))}
+        if tail:
+            layers["mamba_tail"] = _mamba_defs(cfg, (tail,))
+        out["shared"] = {
+            "attn_norm": ParamDef((d,), (None,), "ones"),
+            "attn": _attn_defs(cfg),
+            "mlp_norm": ParamDef((d,), (None,), "ones"),
+            "mlp": _mlp_defs(cfg),
+        }
+    elif cfg.family == "xlstm":
+        ng, period, tail = _pattern(cfg)
+        if cfg.slstm_every:
+            layers = {"mlstm_main": _mlstm_defs(cfg, (ng, period - 1)),
+                      "slstm": _slstm_defs(cfg, (ng,))}
+            if tail:
+                layers["mlstm_tail"] = _mlstm_defs(cfg, (tail,))
+        else:
+            layers = {"mlstm_main": _mlstm_defs(cfg, (cfg.n_layers, 1))}
+    else:
+        raise ValueError(cfg.family)
+    out["layers"] = layers
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, p, x, positions, aux, rules=None):
+    h = common.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + common.attention(cfg, p["attn"], h, positions,
+                             impl=cfg.attn_impl, q_block=cfg.q_block)
+    h = common.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, a = common.moe_ffn(cfg, p["moe"], h, rules)
+        aux = aux + a
+    else:
+        y = common.swiglu(p["mlp"], h)
+    return x + y, aux
+
+
+def _mamba_block(cfg, p, x):
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + ssm.ssd_forward(cfg, p, h)
+
+
+def _shared_attn_block(cfg, p, x, positions):
+    h = common.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + common.attention(cfg, p["attn"], h, positions,
+                             impl=cfg.attn_impl, q_block=cfg.q_block)
+    h = common.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + common.swiglu(p["mlp"], h)
+
+
+def _mlstm_block(cfg, p, x):
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + xlstm.mlstm_forward(cfg, p, h)
+
+
+def _slstm_block(cfg, p, x):
+    h = common.rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + xlstm.slstm_forward(cfg, p, h)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.remat(fn) if cfg.remat == "block" else fn
+
+
+def _scan_blocks(cfg, body, x, stacked, *closure):
+    """scan (or unrolled loop) of ``body(x, slice) -> x`` over stacked
+    params. ``closure`` is threaded untouched."""
+    wrapped = _maybe_remat(cfg, lambda xx, sl: body(xx, sl, *closure))
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    if cfg.scan_layers:
+        def sbody(carry, sl):
+            return wrapped(carry, sl), None
+        x, _ = jax.lax.scan(sbody, x, stacked)
+        return x
+    for i in range(n):
+        x = wrapped(x, jax.tree.map(lambda a: a[i], stacked))
+    return x
+
+
+def _scan_blocks_aux(cfg, body, x, aux, stacked, *closure):
+    """Like _scan_blocks but with an (x, aux) carry (MoE aux losses)."""
+    wrapped = _maybe_remat(cfg, lambda xx, a, sl: body(xx, sl, a, *closure))
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    if cfg.scan_layers:
+        def sbody(carry, sl):
+            xx, a = carry
+            xx, a = wrapped(xx, a, sl)
+            return (xx, a), None
+        (x, aux), _ = jax.lax.scan(sbody, (x, aux), stacked)
+        return x, aux
+    for i in range(n):
+        x, aux = wrapped(x, aux, jax.tree.map(lambda a: a[i], stacked))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens, patches=None,
+                 compute_dtype=jnp.bfloat16):
+    """tokens (B,St) [+ patches (B,Fl,frontend_dim)] -> x (B,S,D)."""
+    emb = params["embed"].astype(compute_dtype)
+    x = emb[tokens]
+    if cfg.frontend == "patch":
+        assert patches is not None
+        pe = jnp.einsum("bpf,fd->bpd", patches.astype(compute_dtype),
+                        params["frontend_adapter"].astype(compute_dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    x = common.rmsnorm(x, params["out_norm"], cfg.norm_eps)
+    pref = jnp.float32 if cfg.logits_fp32 else x.dtype
+    if cfg.tie_embeddings:
+        # contract against embed directly — `.T` materialises a transposed
+        # copy of the full table (§Perf iteration D2)
+        w = params["embed"].astype(x.dtype)
+        return jnp.einsum("bsd,vd->bsv", x, w, preferred_element_type=pref)
+    w = params["lm_head"].astype(x.dtype)
+    return jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=pref)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, patches=None,
+            positions=None, rules=None):
+    """Full-sequence forward -> (logits (B,S,V), aux_loss scalar)."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed_tokens(cfg, params, tokens, patches, compute)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if rules is not None:
+        x = rules.constrain(x, "batch", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    lp = params["layers"]
+    if cfg.family in ("dense", "moe"):
+        x, aux = _scan_blocks_aux(cfg, _dense_block_scan, x, aux,
+                                  lp, cfg, positions, rules)
+    elif cfg.family == "hybrid_ssm":
+        shared = params["shared"]
+
+        def group(xx, sl):
+            period = jax.tree.leaves(sl)[0].shape[0]
+            for i in range(period):
+                xx = _mamba_block(cfg, jax.tree.map(lambda a: a[i], sl), xx)
+            return _shared_attn_block(cfg, shared, xx, positions)
+
+        x = _scan_blocks(cfg, lambda xx, sl: group(xx, sl), x,
+                         lp["mamba_main"])
+        if "mamba_tail" in lp:
+            x = _scan_blocks(cfg, lambda xx, sl: _mamba_block(cfg, sl, xx),
+                             x, lp["mamba_tail"])
+    elif cfg.family == "xlstm":
+        def group(xx, sl):
+            msl = sl["m"]
+            nm = jax.tree.leaves(msl)[0].shape[0]
+            for i in range(nm):
+                xx = _mlstm_block(cfg, jax.tree.map(lambda a: a[i], msl), xx)
+            if "s" in sl:
+                xx = _slstm_block(cfg, sl["s"], xx)
+            return xx
+
+        stacked = {"m": lp["mlstm_main"]}
+        if "slstm" in lp:
+            stacked["s"] = lp["slstm"]
+        x = _scan_blocks(cfg, group, x, stacked)
+        if "mlstm_tail" in lp:
+            x = _scan_blocks(cfg, lambda xx, sl: _mlstm_block(cfg, sl, xx),
+                             x, lp["mlstm_tail"])
+    else:
+        raise ValueError(cfg.family)
+    if rules is not None:
+        x = rules.constrain(x, "batch", None, None)
+    return lm_logits(cfg, params, x), aux
+
+
+def _dense_block_scan(x, sl, aux, cfg, positions, rules=None):
+    return _dense_block(cfg, sl, x, positions, aux, rules)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rules=None):
+    """Next-token cross entropy; label -100 is ignored."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("patches"), rules=rules)
+    labels = batch["labels"]
+    if cfg.frontend == "patch":   # patch positions carry no labels
+        pad = jnp.full((labels.shape[0], cfg.frontend_len), -100,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(valid.sum(), 1)
+    return loss + cfg.router_aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+class _L:
+    """Cache-leaf declaration: (shape, dtype, fill, logical axes)."""
+    def __init__(self, shape, dtype, fill, axes):
+        self.shape, self.dtype, self.fill, self.axes = shape, dtype, fill, axes
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Declaration tree of the decode cache. ``pos`` = tokens consumed.
+    From this single table we derive init (zeros/fills), shardings, and
+    dry-run ShapeDtypeStructs."""
+    sc = cache_len(cfg, max_len)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    long_ctx = batch == 1
+    seq_ax = "long_seq" if long_ctx else "kv_seq"
+    c: dict[str, Any] = {"pos": _L((), jnp.int32, 0, ())}
+
+    def kvcache(lead):
+        la = (None,) * len(lead)
+        return {
+            "k": _L(lead + (batch, sc, kv, hd), dtype, 0,
+                    la + ("batch", seq_ax, "kv_heads", None)),
+            "v": _L(lead + (batch, sc, kv, hd), dtype, 0,
+                    la + ("batch", seq_ax, "kv_heads", None)),
+        }
+
+    if cfg.family in ("dense", "moe"):
+        c.update(kvcache((cfg.n_layers,)))
+        c["slot_pos"] = _L((sc,), jnp.int32, -1, (None,))
+    elif cfg.family == "hybrid_ssm":
+        ng, period, tail = _pattern(cfg)
+        h, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        di, w = cfg.d_inner, cfg.conv_width
+        c["ssm_main"] = _L((ng, period, batch, h, hp, n), jnp.float32, 0,
+                           (None, None, "batch", "ssm_heads", None, None))
+        c["conv_main"] = _L((ng, period, batch, w - 1, di + 2 * n), dtype, 0,
+                            (None, None, "batch", None, "ssm_inner"))
+        if tail:
+            c["ssm_tail"] = _L((tail, batch, h, hp, n), jnp.float32, 0,
+                               (None, "batch", "ssm_heads", None, None))
+            c["conv_tail"] = _L((tail, batch, w - 1, di + 2 * n), dtype, 0,
+                                (None, "batch", None, "ssm_inner"))
+        c.update(kvcache((ng,)))
+        c["slot_pos"] = _L((sc,), jnp.int32, -1, (None,))
+    elif cfg.family == "xlstm":
+        ng, period, tail = _pattern(cfg)
+        h = cfg.n_heads
+        dm = int(cfg.d_model * cfg.mlstm_proj)
+        hp = dm // h
+        hps = cfg.d_model // h
+
+        def mstate(lead):
+            la = (None,) * len(lead)
+            return {
+                "c": _L(lead + (batch, h, hp, hp), jnp.float32, 0,
+                        la + ("batch", "heads", None, None)),
+                "n": _L(lead + (batch, h, hp), jnp.float32, 0,
+                        la + ("batch", "heads", None)),
+                "m": _L(lead + (batch, h), jnp.float32, -1e30,
+                        la + ("batch", "heads")),
+            }
+
+        if cfg.slstm_every:
+            c["mlstm_main"] = mstate((ng, period - 1))
+            c["slstm"] = {
+                "c": _L((ng, batch, h, hps), jnp.float32, 0,
+                        (None, "batch", "heads", None)),
+                "n": _L((ng, batch, h, hps), jnp.float32, 0,
+                        (None, "batch", "heads", None)),
+                "h": _L((ng, batch, cfg.d_model), dtype, 0,
+                        (None, "batch", None)),
+                "m": _L((ng, batch, h), jnp.float32, -1e30,
+                        (None, "batch", "heads")),
+            }
+            if tail:
+                c["mlstm_tail"] = mstate((tail,))
+        else:
+            c["mlstm_main"] = mstate((cfg.n_layers, 1))
+    else:
+        raise ValueError(cfg.family)
+    return c
+
+
+def _map_cache(fn, defs):
+    if isinstance(defs, _L):
+        return fn(defs)
+    return {k: _map_cache(fn, v) for k, v in defs.items()}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, rules=None):
+    defs = cache_defs(cfg, batch, max_len, dtype)
+
+    def make(l: _L):
+        arr = jnp.full(l.shape, l.fill, l.dtype)
+        if rules is not None and l.axes:
+            arr = rules.constrain(arr, *l.axes)
+        return arr
+
+    return _map_cache(make, defs)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int,
+                  rules, dtype=jnp.bfloat16):
+    """Sharded ShapeDtypeStructs of the cache (dry-run inputs)."""
+    defs = cache_defs(cfg, batch, max_len, dtype)
+    return _map_cache(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=rules.sharding(l.axes, l.shape)),
+        defs)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _attn_block_decode(cfg, p, x, kc, vc, slot_pos, pos, rules=None):
+    h = common.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    y, kc, vc, slot_pos = common.attention_decode(
+        cfg, p["attn"], h, kc, vc, slot_pos, pos, rules)
+    x = x + y
+    h = common.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = common.moe_ffn(cfg, p["moe"], h)
+    else:
+        y = common.swiglu(p["mlp"], h)
+    return x + y, kc, vc, slot_pos
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, rules=None):
+    """One decode step for all sequences. tokens (B,) int32.
+    Returns (new_cache, logits (B, V))."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(compute)[tokens][:, None]      # (B,1,D)
+    pos = cache["pos"]
+    lp = params["layers"]
+    new = dict(cache)
+    if cfg.family in ("dense", "moe"):
+        slot_pos = cache["slot_pos"]
+
+        def body(carry, sl):
+            xx, sp = carry
+            p, kc, vc = sl
+            xx, kc, vc, sp = _attn_block_decode(cfg, p, xx, kc, vc, sp, pos,
+                                                rules)
+            return (xx, sp), (kc, vc)
+
+        if cfg.scan_layers:
+            (x, slot_pos), (ks, vs) = jax.lax.scan(
+                body, (x, slot_pos), (lp, cache["k"], cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                sl = (jax.tree.map(lambda a: a[i], lp),
+                      cache["k"][i], cache["v"][i])
+                (x, slot_pos), (kc, vc) = body((x, slot_pos), sl)
+                ks.append(kc)
+                vs.append(vc)
+            ks, vs = jnp.stack(ks), jnp.stack(vs)
+        new.update(k=ks, v=vs, slot_pos=slot_pos)
+    elif cfg.family == "hybrid_ssm":
+        shared = params["shared"]
+        slot_pos = cache["slot_pos"]
+
+        def group(carry, sl):
+            xx, sp = carry
+            p, sstate, cstate, kc, vc = sl
+            period = jax.tree.leaves(p)[0].shape[0]
+            s_out, c_out = [], []
+            for i in range(period):
+                pi = jax.tree.map(lambda a: a[i], p)
+                h = common.rmsnorm(xx, pi["norm"], cfg.norm_eps)
+                y, s_new, c_new = ssm.ssd_decode(cfg, pi, h, sstate[i],
+                                                 cstate[i])
+                xx = xx + y
+                s_out.append(s_new)
+                c_out.append(c_new)
+            h = common.rmsnorm(xx, shared["attn_norm"], cfg.norm_eps)
+            y, kc, vc, sp = common.attention_decode(
+                cfg, shared["attn"], h, kc, vc, sp, pos, rules)
+            xx = xx + y
+            h = common.rmsnorm(xx, shared["mlp_norm"], cfg.norm_eps)
+            xx = xx + common.swiglu(shared["mlp"], h)
+            return (xx, sp), (jnp.stack(s_out), jnp.stack(c_out), kc, vc)
+
+        xs = (lp["mamba_main"], cache["ssm_main"], cache["conv_main"],
+              cache["k"], cache["v"])
+        if cfg.scan_layers:
+            (x, slot_pos), (sm, cm, ks, vs) = jax.lax.scan(
+                group, (x, slot_pos), xs)
+        else:
+            outs = []
+            ng = jax.tree.leaves(lp["mamba_main"])[0].shape[0]
+            for i in range(ng):
+                sl = jax.tree.map(lambda a: a[i], xs)
+                (x, slot_pos), o = group((x, slot_pos), sl)
+                outs.append(o)
+            sm, cm, ks, vs = (jnp.stack([o[j] for o in outs])
+                              for j in range(4))
+        new.update(ssm_main=sm, conv_main=cm, k=ks, v=vs, slot_pos=slot_pos)
+        if "mamba_tail" in lp:
+            def tail_body(xx, sl):
+                p, sstate, cstate = sl
+                h = common.rmsnorm(xx, p["norm"], cfg.norm_eps)
+                y, s_new, c_new = ssm.ssd_decode(cfg, p, h, sstate, cstate)
+                return xx + y, (s_new, c_new)
+
+            xs_t = (lp["mamba_tail"], cache["ssm_tail"], cache["conv_tail"])
+            if cfg.scan_layers:
+                x, (st, ct) = jax.lax.scan(tail_body, x, xs_t)
+            else:
+                st, ct = [], []
+                nt = jax.tree.leaves(lp["mamba_tail"])[0].shape[0]
+                for i in range(nt):
+                    x, (s1, c1) = tail_body(
+                        x, jax.tree.map(lambda a: a[i], xs_t))
+                    st.append(s1)
+                    ct.append(c1)
+                st, ct = jnp.stack(st), jnp.stack(ct)
+            new.update(ssm_tail=st, conv_tail=ct)
+    elif cfg.family == "xlstm":
+        def mblock(xx, p, st):
+            h = common.rmsnorm(xx, p["norm"], cfg.norm_eps)
+            y, c, n, m = xlstm.mlstm_decode(cfg, p, h, st["c"], st["n"],
+                                            st["m"])
+            return xx + y, {"c": c, "n": n, "m": m}
+
+        def group(xx, sl):
+            p, st = sl["m"]
+            nm = jax.tree.leaves(p)[0].shape[0]
+            sts = []
+            for i in range(nm):
+                xx, s1 = mblock(xx, jax.tree.map(lambda a: a[i], p),
+                                jax.tree.map(lambda a: a[i], st))
+                sts.append(s1)
+            out = {"m": jax.tree.map(lambda *a: jnp.stack(a), *sts)}
+            if "s" in sl:
+                ps, ss = sl["s"]
+                h = common.rmsnorm(xx, ps["norm"], cfg.norm_eps)
+                y, (c, n, hs, m) = xlstm.slstm_decode(
+                    cfg, ps, h, (ss["c"], ss["n"], ss["h"], ss["m"]))
+                xx = xx + y
+                out["s"] = {"c": c, "n": n, "h": hs, "m": m}
+            return xx, out
+
+        xs = {"m": (lp["mlstm_main"], cache["mlstm_main"])}
+        if "slstm" in lp:
+            xs["s"] = (lp["slstm"], cache["slstm"])
+        if cfg.scan_layers:
+            def sbody(xx, sl):
+                return group(xx, sl)
+            x, outs = jax.lax.scan(sbody, x, xs)
+        else:
+            ng = jax.tree.leaves(lp["mlstm_main"])[0].shape[0]
+            acc = []
+            for i in range(ng):
+                x, o = group(x, jax.tree.map(lambda a: a[i], xs))
+                acc.append(o)
+            outs = jax.tree.map(lambda *a: jnp.stack(a), *acc)
+        new["mlstm_main"] = outs["m"]
+        if "slstm" in lp:
+            new["slstm"] = outs["s"]
+        if "mlstm_tail" in lp:
+            p, st = lp["mlstm_tail"], cache["mlstm_tail"]
+            if cfg.scan_layers:
+                def tbody(xx, sl):
+                    pp, ss = sl
+                    xx, s1 = mblock(xx, pp, ss)
+                    return xx, s1
+                x, st_new = jax.lax.scan(tbody, x, (p, st))
+            else:
+                sts = []
+                nt = jax.tree.leaves(p)[0].shape[0]
+                for i in range(nt):
+                    x, s1 = mblock(x, jax.tree.map(lambda a: a[i], p),
+                                   jax.tree.map(lambda a: a[i], st))
+                    sts.append(s1)
+                st_new = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+            new["mlstm_tail"] = st_new
+    else:
+        raise ValueError(cfg.family)
+    new["pos"] = pos + 1
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return new, logits
+
+
+# ---------------------------------------------------------------------------
+# Batched prefill (build the cache from one full forward pass)
+# ---------------------------------------------------------------------------
+
+def _ring_pack(full, sc: int, s: int):
+    """Pack per-position k/v (B,S,...) into a ring cache (B,sc,...):
+    slot i holds the largest pos < s with pos ≡ i (mod sc); -1 = empty."""
+    slots = jnp.arange(sc)
+    pos = slots + ((s - 1 - slots) // sc) * sc             # (sc,)
+    valid = pos >= 0
+    packed = jnp.take(full, jnp.maximum(pos, 0), axis=1)
+    packed = jnp.where(valid[None, :, None, None], packed, 0)
+    return packed, jnp.where(valid, pos, -1).astype(jnp.int32)
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int,
+            patches=None, rules=None):
+    """Batched prefill: one full forward that also populates the decode
+    cache (KV rings / SSM states / LSTM states). Returns (cache, logits of
+    the last position (B, V))."""
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed_tokens(cfg, params, tokens, patches, compute)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if rules is not None:
+        x = rules.constrain(x, "batch", None, None)
+    sc = cache_len(cfg, max_len)
+    lp = params["layers"]
+    new: dict[str, Any] = {"pos": jnp.asarray(s, jnp.int32)}
+
+    def attn_with_cache(p, xx):
+        """Attention block that also returns the packed KV ring."""
+        h = common.rmsnorm(xx, p["attn_norm"], cfg.norm_eps)
+        q, k, v = common._qkv(cfg, p["attn"], h, positions)
+        kr, slot_pos = _ring_pack(k, sc, s)
+        vr, _ = _ring_pack(v, sc, s)
+        group = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(k, group, axis=2)
+        vv = jnp.repeat(v, group, axis=2)
+        scale = cfg.head_dim ** -0.5
+        if cfg.attn_impl == "blocked" and s > cfg.q_block:
+            o = common.blocked_sdpa(q, kk, vv, positions, cfg.window, scale,
+                                    cfg.q_block)
+        else:
+            mask = common._mask(positions[None], positions[None], cfg.window)
+            o = common._sdpa(q, kk, vv, mask, scale)
+        o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        y = jnp.einsum("bse,ed->bsd", o,
+                       p["attn"]["wo"].astype(xx.dtype).reshape(-1, xx.shape[-1]))
+        return xx + y, kr.astype(compute), vr.astype(compute), slot_pos
+
+    if cfg.family in ("dense", "moe"):
+        def body(xx, p):
+            xx, kr, vr, slot_pos = attn_with_cache(p, xx)
+            h = common.rmsnorm(xx, p["mlp_norm"], cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = common.moe_ffn(cfg, p["moe"], h, rules)
+            else:
+                y = common.swiglu(p["mlp"], h)
+            return xx + y, (kr, vr, slot_pos)
+
+        wrapped = _maybe_remat(cfg, body)
+        if cfg.scan_layers:
+            x, (ks, vs, sps) = jax.lax.scan(
+                lambda c, sl: wrapped(c, sl), x, lp)
+        else:
+            ks, vs, sps = [], [], []
+            n = cfg.n_layers
+            for i in range(n):
+                x, (kr, vr, sp) = wrapped(
+                    x, jax.tree.map(lambda a: a[i], lp))
+                ks.append(kr)
+                vs.append(vr)
+                sps.append(sp)
+            ks, vs, sps = jnp.stack(ks), jnp.stack(vs), jnp.stack(sps)
+        new.update(k=ks, v=vs, slot_pos=sps[0] if sps.ndim > 1 else sps)
+    elif cfg.family == "hybrid_ssm":
+        shared = params["shared"]
+
+        def group(xx, sl):
+            period = jax.tree.leaves(sl)[0].shape[0]
+            s_out, c_out = [], []
+            for i in range(period):
+                pi = jax.tree.map(lambda a: a[i], sl)
+                h = common.rmsnorm(xx, pi["norm"], cfg.norm_eps)
+                y, st, cst = ssm.ssd_forward(cfg, pi, h, return_state=True)
+                xx = xx + y
+                s_out.append(st)
+                c_out.append(cst)
+            p2 = {"attn_norm": shared["attn_norm"], "attn": shared["attn"]}
+            xx, kr, vr, slot_pos = attn_with_cache(
+                {**p2, "mlp_norm": shared["mlp_norm"]}, xx)
+            h = common.rmsnorm(xx, shared["mlp_norm"], cfg.norm_eps)
+            xx = xx + common.swiglu(shared["mlp"], h)
+            return xx, (jnp.stack(s_out), jnp.stack(c_out), kr, vr, slot_pos)
+
+        wrapped = _maybe_remat(cfg, group)
+        if cfg.scan_layers:
+            x, (sm, cm, ks, vs, sps) = jax.lax.scan(
+                lambda c, sl: wrapped(c, sl), x, lp["mamba_main"])
+        else:
+            accs = []
+            ng = jax.tree.leaves(lp["mamba_main"])[0].shape[0]
+            for i in range(ng):
+                x, o = wrapped(x, jax.tree.map(lambda a: a[i],
+                                               lp["mamba_main"]))
+                accs.append(o)
+            sm, cm, ks, vs, sps = (jnp.stack([a[j] for a in accs])
+                                   for j in range(5))
+        new.update(ssm_main=sm, conv_main=cm, k=ks, v=vs,
+                   slot_pos=sps[0] if sps.ndim > 1 else sps)
+        if "mamba_tail" in lp:
+            def tail_body(xx, p):
+                h = common.rmsnorm(xx, p["norm"], cfg.norm_eps)
+                y, st, cst = ssm.ssd_forward(cfg, p, h, return_state=True)
+                return xx + y, (st, cst)
+
+            wrapped_t = _maybe_remat(cfg, tail_body)
+            if cfg.scan_layers:
+                x, (st, ct) = jax.lax.scan(lambda c, sl: wrapped_t(c, sl),
+                                           x, lp["mamba_tail"])
+            else:
+                st, ct = [], []
+                nt = jax.tree.leaves(lp["mamba_tail"])[0].shape[0]
+                for i in range(nt):
+                    x, (s1, c1) = wrapped_t(
+                        x, jax.tree.map(lambda a: a[i], lp["mamba_tail"]))
+                    st.append(s1)
+                    ct.append(c1)
+                st, ct = jnp.stack(st), jnp.stack(ct)
+            new.update(ssm_tail=st, conv_tail=ct)
+    elif cfg.family == "xlstm":
+        def mblock_state(xx, p):
+            h = common.rmsnorm(xx, p["norm"], cfg.norm_eps)
+            y, c, n, m = xlstm.mlstm_forward(cfg, p, h, return_state=True)
+            return xx + y, {"c": c, "n": n, "m": m}
+
+        def group(xx, sl):
+            msl = sl["m"]
+            nm = jax.tree.leaves(msl)[0].shape[0]
+            sts = []
+            for i in range(nm):
+                xx, s1 = mblock_state(xx, jax.tree.map(lambda a: a[i], msl))
+                sts.append(s1)
+            out = {"m": jax.tree.map(lambda *a: jnp.stack(a), *sts)}
+            if "s" in sl:
+                ps = sl["s"]
+                h = common.rmsnorm(xx, ps["norm"], cfg.norm_eps)
+                y, (c, n, hs, m) = xlstm.slstm_forward(cfg, ps, h,
+                                                       return_state=True)
+                xx = xx + y
+                out["s"] = {"c": c, "n": n, "h": hs, "m": m}
+            return xx, out
+
+        stacked = {"m": lp["mlstm_main"]}
+        if "slstm" in lp:
+            stacked["s"] = lp["slstm"]
+        wrapped = _maybe_remat(cfg, group)
+        if cfg.scan_layers:
+            x, outs = jax.lax.scan(lambda c, sl: wrapped(c, sl), x, stacked)
+        else:
+            acc = []
+            ng = jax.tree.leaves(lp["mlstm_main"])[0].shape[0]
+            for i in range(ng):
+                x, o = wrapped(x, jax.tree.map(lambda a: a[i], stacked))
+                acc.append(o)
+            outs = jax.tree.map(lambda *a: jnp.stack(a), *acc)
+        new["mlstm_main"] = outs["m"]
+        if "slstm" in lp:
+            new["slstm"] = outs["s"]
+        if "mlstm_tail" in lp:
+            wrapped_t = _maybe_remat(cfg, mblock_state)
+            if cfg.scan_layers:
+                x, st_new = jax.lax.scan(lambda c, sl: wrapped_t(c, sl),
+                                         x, lp["mlstm_tail"])
+            else:
+                sts = []
+                nt = jax.tree.leaves(lp["mlstm_tail"])[0].shape[0]
+                for i in range(nt):
+                    x, s1 = wrapped_t(
+                        x, jax.tree.map(lambda a: a[i], lp["mlstm_tail"]))
+                    sts.append(s1)
+                st_new = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+            new["mlstm_tail"] = st_new
+    else:
+        raise ValueError(cfg.family)
+    logits = lm_logits(cfg, params, x[:, -1:])[:, 0]
+    return new, logits

@@ -1,0 +1,104 @@
+"""Parameter declaration machinery.
+
+Each model family declares its parameters once as a nested dict of
+``ParamDef`` (shape + logical axes + init); from that single table we
+derive initialisation, sharding specs (structure-match guaranteed),
+parameter counts, and ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.rules import MeshRules
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                  # logical axis names (len == len(shape))
+    init: str = "normal"         # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in) with fan_in=shape[-2 or -1]
+
+    def fan_in(self) -> int:
+        if len(self.shape) == 1:
+            return self.shape[0]
+        return int(np.prod(self.shape[:-1])) if len(self.shape) == 2 else \
+            int(np.prod(self.shape[-2:-1]))
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn, defs):
+    """Map a function over every ParamDef leaf of a nested dict."""
+    if _is_def(defs):
+        return fn(defs)
+    return {k: map_defs(fn, v) for k, v in defs.items()}
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    """Initialise a parameter tree from its declaration (deterministic)."""
+    leaves = []
+
+    def collect(d, path):
+        if _is_def(d):
+            leaves.append((path, d))
+        else:
+            for k in sorted(d):
+                collect(d[k], path + (k,))
+
+    collect(defs, ())
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out: dict = {}
+    for (path, d), k in zip(leaves, keys):
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        else:
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(
+                max(d.shape[-2] if len(d.shape) >= 2 else d.shape[-1], 1))
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * scale
+                   ).astype(dtype)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = arr
+    return out
+
+
+def param_specs(defs, rules: MeshRules):
+    """PartitionSpec tree matching the parameter tree structure."""
+    return map_defs(lambda d: rules.spec(d.axes, d.shape), defs)
+
+
+def param_shardings(defs, rules: MeshRules):
+    return map_defs(lambda d: rules.sharding(d.axes, d.shape), defs)
+
+
+def param_structs(defs, rules: Optional[MeshRules] = None,
+                  dtype=jnp.float32):
+    """ShapeDtypeStruct tree (dry-run stand-ins; no allocation)."""
+    if rules is None:
+        return map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+    return map_defs(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, dtype, sharding=rules.sharding(d.axes, d.shape)),
+        defs)
+
+
+def count_params(defs) -> int:
+    total = 0
+
+    def add(d):
+        nonlocal total
+        total += int(np.prod(d.shape))
+        return d
+
+    map_defs(add, defs)
+    return total

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) layer: chunked matmul training path + recurrent decode.
+
+TPU adaptation (DESIGN.md §3/§7): the SSD inter-chunk recurrence is a
+``jax.lax.associative_scan`` over chunk states — log-depth, loop-free HLO
+(exact in cost_analysis and MXU-friendly), instead of the sequential CUDA
+chunk scan of the reference implementation. Intra-chunk work is two
+batched matmuls per chunk, which is where the MXU time goes.
+
+Shapes: x (B,S,D) -> (B,S,D); heads H = d_inner/ssm_head_dim sharded over
+the model axis; the state dim N stays replicated (N=64).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .common import rmsnorm
+
+_LOG_MIN = -60.0
+
+
+def _depthwise_causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                           state: jnp.ndarray = None):
+    """x (B,S,C), w (W,C) depthwise causal conv. With ``state`` (B,W-1,C)
+    (decode path, S==1) returns (y, new_state)."""
+    width = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)        # (B,W,C)
+        y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32))[:, None]
+        return y.astype(x.dtype), window[:, 1:]
+    pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32)
+            * w[i].astype(jnp.float32) for i in range(width))
+    return y.astype(x.dtype), None
+
+
+def ssd_forward(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                return_state: bool = False):
+    """Training / prefill forward of one Mamba2 layer (chunked SSD).
+
+    With ``return_state`` also returns (ssm_state (B,H,hp,N), conv_state
+    (B,W-1,di+2N)) after the last position — the prefill handoff."""
+    b, s, d = x.shape
+    di, n, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, _ = _depthwise_causal_conv(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))
+    final_conv_state = conv_in[:, s - (cfg.conv_width - 1):, :]
+    xs, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    la = dt * a                                                # log-decay <=0
+
+    xh = xs.reshape(b, s, h, hp).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    bm = bmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, chunk, n)
+    lac = la.reshape(b, nc, chunk, h)
+    xbc = xbar.reshape(b, nc, chunk, h, hp)
+
+    cum = jnp.cumsum(lac, axis=2)                              # (B,nc,L,H)
+    # intra-chunk: scores[b,c,h,i,j] = (C_i·B_j)·exp(cum_i−cum_j), j<=i
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.clip(diff, _LOG_MIN, 0.0))
+    scores = cb[..., None] * decay * tri[None, None, :, :, None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xbc)
+
+    # chunk states S_c[b,c,h,n,p] = Σ_j exp(cum_L−cum_j)·B_j ⊗ xbar_j
+    tail = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, _LOG_MIN, 0.0))
+    st = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", tail, bm, xbc)
+    dchunk = jnp.exp(jnp.clip(cum[:, :, -1, :], _LOG_MIN, 0.0))  # (B,nc,H)
+
+    # inter-chunk recurrence h_c = d_c·h_{c-1} + S_c  (associative scan)
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dacc, sacc = jax.lax.associative_scan(combine, (dchunk, st), axis=1)
+    # state entering chunk c is sacc[c-1]
+    h_prev = jnp.concatenate([jnp.zeros_like(sacc[:, :1]), sacc[:, :-1]], 1)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", cm, h_prev,
+                         jnp.exp(jnp.clip(cum, _LOG_MIN, 0.0)))
+
+    y = (y_intra + y_inter).reshape(b, s, h, hp)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        # final SSM state: last entry of the inclusive chunk-state scan,
+        # transposed to the decode layout (B,H,hp,N)
+        final = sacc[:, -1].transpose(0, 1, 3, 2)          # (B,H,hp,N)
+        return out, final, final_conv_state.astype(x.dtype)
+    return out
+
+
+def ssd_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+               ssm_state: jnp.ndarray, conv_state: jnp.ndarray):
+    """One-token recurrent step. x (B,1,D); ssm_state (B,H,hp,N);
+    conv_state (B,W-1,di+2N). Returns (y, ssm_state', conv_state')."""
+    b = x.shape[0]
+    di, n, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, conv_state = _depthwise_causal_conv(conv_in, p["conv_w"],
+                                                  conv_state)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))
+    xs, bmat, cmat = jnp.split(conv_out[:, 0], [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                    # (B,H)
+
+    xh = xs.reshape(b, h, hp).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    upd = jnp.einsum("bhp,bn->bhpn", xbar, bmat.astype(jnp.float32))
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, cmat.astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, ssm_state, conv_state

@@ -1,0 +1,57 @@
+"""Model telemetry: expose internal routing decisions as mineable
+relations (the paper-technique integration point, DESIGN.md §5).
+
+``collect_moe_routing`` runs a MoE forward pass and returns the Boolean
+routing relation — for every routed (token, expert, layer) slot one
+triple. That relation IS a triadic formal context: feeding it to the
+OAC pipeline yields triclusters of co-activated (token-group × expert-
+group × layer-group), the expert-specialisation patterns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import common
+from ..core.context import PolyadicContext
+
+
+def collect_moe_routing(cfg: ModelConfig, params, tokens) -> np.ndarray:
+    """tokens (B,S) int32 -> routes (L, B, S, k) int32 expert ids."""
+    if not cfg.is_moe:
+        raise ValueError("routing telemetry needs a MoE config "
+                         "(DESIGN.md §5 Arch-applicability)")
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(compute)[tokens]
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    lp = params["layers"]
+    routes = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], lp)
+        h = common.rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        x = x + common.attention(cfg, p["attn"], h, positions,
+                                 impl=cfg.attn_impl, q_block=cfg.q_block)
+        h = common.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,de->bse", h,
+                            p["moe"]["router"].astype(h.dtype))
+        _, top_e = jax.lax.top_k(logits.astype(jnp.float32), cfg.top_k)
+        routes.append(top_e.astype(jnp.int32))
+        y, _ = common.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    return np.asarray(jnp.stack(routes))          # (L,B,S,k)
+
+
+def routing_context(cfg: ModelConfig, tokens, routes) -> PolyadicContext:
+    """(vocab-token, expert, layer) triples from collected routes."""
+    l, b, s, k = routes.shape
+    tok = np.broadcast_to(np.asarray(tokens)[None, :, :, None],
+                          routes.shape)
+    lay = np.broadcast_to(np.arange(l)[:, None, None, None], routes.shape)
+    triples = np.stack([tok.reshape(-1), routes.reshape(-1),
+                        lay.reshape(-1)], axis=1)
+    triples = np.unique(triples, axis=0)
+    return PolyadicContext((int(cfg.vocab_size), int(cfg.n_experts), l),
+                           triples)

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Training uses the parallel stabilised formulation of the mLSTM (decay-
+masked attention-like matmuls — MXU-friendly, exact under cost_analysis)
+and a ``lax.scan`` over time for the sLSTM (inherently sequential; the
+xLSTM paper keeps few sLSTM blocks for exactly this reason — the
+analysis module adds its per-step recurrent FLOPs analytically, see
+the per-layer analysis in analysis/report.py). Decode is recurrent for both.
+
+mLSTM block: up-proj ×2 → (branch, gate z); per-head q,k,v + i,f gates;
+h = (S ⊙ D) v / n; headwise norm; h ⊙ silu(z) → down-proj.
+sLSTM block: 4 gates with per-head block-diagonal recurrent matrices,
+then a gated-MLP (projection factor 4/3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .common import rmsnorm
+
+_NEG = -1e30
+
+
+def _headwise_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+                      eps: float) -> jnp.ndarray:
+    """x (B,S,H,P); normalise per head (GroupNorm analogue)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y.reshape(*x.shape[:-2], -1)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunk(q, k, v, i_raw, logf, state):
+    """One chunk of the chunkwise-parallel stabilised mLSTM.
+
+    q/k/v (B,L,H,P); i_raw/logf (B,L,H); state = (C (B,H,P,P), n (B,H,P),
+    m (B,H)). Returns (h (B,L,H,P), new_state). Exactly composes the
+    per-step recurrence of ``mlstm_decode`` over L steps.
+    """
+    cum = jnp.cumsum(logf, axis=1)                        # (B,L,H)
+    total = cum[:, -1]                                    # (B,H)
+    c_prev, n_prev, m_prev = state
+    l = q.shape[1]
+    # intra-chunk decay matrix
+    logd = (cum[:, :, None, :] - cum[:, None, :, :]
+            + i_raw[:, None, :, :])                       # (B,i,j,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+    logd = jnp.where(tri, logd, _NEG)
+    m_intra = jnp.max(logd, axis=2)                       # (B,L,H)
+    m_inter = cum + m_prev[:, None, :]                    # decay from start
+    m_t = jnp.maximum(m_intra, m_inter)
+    dmat = jnp.exp(logd - m_t[:, :, None, :])
+    scores = jnp.einsum("bihp,bjhp->bijh", q, k) * dmat
+    inter_w = jnp.exp(m_inter - m_t)                      # (B,L,H)
+    qc = jnp.einsum("bihp,bhpq->bihq", q, c_prev)
+    num = jnp.einsum("bijh,bjhp->bihp", scores, v) + inter_w[..., None] * qc
+    qn = jnp.einsum("bihp,bhp->bih", q, n_prev)
+    den = jnp.maximum(jnp.abs(scores.sum(axis=2) + inter_w * qn),
+                      jnp.exp(-m_t))
+    hv = num / den[..., None]
+    # state update (decay everything to the chunk end)
+    logw = total[:, None, :] - cum + i_raw                # (B,L,H)
+    m_w = logw.max(axis=1)                                # (B,H)
+    m_new = jnp.maximum(total + m_prev, m_w)
+    carry_w = jnp.exp(total + m_prev - m_new)
+    wgt = jnp.exp(logw - m_new[:, None, :])
+    c_new = (carry_w[..., None, None] * c_prev
+             + jnp.einsum("bjh,bjhp,bjhq->bhpq", wgt, k, v))
+    n_new = (carry_w[..., None] * n_prev
+             + jnp.einsum("bjh,bjhp->bhp", wgt, k))
+    return hv, (c_new, n_new, m_new)
+
+
+def mlstm_forward(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                  return_state: bool = False):
+    """Parallel (training/prefill) mLSTM block. x (B,S,D) -> (B,S,D).
+    With ``return_state``: also (C (B,H,P,P), n (B,H,P), m (B,H)).
+
+    Sequences longer than ``cfg.ssm_chunk`` run the chunkwise-parallel
+    form (lax.scan over chunks carrying (C,n,m)): peak decay-matrix memory
+    drops from O(S²·H) to O(L²·H) and FLOPs from O(S²) to O(S·L) — the
+    §Perf X1 iteration (the monolithic form was 600 s memory-bound at
+    32k). Short sequences keep the one-shot S×S form (identical math).
+    """
+    b, s, d = x.shape
+    dm = int(d * cfg.mlstm_proj)
+    h = cfg.n_heads
+    hp = dm // h
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    u, z = jnp.split(up, 2, axis=-1)                      # (B,S,dm) each
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"].astype(x.dtype)) / np.sqrt(hp)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(x.dtype))
+    q = q.reshape(b, s, h, hp).astype(jnp.float32)
+    k = k.reshape(b, s, h, hp).astype(jnp.float32)
+    v = v.reshape(b, s, h, hp).astype(jnp.float32)
+    i_raw = jnp.einsum("bse,eh->bsh", u, p["wi"].astype(x.dtype)
+                       ).astype(jnp.float32)
+    f_raw = jnp.einsum("bse,eh->bsh", u, p["wf"].astype(x.dtype)
+                       ).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw)                      # (B,S,H)
+
+    chunk = cfg.ssm_chunk or 256
+    state0 = (jnp.zeros((b, h, hp, hp), jnp.float32),
+              jnp.zeros((b, h, hp), jnp.float32),
+              jnp.full((b, h), -1e30, jnp.float32))
+    if s > chunk and s % chunk == 0:
+        nc = s // chunk
+
+        def to_chunks(a):
+            return jnp.moveaxis(
+                a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+        def body(st, ch):
+            hv_c, st = _mlstm_chunk(*ch, st)
+            return st, hv_c
+
+        xs = tuple(to_chunks(a) for a in (q, k, v, i_raw, logf))
+        state, hv = jax.lax.scan(body, state0, xs)
+        hv = jnp.moveaxis(hv, 0, 1).reshape(b, s, h, hp)
+    else:
+        hv, state = _mlstm_chunk(q, k, v, i_raw, logf, state0)
+    c_fin, n_fin, m_fin = state
+    hv = _headwise_rmsnorm(hv, p["norm_scale"], cfg.norm_eps)  # (B,S,dm)
+    out = hv.astype(x.dtype) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(x.dtype))
+    if return_state:
+        return y, c_fin, n_fin, m_fin
+    return y
+
+
+def mlstm_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                 c_state: jnp.ndarray, n_state: jnp.ndarray,
+                 m_state: jnp.ndarray):
+    """Recurrent step. x (B,1,D); c (B,H,P,P); n (B,H,P); m (B,H)."""
+    b, _, d = x.shape
+    dm = int(d * cfg.mlstm_proj)
+    h = cfg.n_heads
+    hp = dm // h
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    u, z = jnp.split(up, 2, axis=-1)
+    u1 = u[:, 0]
+    q = (u1 @ p["wq"].astype(x.dtype)).reshape(b, h, hp).astype(jnp.float32)
+    k = (u1 @ p["wk"].astype(x.dtype)).reshape(b, h, hp).astype(jnp.float32)
+    k = k / np.sqrt(hp)
+    v = (u1 @ p["wv"].astype(x.dtype)).reshape(b, h, hp).astype(jnp.float32)
+    i_raw = (u1 @ p["wi"].astype(x.dtype)).astype(jnp.float32)   # (B,H)
+    f_raw = (u1 @ p["wf"].astype(x.dtype)).astype(jnp.float32)
+
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m_state, i_raw)
+    alpha = jnp.exp(logf + m_state - m_new)
+    beta = jnp.exp(i_raw - m_new)
+    c_state = (c_state * alpha[..., None, None]
+               + beta[..., None, None] * k[..., :, None] * v[..., None, :])
+    n_state = n_state * alpha[..., None] + beta[..., None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, c_state)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_state)),
+                      jnp.exp(-m_new))
+    hv = (num / den[..., None])[:, None]                  # (B,1,H,P)
+    hv = _headwise_rmsnorm(hv, p["norm_scale"], cfg.norm_eps)
+    out = hv.astype(x.dtype) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(x.dtype))
+    return y, c_state, n_state, m_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_step(cfg: ModelConfig, p, carry, gx):
+    """One recurrence step. carry = (c, n, hs, m) each (B,H,P) / m (B,H);
+    gx = precomputed input projections (B, 4, D)."""
+    c, n, hs, m = carry
+    b = c.shape[0]
+    h, hp = cfg.n_heads, cfg.d_model // cfg.n_heads
+    hr = hs.reshape(b, h, hp)
+    rec = jnp.einsum("bhp,ghpq->bghq", hr,
+                     p["r_gates"].astype(hs.dtype))        # (B,4,H,P)
+    g = gx.reshape(b, 4, h, hp).astype(jnp.float32) + rec.astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    i_raw = i_raw + p["b_i"].astype(jnp.float32).reshape(h, hp)
+    f_raw = f_raw + p["b_f"].astype(jnp.float32).reshape(h, hp)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m[..., None], i_raw).max(-1)   # (B,H) shared
+    alpha = jnp.exp(logf + m[..., None] - m_new[..., None])
+    beta = jnp.exp(i_raw - m_new[..., None])
+    c = alpha * c.reshape(b, h, hp) + beta * jnp.tanh(z_raw)
+    n = alpha * n.reshape(b, h, hp) + beta
+    hv = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    hs_new = hv.reshape(b, -1).astype(hs.dtype)
+    return (c.reshape(b, h, hp), n.reshape(b, h, hp), hs_new, m_new), hs_new
+
+
+def slstm_forward(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                  return_state: bool = False):
+    """sLSTM block (sequential over S). x (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    h, hp = cfg.n_heads, d // cfg.n_heads
+    gx = jnp.einsum("bsd,dge->bsge", x,
+                    p["w_gates"].astype(x.dtype).reshape(d, 4, d))
+    carry = (jnp.zeros((b, h, hp), jnp.float32),
+             jnp.zeros((b, h, hp), jnp.float32),
+             jnp.zeros((b, d), x.dtype),
+             jnp.full((b, h), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(
+        lambda c, g: _slstm_step(cfg, p, c, g),
+        carry, gx.transpose(1, 0, 2, 3))
+    hs = hs.transpose(1, 0, 2)                             # (B,S,D)
+    hs = rmsnorm(hs, p["norm_scale"], cfg.norm_eps)
+    # gated MLP, projection factor slstm_proj
+    up = jnp.einsum("bsd,de->bse", hs.astype(x.dtype),
+                    p["w_mlp_up"].astype(x.dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bse,ed->bsd", jax.nn.gelu(g) * u,
+                   p["w_mlp_down"].astype(x.dtype))
+    if return_state:
+        return y, final
+    return y
+
+
+def slstm_decode(cfg: ModelConfig, p: dict, x: jnp.ndarray, state):
+    """One-token step; state = (c, n, hs, m)."""
+    d = x.shape[-1]
+    gx = jnp.einsum("bsd,dge->bsge", x,
+                    p["w_gates"].astype(x.dtype).reshape(d, 4, d))[:, 0]
+    state, hs = _slstm_step(cfg, p, state, gx)
+    hs = rmsnorm(hs[:, None], p["norm_scale"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", hs.astype(x.dtype),
+                    p["w_mlp_up"].astype(x.dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bse,ed->bsd", jax.nn.gelu(g) * u,
+                   p["w_mlp_down"].astype(x.dtype))
+    return y, state

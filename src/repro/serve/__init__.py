@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill+decode engine over the model API."""
+from .engine import GenerationResult, ServeEngine
+
+__all__ = ["ServeEngine", "GenerationResult"]

@@ -1,0 +1,129 @@
+"""Batched serving engine (prefill + ragged decode).
+
+Ragged prompt batching without masks or cache surgery: prefill runs on the
+*common prefix* (min prompt length), then the decode loop *replays* each
+sequence's remaining prompt tokens by teacher forcing — ``decode_step``
+takes a (B,) token vector, so every step each slot independently feeds
+either its next prompt token (still inside its prompt) or its previously
+sampled token (generating). Correct for causal LMs with per-sequence
+positions identical, which holds because every slot advances one position
+per step.
+
+The same engine object serves both `serve.py` (throughput runs) and the
+examples; on TPU the jit'd prefill/decode are the production steps the
+dry-run lowers for the decode/prefill cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.api import get_model
+from ..sharding.rules import MeshRules
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: list                  # list[list[int]] generated per request
+    prefill_s: float
+    decode_s: float
+    steps: int
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = sum(len(t) for t in self.tokens)
+        return n / self.decode_s if self.decode_s else float("inf")
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 2048,
+                 rules: Optional[MeshRules] = None,
+                 temperature: float = 0.0, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg, self.params, self.rules = cfg, params, rules
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.model = get_model(cfg)
+        self._key = jax.random.PRNGKey(seed)
+
+        def prefill(p, tokens):
+            return self.model.prefill(cfg, p, {"tokens": tokens}, max_len,
+                                      rules)
+
+        def decode(p, cache, tok, key, temp):
+            cache, logits = self.model.decode_step(cfg, p, cache, tok, rules)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            sampled = jax.random.categorical(key, logits / jnp.maximum(
+                temp, 1e-6), axis=-1).astype(jnp.int32)
+            nxt = jnp.where(temp > 0, sampled, greedy)
+            return cache, nxt
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    # -- batched generation ---------------------------------------------------
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 32) -> GenerationResult:
+        b = len(prompts)
+        lens = np.array([len(p) for p in prompts])
+        if (lens <= 0).any():
+            raise ValueError("empty prompt")
+        s_min = int(lens.min())
+        s_max = int(lens.max())
+        total = s_max + max_new_tokens
+        if total > self.max_len and self.cfg.window is None:
+            raise ValueError(f"total {total} exceeds engine max_len "
+                             f"{self.max_len}")
+        # right-pad prompts; padding is only read by the replay logic below
+        pad = np.zeros((b, s_max), np.int32)
+        for i, p in enumerate(prompts):
+            pad[i, :len(p)] = p
+
+        t0 = time.time()
+        cache, logits = jax.block_until_ready(
+            self._prefill(self.params, jnp.asarray(pad[:, :s_min])))
+        prefill_s = time.time() - t0
+
+        # per-slot cursor: absolute position of the next token to *feed*
+        cursor = np.full((b,), s_min)
+        last = np.asarray(jnp.argmax(logits, axis=-1))     # next-token guess
+        done = np.zeros((b,), bool)
+        out: list[list[int]] = [[] for _ in range(b)]
+
+        t0 = time.time()
+        steps = 0
+        while True:
+            replaying = cursor < lens
+            full = np.array([len(o) >= max_new_tokens for o in out])
+            if (~replaying & (done | full)).all():
+                break
+            feed = np.where(replaying, pad[np.arange(b),
+                                           np.minimum(cursor, s_max - 1)],
+                            last)
+            self._key, sub = jax.random.split(self._key)
+            cache, nxt = self._decode(self.params, cache,
+                                      jnp.asarray(feed, jnp.int32), sub,
+                                      jnp.float32(self.temperature))
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            steps += 1
+            for i in range(b):
+                if replaying[i]:
+                    pass                       # still consuming the prompt
+                elif not done[i] and len(out[i]) < max_new_tokens:
+                    out[i].append(int(last[i]))
+                    if self.eos_id is not None and last[i] == self.eos_id:
+                        done[i] = True
+            last = nxt
+            cursor += 1
+            if steps > self.max_len + max_new_tokens:
+                raise RuntimeError("decode loop failed to terminate")
+        decode_s = time.time() - t0
+        return GenerationResult(out, prefill_s, decode_s, steps)

@@ -1,0 +1,3 @@
+from .rules import MeshRules, logical_spec
+
+__all__ = ["MeshRules", "logical_spec"]

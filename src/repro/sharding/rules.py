@@ -1,0 +1,119 @@
+"""Logical-axis → mesh-axis sharding rules (DESIGN.md §6).
+
+Every parameter and activation in the model layer declares *logical* axis
+names; ``MeshRules`` resolves them against a concrete mesh with
+divisibility fallback (a dimension that does not divide by its mesh axes
+is left unsharded and recorded in ``fallbacks`` — e.g. GQA kv_heads=8 on a
+16-way model axis → KV replication, the standard tp>kv regime).
+
+Default table:
+  batch            -> ("pod", "data")     data parallel
+  heads/vocab/ff/
+  moe_ff/ssm_heads -> "model"             tensor parallel (Megatron splits)
+  kv_seq           -> "model"             sequence-parallel decode caches
+  embed            -> "data" iff fsdp     ZeRO-3-style parameter sharding
+  everything else  -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> tuple of candidate mesh axes (joined)
+DEFAULT_TABLE: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "ff": ("model",),
+    "moe_ff": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "kv_seq": ("model",),
+    "long_seq": ("data", "model"),   # batch=1 long-context states
+    "experts": (),                   # EP disabled by default (see DESIGN §6)
+    "embed": (),                     # becomes ("data",) under fsdp
+    "seq": (),
+    "layers": (),
+}
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    table: dict = None
+    fsdp: bool = False
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.table is None:
+            self.table = dict(DEFAULT_TABLE)
+        if self.fsdp:
+            self.table = {**self.table, "embed": ("data",)}
+        self._axis_sizes = dict(zip(self.mesh.axis_names,
+                                    self.mesh.devices.shape))
+
+    def _mesh_axes_for(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.table.get(logical, ())
+        return tuple(a for a in axes if a in self._axis_sizes)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for dims named by logical axes; if ``shape`` is
+        given, non-dividing assignments fall back to replication."""
+        entries, used = [], set()
+        for i, name in enumerate(logical_axes):
+            axes = self._mesh_axes_for(name)
+            axes = tuple(a for a in axes if a not in used)
+            if shape is not None and axes:
+                div = int(np.prod([self._axis_sizes[a] for a in axes]))
+                if shape[i] % div != 0:
+                    # try progressively shorter prefixes of the axis tuple
+                    while axes:
+                        axes = axes[:-1]
+                        div = int(np.prod([self._axis_sizes[a]
+                                           for a in axes])) if axes else 1
+                        if axes and shape[i] % div == 0:
+                            break
+                    if not axes:
+                        self.fallbacks.append((tuple(logical_axes), i, name))
+            used.update(axes)
+            if not axes:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(axes[0])
+            else:
+                entries.append(tuple(axes))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint by logical axes (activation hints)."""
+        import jax
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(logical_axes, x.shape))
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self._axis_sizes.get(a, 1)
+                            for a in ("pod", "data")]))
+
+    @property
+    def model_size(self) -> int:
+        return self._axis_sizes.get("model", 1)
+
+
+def logical_spec(*names: Optional[str]) -> tuple:
+    """Convenience: declare logical axes of a tensor."""
+    return tuple(names)

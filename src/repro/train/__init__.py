@@ -1,0 +1,5 @@
+from .optim import adamw_init, adamw_update, zero1_shardings
+from .step import TrainConfig, make_train_step, init_train_state
+
+__all__ = ["adamw_init", "adamw_update", "zero1_shardings", "TrainConfig",
+           "make_train_step", "init_train_state"]

@@ -1,0 +1,182 @@
+"""Train-step builder: bf16 compute / fp32 master, grad accumulation,
+ZeRO-1 sharded optimizer, optional gradient compression, remat.
+
+The returned ``train_step(state, batch)`` is a single jit-able function
+whose input/output shardings are fully pinned — the same function object
+is what the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.api import get_model
+from ..models.params import param_shardings
+from ..sharding.rules import MeshRules
+from .optim import adamw_init, adamw_update, cosine_lr, zero1_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    grad_compress: bool = False    # bf16 gradients on the wire
+    zero1: bool = True             # shard master/m/v over data axes
+
+
+def init_train_state(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Master params (fp32) + AdamW moments + data cursor."""
+    model = get_model(cfg)
+    params = model.init(cfg, key, dtype)
+    return {"params": params, "opt": adamw_init(params),
+            "data_step": jnp.zeros((), jnp.int32)}
+
+
+def state_shardings(cfg: ModelConfig, rules: MeshRules, tc: TrainConfig):
+    """Sharding tree matching init_train_state's structure."""
+    model = get_model(cfg)
+    defs = model.param_defs(cfg)
+    p_shard = (zero1_shardings(defs, rules) if tc.zero1
+               else param_shardings(defs, rules))
+    from jax.sharding import NamedSharding, PartitionSpec
+    scalar = NamedSharding(rules.mesh, PartitionSpec())
+    return {"params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard, "step": scalar},
+            "data_step": scalar}
+
+
+def state_structs(cfg: ModelConfig, rules: MeshRules,
+                  tc: TrainConfig = TrainConfig()):
+    """Sharded ShapeDtypeStructs matching ``init_train_state`` — the
+    dry-run's stand-in for the training state (no allocation)."""
+    model = get_model(cfg)
+    defs = model.param_defs(cfg)
+    from ..models.params import map_defs
+    pshapes = map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    state = {"params": pshapes,
+             "opt": {"m": pshapes, "v": pshapes, "step": scalar},
+             "data_step": scalar}
+    shard = state_shardings(cfg, rules, tc)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        state, shard)
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree.map(
+        lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+
+def _cast_with_grad_layout(compute_sharding, grad_sharding, compute_dtype,
+                           wire_dtype):
+    """fp32 master -> compute-dtype TP-layout param whose *cotangent* is
+    immediately resharded to the ZeRO-1 layout in ``wire_dtype``.
+
+    Forward: the ZeRO-1 all-gather (cast + TP constraint). Backward: the
+    cotangent of a DP-replicated param is an unreduced per-shard sum;
+    constraining it to the data-sharded layout makes GSPMD emit a
+    reduce-scatter *inside the backward pass* — the full TP-layout fp32
+    gradient tree never materialises (§Perf iteration T1: 4·P/TP bytes of
+    transient grads -> P/(TP·DP) resident). ``wire_dtype`` controls the
+    reduction precision on the wire (bf16 = gradient compression)."""
+    @jax.custom_vjp
+    def f(p):
+        return jax.lax.with_sharding_constraint(
+            p.astype(compute_dtype), compute_sharding)
+
+    def fwd(p):
+        return f(p), None
+
+    def bwd(_, g):
+        g = jax.lax.with_sharding_constraint(
+            g.astype(wire_dtype), grad_sharding)
+        return (g.astype(jnp.float32),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    tc: TrainConfig = TrainConfig()):
+    model = get_model(cfg)
+    defs = model.param_defs(cfg)
+    compute_shard = param_shardings(defs, rules)   # TP layout, DP-replicated
+    grad_shard = (zero1_shardings(defs, rules) if tc.zero1
+                  else compute_shard)
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    wire_dtype = jnp.bfloat16 if tc.grad_compress else jnp.float32
+
+    def train_step(state, batch):
+        master = state["params"]
+
+        def loss_of(p_master, mb):
+            # gather-on-use + grad-layout control (see _cast_with_grad_layout)
+            cast = jax.tree.map(
+                lambda p, cs, gs: _cast_with_grad_layout(
+                    cs, gs, compute_dtype, wire_dtype)(p),
+                p_master, compute_shard, grad_shard)
+            loss, metrics = model.loss(cfg, cast, mb, rules)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+        if cfg.microbatch > 1:
+            mbs = _split_microbatches(batch, cfg.microbatch)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = grad_fn(master, mb)
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), s),
+                master, grad_shard)
+            (gsum, lsum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.microbatch, gsum)
+            loss = lsum / cfg.microbatch
+            metrics = jax.tree.map(lambda a: a[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(master, batch)
+
+        # pin the final layout (no-op when the vjp already delivered it)
+        grads = jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shard)
+
+        lr = cosine_lr(state["opt"]["step"], peak=tc.peak_lr,
+                       warmup=tc.warmup_steps, total=tc.total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            master, grads, state["opt"], lr, b1=tc.b1, b2=tc.b2,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "data_step": state["data_step"] + 1}
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                       **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, rules: MeshRules,
+                   tc: TrainConfig = TrainConfig()):
+    """jit with pinned state shardings (donated) — the production step."""
+    step = make_train_step(cfg, rules, tc)
+    shard = state_shardings(cfg, rules, tc)
+    return jax.jit(step, in_shardings=(shard, None),
+                   out_shardings=(shard, None), donate_argnums=(0,))

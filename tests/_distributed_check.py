@@ -1,0 +1,54 @@
+"""Subprocess body: run the distributed miner on an 8-device host mesh and
+compare against the single-device batch engine. Invoked by
+test_core_distributed.py; prints 'OK' on success."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+
+from repro.core import BatchMiner, DistributedMiner, pad_tuples
+from repro.data import synthetic
+
+
+def check(mesh, axes, strategy, sizes, t, theta, seed):
+    ctx = synthetic.random_context(sizes, t, seed=seed)
+    n_sh = int(np.prod([mesh.shape[a] for a in
+                        ((axes,) if isinstance(axes, str) else axes)]))
+    tuples = pad_tuples(ctx.tuples, n_sh)
+    bm = BatchMiner(sizes, theta=theta)
+    want = bm(tuples)
+    dm = DistributedMiner(sizes, mesh, axes=axes, theta=theta,
+                          strategy=strategy)
+    got = dm(tuples)
+    assert int(got.overflow) == 0, f"overflow={int(got.overflow)}"
+    for name in ["sig_lo", "sig_hi", "gen_count", "volume", "density"]:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=name)
+    # unique flags may pick different representatives per cluster; compare
+    # the *set* of (sig, density) of unique clusters instead.
+    def uniq_set(r):
+        u = np.asarray(r.is_unique)
+        return set(zip(np.asarray(r.sig_lo)[u].tolist(),
+                       np.asarray(r.sig_hi)[u].tolist()))
+    assert uniq_set(got) == uniq_set(want)
+    assert int(got.n_clusters) == int(np.asarray(want.is_unique).sum())
+    # keep counts agree
+    assert (np.asarray(got.keep).sum() == np.asarray(want.keep).sum())
+
+
+def main():
+    auto = (jax.sharding.AxisType.Auto,)
+    mesh8 = jax.make_mesh((8,), ("data",), axis_types=auto)
+    mesh2x4 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=auto * 2)
+    for strategy in ("replicate", "shuffle"):
+        check(mesh8, "data", strategy, (9, 7, 5), 160, 0.0, seed=0)
+        check(mesh8, "data", strategy, (6, 6, 6, 4), 240, 0.3, seed=1)
+        check(mesh2x4, ("pod", "data"), strategy, (9, 7, 5), 160, 0.0, seed=2)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

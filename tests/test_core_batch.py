@@ -1,0 +1,113 @@
+"""Batch JAX engine vs. the pure-python reference oracles."""
+import numpy as np
+import pytest
+
+from repro.core import BatchMiner, PolyadicContext, tricontext
+from repro.core import reference as ref
+from repro.core.postprocess import cluster_set
+from repro.data import synthetic
+
+
+def _oracle_clusters(ctx, theta=0.0):
+    _, _, _, kept = ref.multimodal_clusters(ctx, theta=theta)
+    return {tuple(tuple(sorted(c)) for c in cl) for cl in kept}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("sizes,t", [((6, 5, 4), 40), ((8, 8, 8), 120),
+                                     ((4, 3, 5, 3), 60)])
+def test_batch_matches_oracle_random(sizes, t, seed):
+    ctx = synthetic.random_context(sizes, t, seed=seed)
+    miner = BatchMiner(sizes)
+    got = cluster_set(miner.mine_context(ctx))
+    want = _oracle_clusters(ctx)
+    assert got == want
+
+
+def test_batch_matches_online_oac_prime():
+    """Triadic case: unique clusters == the online Alg. 1's unique set."""
+    ctx = synthetic.random_context((7, 6, 5), 80, seed=3)
+    algo = ref.online_oac_prime(ctx)
+    want = {tuple(tuple(sorted(c)) for c in t) for t in algo.unique()}
+    miner = BatchMiner(ctx.sizes)
+    got = cluster_set(miner.mine_context(ctx))
+    assert got == want
+
+
+def test_duplicate_idempotence():
+    """M/R at-least-once semantics: duplicated tuples change nothing."""
+    ctx = synthetic.random_context((6, 6, 6), 50, seed=4)
+    dup = PolyadicContext(ctx.sizes,
+                          np.concatenate([ctx.tuples, ctx.tuples[::2]]))
+    m = BatchMiner(ctx.sizes)
+    assert cluster_set(m.mine_context(ctx)) == cluster_set(m.mine_context(dup))
+    # densities must also be unaffected (distinct generating tuples)
+    a = dict(((tuple(tuple(sorted(c)) for c in comps)), d)
+             for comps, d in m.mine_context(ctx))
+    b = dict(((tuple(tuple(sorted(c)) for c in comps)), d)
+             for comps, d in m.mine_context(dup))
+    assert a == b
+
+
+def test_density_theta_filter():
+    ctx = synthetic.random_context((5, 5, 5), 60, seed=5)
+    _, _, density, kept = ref.multimodal_clusters(ctx, theta=0.5)
+    got = cluster_set(BatchMiner(ctx.sizes, theta=0.5).mine_context(ctx))
+    want = {tuple(tuple(sorted(c)) for c in cl) for cl in kept}
+    assert got == want
+
+
+def test_density_values_match_alg7():
+    """Per-cluster density equals the Alg. 7 estimate exactly."""
+    ctx = synthetic.random_context((6, 5, 4), 70, seed=6)
+    _, _, density, _ = ref.multimodal_clusters(ctx)
+    m = BatchMiner(ctx.sizes)
+    for comps, d in m.mine_context(ctx):
+        key = tuple(tuple(sorted(c)) for c in comps)
+        assert key in density
+        assert d == pytest.approx(density[key], rel=1e-6)
+
+
+def test_k3_single_cluster():
+    """Paper §5.1: K3 must assemble exactly one cluster (A1,A2,A3,A4)."""
+    ctx = synthetic.k3_dense_4d(n=5)
+    m = BatchMiner(ctx.sizes)
+    res = m.mine_context(ctx)
+    assert len(res) == 1
+    comps, d = res[0]
+    assert all(c == frozenset(range(5)) for c in comps)
+    assert d == pytest.approx(1.0)
+
+
+def test_k1_diagonal_holes():
+    """K1 (dense minus diagonal): every cluster's density is < 1 but high."""
+    ctx = synthetic.k1_dense_cube(n=6)
+    m = BatchMiner(ctx.sizes)
+    out = m.mine_context(ctx)
+    assert out, "K1 must produce clusters"
+    want = _oracle_clusters(ctx)
+    assert cluster_set(out) == want
+
+
+def test_k2_three_clusters():
+    ctx = synthetic.k2_three_cuboids(n=4)
+    out = BatchMiner(ctx.sizes).mine_context(ctx)
+    assert len(out) == 3
+    for comps, d in out:
+        assert d == pytest.approx(1.0)
+
+
+def test_exact_density_dense_backend():
+    """Beyond-paper exact density path equals the numpy oracle."""
+    import jax.numpy as jnp
+    from repro.core.batch import dense_tensor, fibers, exact_density_dense
+    ctx = synthetic.random_context((6, 5, 4), 50, seed=7)
+    tens = dense_tensor(jnp.asarray(ctx.tuples), ctx.sizes)
+    masks = fibers(tens, jnp.asarray(ctx.tuples))
+    dens = np.asarray(exact_density_dense(tens, masks))
+    _, uniq, _, _ = ref.multimodal_clusters(ctx)
+    for i, row in enumerate(map(tuple, ctx.tuples.tolist())):
+        cluster = tuple(
+            ref.cumulus(ctx, row, k) for k in range(3))
+        want = ref.exact_density(ctx, cluster)
+        assert dens[i] == pytest.approx(want, rel=1e-5)

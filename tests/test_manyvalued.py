@@ -1,0 +1,50 @@
+"""NOAC / δ-triclustering vs. the reference oracle (paper §3.2, §4.3)."""
+import numpy as np
+import pytest
+
+from repro.core import NOACMiner, PolyadicContext
+from repro.core import reference as ref
+from repro.core.postprocess import cluster_set
+from repro.data import synthetic
+
+
+def _oracle(ctx, delta, rho_min=0.0, minsup=0):
+    out = ref.noac(ctx.deduplicated(), delta, rho_min=rho_min, minsup=minsup)
+    return {tuple(tuple(sorted(c)) for c in cl) for cl in out}
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("delta", [0.0, 50.0, 200.0, 1e9])
+def test_noac_matches_oracle(seed, delta):
+    ctx = synthetic.random_context((7, 6, 5), 90, seed=seed, values=True)
+    got = cluster_set(NOACMiner(ctx.sizes, delta=delta).mine_context(ctx))
+    assert got == _oracle(ctx, delta)
+
+
+@pytest.mark.parametrize("rho_min,minsup", [(0.0, 2), (0.5, 0), (0.3, 2)])
+def test_noac_constraints(rho_min, minsup):
+    ctx = synthetic.random_context((6, 6, 6), 80, seed=2, values=True)
+    got = cluster_set(NOACMiner(ctx.sizes, delta=100.0, rho_min=rho_min,
+                                minsup=minsup).mine_context(ctx))
+    assert got == _oracle(ctx, 100.0, rho_min=rho_min, minsup=minsup)
+
+
+def test_noac_binary_degeneration():
+    """W={0,1}, δ=0 must reduce to prime OAC triclusters (paper §3.2)."""
+    ctx = synthetic.random_context((6, 5, 4), 60, seed=3)
+    got = cluster_set(NOACMiner(ctx.sizes, delta=0.0).mine_context(ctx))
+    _, uniq, _, _ = ref.multimodal_clusters(ctx.deduplicated())
+    want = {tuple(tuple(sorted(c)) for c in cl) for cl in uniq}
+    assert got == want
+
+
+def test_noac_4ary():
+    ctx = synthetic.random_context((5, 4, 4, 3), 70, seed=4, values=True)
+    got = cluster_set(NOACMiner(ctx.sizes, delta=75.0).mine_context(ctx))
+    assert got == _oracle(ctx, 75.0)
+
+
+def test_noac_movielens_values():
+    ctx = synthetic.movielens_like(400, seed=5).deduplicated()
+    got = cluster_set(NOACMiner(ctx.sizes, delta=1.0).mine_context(ctx))
+    assert got == _oracle(ctx, 1.0)

@@ -1,0 +1,34 @@
+"""Streaming/online engine: snapshot exactness + checkpoint/restore."""
+import numpy as np
+
+from repro.core import BatchMiner, StreamingMiner
+from repro.core.postprocess import cluster_set
+from repro.core.streaming import StreamState
+from repro.data import synthetic
+
+
+def test_snapshots_match_batch_at_every_chunk():
+    ctx = synthetic.random_context((8, 7, 6), 96, seed=0)
+    sm = StreamingMiner(ctx.sizes)
+    bm = BatchMiner(ctx.sizes)
+    for start in range(0, 96, 32):
+        sm.add(ctx.tuples[start:start + 32])
+        seen = ctx.tuples[:start + 32]
+        want = cluster_set(bm.mine_context(
+            type(ctx)(ctx.sizes, seen)))
+        got = cluster_set(sm.snapshot_clusters())
+        assert got == want
+
+
+def test_checkpoint_restore_resumes_stream():
+    ctx = synthetic.random_context((6, 6, 6), 64, seed=1)
+    sm = StreamingMiner(ctx.sizes)
+    sm.add(ctx.tuples[:32])
+    blob = sm.state.checkpoint()
+    # restart
+    sm2 = StreamingMiner(ctx.sizes)
+    sm2.state = StreamState.restore(blob)
+    sm2.add(ctx.tuples[32:])
+    bm = BatchMiner(ctx.sizes)
+    assert (cluster_set(sm2.snapshot_clusters())
+            == cluster_set(bm.mine_context(ctx)))
