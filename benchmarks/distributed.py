@@ -20,13 +20,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import numpy as np
 import jax
-from repro.core import BatchMiner, DistributedMiner, pad_tuples
+from repro.core import (BatchMiner, DistributedMiner, NOACMiner, pad_tuples,
+                        pad_values)
 from repro.data import synthetic
+from repro.launch.mesh import make_mesh
 from repro.analysis.hlo import profile_module
 
 ctx = synthetic.movielens_like(n_tuples=int(%(n)d), seed=0)
-auto = (jax.sharding.AxisType.Auto,)
-mesh = jax.make_mesh((8,), ("data",), axis_types=auto)
+mesh = make_mesh((8,), ("data",))
 tuples = pad_tuples(ctx.tuples, 8)
 out = {}
 bm = BatchMiner(ctx.sizes)
@@ -38,7 +39,6 @@ for strategy in ("replicate", "shuffle"):
     r = dm(tuples); jax.block_until_ready(r.sig_lo)
     t0 = time.perf_counter(); r = dm(tuples); jax.block_until_ready(r.sig_lo)
     ms = (time.perf_counter() - t0) * 1e3
-    comp = dm._compiled if hasattr(dm, "_compiled") else None
     prof = None
     try:
         lowered = dm.lowered(tuples)
@@ -53,6 +53,24 @@ for strategy in ("replicate", "shuffle"):
                                         for k, v in prof.by_kind.items()}
         out[strategy]["coll_operand_bytes"] = prof.operand_bytes
         out[strategy]["coll_wire_bytes"] = prof.wire_bytes
+# NOAC (many-valued) through the same distributed pipeline
+vctx = synthetic.movielens_like(n_tuples=int(%(n)d), seed=0,
+                                values=True).deduplicated()
+out["noac_n_tuples"] = int(vctx.num_tuples)
+vt = pad_tuples(vctx.tuples, 8); vv = pad_values(vctx.values, 8)
+nm = NOACMiner(vctx.sizes, delta=1.0)
+r = nm(vt, vv); jax.block_until_ready(r.sig_lo)
+t0 = time.perf_counter(); r = nm(vt, vv); jax.block_until_ready(r.sig_lo)
+out["noac_batch_1dev_ms"] = (time.perf_counter() - t0) * 1e3
+for strategy in ("replicate", "shuffle"):
+    dm = DistributedMiner(vctx.sizes, mesh, axes="data", strategy=strategy,
+                          delta=1.0)
+    r = dm(vt, vv); jax.block_until_ready(r.sig_lo)
+    t0 = time.perf_counter(); r = dm(vt, vv); jax.block_until_ready(r.sig_lo)
+    out["noac_" + strategy] = {
+        "ms": (time.perf_counter() - t0) * 1e3,
+        "n_clusters": int(np.asarray(r.is_unique).sum()),
+        "overflow": int(getattr(r, "overflow", 0))}
 print("RESULT " + json.dumps(out))
 '''
 
@@ -78,6 +96,12 @@ def run(n_tuples: int = 40_000):
         d = out[s]
         rows.append([s, f"{d['ms']:.1f}", f"{d['n_clusters']:,}",
                      f"{d.get('coll_wire_bytes', 0) / 1e6:.2f}MB"])
+    rows.append(["noac batch (1 dev)", f"{out['noac_batch_1dev_ms']:.1f}",
+                 "-", "-"])
+    for s in ("replicate", "shuffle"):
+        d = out[f"noac_{s}"]
+        rows.append([f"noac {s}", f"{d['ms']:.1f}", f"{d['n_clusters']:,}",
+                     "-"])
     print_table(f"Distributed mining, 8-device mesh, |I|={n_tuples:,}",
                 ["engine", "ms", "#clusters", "collective wire"], rows)
     save_json("distributed.json", out)

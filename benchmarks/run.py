@@ -3,13 +3,59 @@
 One module per paper table/figure (+ the distributed mesh benchmark).
 ``--scale`` shrinks dataset sizes to the CPU budget (default settings
 finish in a few minutes on one core); every run saves raw JSON under
-results/.
+results/, plus a machine-readable ``BENCH_mining.json`` summary with
+per-backend/variant wall-time and tuples/sec so the perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
+
+
+def _mining_summary(results: dict, scale: float) -> dict:
+    """Normalise each job's raw output to rows of
+    {backend, variant, dataset, n_tuples, ms, tuples_per_s}."""
+    rows = []
+
+    def row(backend, variant, dataset, n, ms, **extra):
+        if not n or ms is None:
+            return
+        rows.append({"backend": backend, "variant": variant,
+                     "dataset": dataset, "n_tuples": int(n),
+                     "ms": float(ms),
+                     "tuples_per_s": float(n) / (float(ms) / 1e3)
+                     if ms else 0.0, **extra})
+
+    for r in (results.get("table4") or {}).values():
+        row("batch", "prime", "movielens-like", r["tuples"], r["total_ms"])
+    for r in (results.get("scaling") or {}).get("fig2", []):
+        row("batch", "prime", "movielens-like", r["n"], r["ms"])
+    for r in (results.get("scaling") or {}).get("fig3", []):
+        row("batch", "noac", "frames-like", r["n"], r["ms"],
+            params=r.get("params"))
+    for r in (results.get("scaling") or {}).get("noac_distributed", []):
+        row("distributed", "noac", "frames-like", r["n"], r["ms"],
+            strategy=r["strategy"])
+    for r in (results.get("scaling") or {}).get("streaming", []):
+        row("streaming", "prime", "movielens-like", r["n"],
+            r["mean_snapshot_ms"], mode=r["mode"],
+            snapshots=r["snapshots"])
+    for r in (results.get("table5") or []):
+        row("batch", "noac", "frames-like", r["n"], r["par_ms"])
+        row("reference", "noac", "frames-like", r["n"], r["seq_ms"])
+    dist = results.get("distributed") or {}
+    for strategy in ("replicate", "shuffle"):
+        for variant, key in (("prime", strategy), ("noac",
+                                                   f"noac_{strategy}")):
+            d = dist.get(key)
+            if d:
+                n = (dist.get("noac_n_tuples") if variant == "noac"
+                     else dist.get("n_tuples"))  # noac mines deduplicated
+                row("distributed", variant, "movielens-like", n, d["ms"],
+                    strategy=strategy, devices=8)
+    return {"scale": scale, "rows": rows}
 
 
 def main(argv=None):
@@ -23,6 +69,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import distributed, scaling, table3, table4, table5
+    from .common import save_json
+    n_dist = int(320_000 * args.scale)
     jobs = {
         "table3": lambda: table3.run(scale=args.scale * 3,
                                      repeat=args.repeat),
@@ -31,18 +79,23 @@ def main(argv=None):
                                      repeat=args.repeat),
         "scaling": lambda: scaling.run(scale=args.scale,
                                        repeat=args.repeat),
-        "distributed": lambda: distributed.run(
-            n_tuples=int(320_000 * args.scale)),
+        "distributed": lambda: distributed.run(n_tuples=n_dist),
     }
     only = [s for s in args.only.split(",") if s] or list(jobs)
     rc = 0
+    results = {}
     for name in only:
         print(f"\n######## {name} ########", flush=True)
         try:
-            jobs[name]()
+            results[name] = jobs[name]()
         except Exception:
             traceback.print_exc()
             rc = 1
+    if results.get("distributed") is not None:
+        results["distributed"]["n_tuples"] = n_dist
+    path = save_json("BENCH_mining.json",
+                     _mining_summary(results, args.scale))
+    print(f"\n[bench] wrote {path}")
     return rc
 
 

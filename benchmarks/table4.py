@@ -1,11 +1,14 @@
 """Paper Table 4: per-stage breakdown + cluster counts on MovieLens-scale
 data (100k → 1M tuples) and BibSonomy-like.
 
-Our three stages map to: Stage 1 = per-mode sort/segment/hash (cumuli),
-Stage 2 = gather + signature mix (assembly), Stage 3 = global signature
-sort (dedup + density). The stage split is measured by running the jit'd
+The split follows the unified pipeline (DESIGN.md §3): ``sort`` =
+per-mode lexicographic sort + segmentation (Stage 1 skeleton), ``comp``
+= component operator (hashing/segment aggregation) + gather + signature
+mix (Stage 1 hashing + Stage 2 of the paper), ``dedup`` = global
+signature sort + density (Stage 3). Measured by running the jit'd
 sub-pipelines separately (each includes its own data movement, like the
-paper's per-M/R-job wall times include shuffle I/O).
+paper's per-M/R-job wall times include shuffle I/O). Note: revisions
+before the unified pipeline attributed hashing to the first column.
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import BatchMiner
-from repro.core import batch as B
+from repro.core import pipeline as P
 from repro.data import synthetic as S
 
 from .common import print_table, save_json, timeit
@@ -25,21 +28,21 @@ def _stage_times(miner: BatchMiner, tuples, repeat: int = 3):
     t = jnp.asarray(tuples, jnp.int32)
     n = t.shape[1]
 
-    s1 = jax.jit(lambda tt: [B.mode_cumuli(tt, k, miner._lo[k],
-                                           miner._hi[k]) for k in range(n)])
-    modes = s1(t)
-    t1, modes = timeit(s1, t, repeat=repeat)
+    s1 = jax.jit(lambda tt: [P.sort_mode(tt, k) for k in range(n)])
+    sms = s1(t)
+    t1, sms = timeit(s1, t, repeat=repeat)
 
-    def s2(tt, ms):
-        per_lo = [m.sig_lo[m.seg_of_tuple] for m in ms]
-        per_hi = [m.sig_hi[m.seg_of_tuple] for m in ms]
-        return B._mix_signatures(per_lo, per_hi)
+    def s2(tt, sms):
+        comps = [P.prime_components(sm, miner._lo[k], miner._hi[k])
+                 for k, sm in enumerate(sms)]
+        return P.mix_signatures([c.sig_lo for c in comps],
+                                [c.sig_hi for c in comps])
 
     s2j = jax.jit(s2)
-    t2, (sig_lo, sig_hi) = timeit(s2j, t, modes, repeat=repeat)
+    t2, (sig_lo, sig_hi) = timeit(s2j, t, sms, repeat=repeat)
 
     # stage 3 (global signature sort + density) = full − stage1 − stage2
-    full = jax.jit(lambda tt: B.mine(tt, miner._lo, miner._hi))
+    full = jax.jit(lambda tt: P.mine_tuples(tt, miner._lo, miner._hi))
     t_all, _ = timeit(full, t, repeat=repeat)
     t3 = max(t_all - t1 - t2, 0.0)
     return t1, t2, t3, t_all
@@ -63,10 +66,10 @@ def run(scale: float = 0.2, repeat: int = 3):
                      f"{t1 * 1e3:,.0f}", f"{t2 * 1e3:,.0f}",
                      f"{t3 * 1e3:,.0f}", f"{n_cl:,}"])
         raw[name] = {"tuples": n, "total_ms": t_all * 1e3,
-                     "stage1_ms": t1 * 1e3, "stage2_ms": t2 * 1e3,
-                     "stage3_ms": t3 * 1e3, "clusters": n_cl}
+                     "sort_ms": t1 * 1e3, "component_ms": t2 * 1e3,
+                     "dedup_ms": t3 * 1e3, "clusters": n_cl}
     print_table("Table 4 — stage breakdown (ms)",
-                ["dataset", "|I|", "total", "1st", "2nd", "3rd",
+                ["dataset", "|I|", "total", "sort", "comp", "dedup",
                  "#clusters"], rows)
     save_json("table4.json", raw)
     return raw

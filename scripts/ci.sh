@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# CI entry point: install dev deps and run the tier-1 suite (ROADMAP.md).
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install --quiet -r requirements-dev.txt
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

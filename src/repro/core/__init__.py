@@ -1,6 +1,10 @@
 """Core: the paper's primary contribution — prime OAC / multimodal
-clustering engines (batch, distributed, streaming, many-valued)."""
+clustering engines (batch, distributed, streaming, many-valued), all
+composed from the shared Stage-1/2/3 pipeline (``core.pipeline``) and
+selected through the engine registry: ``mine(ctx, backend=..., variant=...)``."""
 from .multimodal import (BatchMiner, DistributedMiner, StreamingMiner,
                          NOACMiner, MiningResult, DistributedResult,
-                         NOACResult, PolyadicContext, tricontext,
-                         from_named_triples, pad_tuples, make_miner)
+                         NOACResult, PipelineResult, PolyadicContext,
+                         tricontext, from_named_triples, pad_tuples,
+                         pad_values, make_miner, mine, MineRun,
+                         available_engines, resolve_engine)

@@ -1,27 +1,22 @@
-"""Batch (single-shard) JAX engine for prime OAC / multimodal clustering.
+"""Batch (single-shard) engine for prime OAC / multimodal clustering.
 
-TPU-native reformulation of the paper's dictionaries (DESIGN.md §3):
+A thin driver over the shared Stage-1/2/3 pipeline (``core.pipeline``,
+DESIGN.md §3) with the *prime cumulus* component operator:
 
-* The Hadoop shuffle-by-subrelation of Stage 1 becomes a **lexicographic
-  sort** of the tuple table by the N-1 "other" columns of each mode.
-  After the sort, every cumulus is a *contiguous slice* of the sorted
-  mode-k column — the cumulus tables of the paper shrink from
-  ``O(|I|·Σ|A_j|)`` dictionary bytes to ``O(|I|)`` (start, length) ranges.
-* Stage 2 (re-join of cumuli to generating tuples) becomes an inverse
-  permutation gather.
-* Stage 3 (dedup + density) is done on order-independent 2×32-bit
-  signatures: ``sig_k(segment) = Σ_{distinct e} r_k[e] (mod 2^32)``,
-  mixed across modes; duplicates and filters are resolved by one more
-  sort over signatures. Density is the paper-faithful Alg. 7 estimate
-  ``#distinct generating tuples / volume``.
+* Stage 1's Hadoop shuffle-by-subrelation becomes a lexicographic sort of
+  the tuple table by the N-1 "other" columns of each mode; every cumulus
+  is then a contiguous slice of the sorted mode-k column.
+* Stage 2 is an inverse-permutation gather of per-segment aggregates.
+* Stage 3 dedups on order-independent 2×32-bit set signatures and
+  estimates density as Alg. 7's ``#distinct generating tuples / volume``.
 
-All shapes are static in ``T`` (number of tuples) and ``N`` (arity), so the
-whole pipeline jits once per context shape. Everything here is also the
-per-shard compute of the distributed engine (core/distributed.py).
+The same jitted pipeline is the per-shard compute of the distributed
+engine (core/distributed.py) and the post-merge compute of the streaming
+engine (core/streaming.py).  This module adds only the dense validation
+backend (small contexts; exact density oracle for the Pallas kernel).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional, Sequence
 
@@ -29,223 +24,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import pipeline as P
 from .context import PolyadicContext
 
-# Per-mode multipliers for mixing mode signatures into a cluster signature.
-# Odd constants (invertible mod 2^32) from splitmix64 / Weyl sequences.
-_MIX = np.array([0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
-                 0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09],
-                dtype=np.uint32)
+# Re-exported shared primitives (canonical home: core.pipeline).
+lex_perm = P.lex_perm
+segment_starts = P.segment_starts
+mode_hash_vectors = P.mode_hash_vectors
+_mix_signatures = P.mix_signatures
 
-
-def mode_hash_vectors(sizes: Sequence[int], seed: int = 0x5EED):
-    """Two independent uint32 hash vectors per mode (host-side, fixed seed)."""
-    rng = np.random.Generator(np.random.Philox(seed))
-    return [
-        (rng.integers(1, 2**32, size=n, dtype=np.uint32),
-         rng.integers(1, 2**32, size=n, dtype=np.uint32))
-        for n in sizes
-    ]
-
-
-# ---------------------------------------------------------------------------
-# Sorting / segmentation primitives
-# ---------------------------------------------------------------------------
-
-def lex_perm(columns: Sequence[jnp.ndarray]) -> jnp.ndarray:
-    """Permutation sorting rows lexicographically by ``columns`` (first column
-    is the most significant key)."""
-    return jnp.lexsort(tuple(reversed(list(columns))))
-
-
-def segment_starts(sorted_key_cols: Sequence[jnp.ndarray]) -> jnp.ndarray:
-    """Boolean start-of-segment flags for already-sorted key columns."""
-    t = sorted_key_cols[0].shape[0]
-    change = jnp.zeros((t,), bool).at[0].set(True)
-    for c in sorted_key_cols:
-        change = change | jnp.concatenate(
-            [jnp.ones((1,), bool), c[1:] != c[:-1]])
-    return change
-
-
-@dataclasses.dataclass
-class ModeCumuli:
-    """Cumuli of one mode, as contiguous ranges over a sorted column.
-
-    All arrays have length T. ``seg_of_tuple`` is indexed by *original*
-    tuple order; the rest by segment id (padded to T segments).
-    """
-    perm: jnp.ndarray           # sorted order of tuples
-    sorted_vals: jnp.ndarray    # e_k column under perm
-    seg_of_tuple: jnp.ndarray   # segment id per original tuple
-    seg_start: jnp.ndarray      # first sorted position of each segment
-    seg_len: jnp.ndarray        # total entries (with duplicates)
-    seg_distinct: jnp.ndarray   # distinct entity count per segment
-    sig_lo: jnp.ndarray         # order-independent set hash per segment
-    sig_hi: jnp.ndarray
-    first_occ: jnp.ndarray      # per sorted position: first of (key, e) pair
-
-jax.tree_util.register_dataclass(
-    ModeCumuli, data_fields=["perm", "sorted_vals", "seg_of_tuple",
-                             "seg_start", "seg_len", "seg_distinct",
-                             "sig_lo", "sig_hi", "first_occ"],
-    meta_fields=[])
-
-
-def mode_cumuli(tuples: jnp.ndarray, k: int, r_lo: jnp.ndarray,
-                r_hi: jnp.ndarray) -> ModeCumuli:
-    """Stage 1 for mode k: sort by the other columns, segment, hash."""
-    t, n = tuples.shape
-    others = [tuples[:, j] for j in range(n) if j != k]
-    ek = tuples[:, k]
-    # Sort by (other columns..., e_k): duplicates of (key, e) are adjacent.
-    perm = lex_perm(others + [ek])
-    s_others = [c[perm] for c in others]
-    s_ek = ek[perm]
-    seg_flag = segment_starts(s_others)
-    seg = jnp.cumsum(seg_flag) - 1                       # segment id / position
-    first_occ = segment_starts(s_others + [s_ek])        # distinct (key, e)
-    pos = jnp.arange(t)
-    seg_start = jax.ops.segment_min(pos, seg, num_segments=t)
-    seg_len = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), seg,
-                                  num_segments=t)
-    seg_distinct = jax.ops.segment_sum(first_occ.astype(jnp.int32), seg,
-                                       num_segments=t)
-    w_lo = jnp.where(first_occ, r_lo[s_ek], jnp.uint32(0))
-    w_hi = jnp.where(first_occ, r_hi[s_ek], jnp.uint32(0))
-    sig_lo = jax.ops.segment_sum(w_lo, seg, num_segments=t)
-    sig_hi = jax.ops.segment_sum(w_hi, seg, num_segments=t)
-    seg_of_tuple = jnp.zeros((t,), jnp.int32).at[perm].set(seg)
-    return ModeCumuli(perm, s_ek, seg_of_tuple, seg_start, seg_len,
-                      seg_distinct, sig_lo, sig_hi, first_occ)
-
-
-# ---------------------------------------------------------------------------
-# Full mining pipeline (stages 1-3)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class MiningResult:
-    """Per-tuple mining output (original tuple order; length T arrays)."""
-    sig_lo: jnp.ndarray        # cluster signature of the tuple's cluster
-    sig_hi: jnp.ndarray
-    is_unique: jnp.ndarray     # bool: first generating tuple of its cluster
-    gen_count: jnp.ndarray     # distinct generating tuples of the cluster
-    volume: jnp.ndarray        # float32 Π_k |cum_k|
-    density: jnp.ndarray       # Alg. 7 estimate  gen_count / volume
-    keep: jnp.ndarray          # is_unique & density >= theta
-    seg_of_tuple: jnp.ndarray  # (N, T) segment handle per mode
-    modes: list                # list[ModeCumuli] — cumulus content handles
-
-jax.tree_util.register_dataclass(
-    MiningResult, data_fields=["sig_lo", "sig_hi", "is_unique", "gen_count",
-                               "volume", "density", "keep", "seg_of_tuple",
-                               "modes"],
-    meta_fields=[])
-
-
-def _mix_signatures(per_mode_lo, per_mode_hi):
-    lo = jnp.zeros_like(per_mode_lo[0])
-    hi = jnp.zeros_like(per_mode_hi[0])
-    for k, (slo, shi) in enumerate(zip(per_mode_lo, per_mode_hi)):
-        lo = lo + jnp.uint32(_MIX[k % len(_MIX)]) * slo
-        hi = hi + jnp.uint32(_MIX[(k + 3) % len(_MIX)]) * shi
-    # final avalanche
-    lo = (lo ^ (lo >> 16)) * jnp.uint32(0x7FEB352D)
-    hi = (hi ^ (hi >> 15)) * jnp.uint32(0x846CA68B)
-    return lo, hi
-
-
-def _tuple_first_occurrence(tuples: jnp.ndarray) -> jnp.ndarray:
-    """Bool per tuple: is it the first occurrence of an identical row."""
-    t, n = tuples.shape
-    perm = lex_perm([tuples[:, j] for j in range(n)])
-    srt = [tuples[perm, j] for j in range(n)]
-    first = segment_starts(srt)
-    return jnp.zeros((t,), bool).at[perm].set(first)
+# The unified result type; kept under its historical name.
+MiningResult = P.PipelineResult
 
 
 def mine(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
          hash_hi: Sequence[jnp.ndarray], theta: float = 0.0) -> MiningResult:
-    """The full three-stage pipeline on one shard. jit-able; T, N static."""
-    t, n = tuples.shape
-    modes = [mode_cumuli(tuples, k, hash_lo[k], hash_hi[k]) for k in range(n)]
-    # Stage 2: per-tuple cluster = gather per-mode segment aggregates.
-    per_lo = [m.sig_lo[m.seg_of_tuple] for m in modes]
-    per_hi = [m.sig_hi[m.seg_of_tuple] for m in modes]
-    sig_lo, sig_hi = _mix_signatures(per_lo, per_hi)
-    volume = jnp.ones((t,), jnp.float32)
-    for m in modes:
-        volume = volume * m.seg_distinct[m.seg_of_tuple].astype(jnp.float32)
-    # Stage 3: dedup + generating-tuple counts via one sort over signatures.
-    tuple_first = _tuple_first_occurrence(tuples)
-    order = lex_perm([sig_lo, sig_hi])
-    s_lo, s_hi = sig_lo[order], sig_hi[order]
-    cluster_start = segment_starts([s_lo, s_hi])
-    cseg = jnp.cumsum(cluster_start) - 1
-    gen = jax.ops.segment_sum(tuple_first[order].astype(jnp.int32), cseg,
-                              num_segments=t)
-    gen_of_tuple = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
-    # unique = first *distinct* generating tuple of its cluster
-    s_first = tuple_first[order]
-    pos = jnp.arange(t)
-    first_distinct_pos = jax.ops.segment_min(
-        jnp.where(s_first, pos, t), cseg, num_segments=t)
-    is_uniq_sorted = (pos == first_distinct_pos[cseg]) & s_first
-    is_unique = jnp.zeros((t,), bool).at[order].set(is_uniq_sorted)
-    density = gen_of_tuple.astype(jnp.float32) / jnp.maximum(volume, 1.0)
-    keep = is_unique & (density >= jnp.float32(theta))
-    seg_of_tuple = jnp.stack([m.seg_of_tuple for m in modes])
-    return MiningResult(sig_lo, sig_hi, is_unique, gen_of_tuple, volume,
-                        density, keep, seg_of_tuple, modes)
+    """The full three-stage prime pipeline on one shard (jit-able)."""
+    return P.mine_tuples(tuples, hash_lo, hash_hi, theta=theta)
 
 
-# ---------------------------------------------------------------------------
-# User-facing engine
-# ---------------------------------------------------------------------------
-
-class BatchMiner:
+class BatchMiner(P.PipelineMiner):
     """jit-compiled multimodal clustering of a polyadic context."""
 
     def __init__(self, sizes: Sequence[int], theta: float = 0.0,
                  seed: int = 0x5EED):
-        self.sizes = tuple(int(s) for s in sizes)
-        self.theta = float(theta)
-        vecs = mode_hash_vectors(self.sizes, seed)
-        self._lo = [jnp.asarray(lo) for lo, _ in vecs]
-        self._hi = [jnp.asarray(hi) for _, hi in vecs]
-        self._mine = jax.jit(functools.partial(mine, theta=self.theta))
-
-    def __call__(self, tuples) -> MiningResult:
-        return self._mine(jnp.asarray(tuples, jnp.int32), self._lo, self._hi)
-
-    # -- host-side materialisation (numpy; used by tests/examples) ---------
-    def materialise(self, result: MiningResult, tuples: np.ndarray,
-                    only_kept: bool = True):
-        """Extract cluster component sets for kept (or all unique) tuples."""
-        keep = np.asarray(result.keep if only_kept else result.is_unique)
-        out = []
-        modes = result.modes
-        sorted_vals = [np.asarray(m.sorted_vals) for m in modes]
-        seg_start = [np.asarray(m.seg_start) for m in modes]
-        seg_len = [np.asarray(m.seg_len) for m in modes]
-        seg_of = np.asarray(result.seg_of_tuple)
-        dens = np.asarray(result.density)
-        for i in np.nonzero(keep)[0]:
-            comps = []
-            for k in range(len(modes)):
-                s = seg_of[k, i]
-                a, l = seg_start[k][s], seg_len[k][s]
-                comps.append(frozenset(np.unique(sorted_vals[k][a:a + l])
-                                       .tolist()))
-            out.append((tuple(comps), float(dens[i])))
-        return out
+        super().__init__(sizes, theta=theta, seed=seed)
 
     def mine_context(self, ctx: PolyadicContext, only_kept: bool = True):
         if ctx.sizes != self.sizes:
             raise ValueError("context sizes mismatch")
-        res = self(ctx.tuples)
-        return self.materialise(res, ctx.tuples, only_kept)
+        return self.materialise(self(ctx.tuples), ctx.tuples, only_kept)
 
 
 # ---------------------------------------------------------------------------

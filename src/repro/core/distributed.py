@@ -1,32 +1,41 @@
-"""Distributed three-stage multimodal clustering (the paper's M/R algorithm
-mapped onto a TPU mesh with ``shard_map``; DESIGN.md §3).
+"""Distributed three-stage clustering (the paper's M/R algorithm mapped
+onto a TPU mesh with ``shard_map``; DESIGN.md §3/§7).
+
+Both the prime/multimodal variant and the many-valued NOAC variant
+(δ/ρ_min/minsup) run here: the per-shard compute is the shared pipeline
+of ``core.pipeline`` with the variant's component operator plugged in,
+so the distribution strategy is written exactly once.
 
 Tuples are block-partitioned (uniform by construction — this removes the
-paper's hash-skew problem) over one or more mesh axes. Two merge strategies,
-mirroring the centralise-vs-replicate discussion in the paper's §1:
+paper's hash-skew problem) over one or more mesh axes. Two merge
+strategies, mirroring the centralise-vs-replicate discussion in the
+paper's §1:
 
 * ``replicate`` — all-gather the (small) tuple table over the data axes and
   let every shard run the batch pipeline on the full table, keeping only its
-  own block's outputs. Communication: one all-gather of ``T×N`` int32; compute
-  is duplicated ×P. This is the paper's "data replication" choice, executed as
-  a log-depth ICI collective instead of HDFS replication-factor-3.
+  own block's outputs. Communication: one all-gather of ``T×N`` int32 (plus
+  ``T`` float32 values for NOAC); compute is duplicated ×P. This is the
+  paper's "data replication" choice, executed as a log-depth ICI collective
+  instead of HDFS replication-factor-3.
 
 * ``shuffle`` — the faithful M/R shuffle. Stage 1 routes each tuple's
-  ⟨subrelation, e_k⟩ record to the key's *owner shard* with a fixed-capacity
-  ``all_to_all`` (MoE-dispatch pattern); owners sort/segment/hash their key
-  ranges and answer with ⟨signature, cardinality⟩ per record (Stage 2 —
-  12 bytes instead of the paper's whole-cumulus shuffle). Stage 3 deduplicates
-  and counts generating tuples on 8-byte cluster signatures gathered over the
-  mesh. Skew shows up as capacity overflow and is *reported*, not silently
+  ⟨subrelation, e_k[, value]⟩ record to the key's *owner shard* with a
+  fixed-capacity ``all_to_all`` (MoE-dispatch pattern); owners
+  sort/segment/hash their key ranges — running the variant's component
+  operator (whole segment, or δ-range binary searches) — and answer with
+  ⟨signature, cardinality⟩ per record (Stage 2 — 16 bytes instead of the
+  paper's whole-cumulus shuffle). Stage 3 deduplicates and counts
+  generating tuples on 8-byte cluster signatures gathered over the mesh.
+  Skew shows up as capacity overflow and is *reported*, not silently
   dropped (a reducer-OOM analogue).
 
-Both strategies return bit-identical signatures/densities to the single-shard
-``core.batch.mine`` (same hash vectors), which is what the tests assert.
+Both strategies return bit-identical signatures/densities to the
+single-shard ``BatchMiner``/``NOACMiner`` (same hash vectors), which is
+what the tests assert.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -34,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import batch as B
+from . import pipeline as PL
 
 Axis = tuple[str, ...]
 
@@ -49,7 +58,7 @@ class DistributedResult:
     volume: jnp.ndarray
     density: jnp.ndarray
     keep: jnp.ndarray
-    cardinalities: jnp.ndarray   # (N, T) distinct |cum_k| per tuple
+    cardinalities: jnp.ndarray   # (N, T) distinct |component_k| per tuple
     n_clusters: jnp.ndarray      # scalar, replicated
     overflow: jnp.ndarray        # scalar: dropped records (0 == exact)
 
@@ -67,24 +76,6 @@ def _hash_columns(cols: Sequence[jnp.ndarray], salt: int) -> jnp.ndarray:
         h = (h ^ c.astype(jnp.uint32)) * jnp.uint32(0x9E3779B1)
         h = h ^ (h >> 15)
     return h
-
-
-def _global_sort_stage3(sig_lo, sig_hi, tuple_first, theta):
-    """Stage 3 on gathered signature arrays (identical on every shard)."""
-    t = sig_lo.shape[0]
-    order = B.lex_perm([sig_lo, sig_hi])
-    s_lo, s_hi = sig_lo[order], sig_hi[order]
-    cstart = B.segment_starts([s_lo, s_hi])
-    cseg = jnp.cumsum(cstart) - 1
-    gen = jax.ops.segment_sum(tuple_first[order].astype(jnp.int32), cseg,
-                              num_segments=t)
-    gen_of = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
-    pos = jnp.arange(t)
-    first_pos = jax.ops.segment_min(
-        jnp.where(tuple_first[order], pos, t), cseg, num_segments=t)
-    uniq_sorted = (pos == first_pos[cseg]) & tuple_first[order]
-    is_unique = jnp.zeros((t,), bool).at[order].set(uniq_sorted)
-    return gen_of, is_unique
 
 
 # ---------------------------------------------------------------------------
@@ -114,48 +105,85 @@ def _dispatch(records: jnp.ndarray, owner: jnp.ndarray, n_shards: int,
 
 
 def _owner_stage(recv: jnp.ndarray, rvalid: jnp.ndarray, n_other: int,
-                 r_lo: jnp.ndarray, r_hi: jnp.ndarray):
-    """Owner-side Reduce-1: segment received ⟨key, e⟩ records, compute per-
-    record (set-signature, distinct cardinality, tuple-first flag)."""
+                 r_lo: jnp.ndarray, r_hi: jnp.ndarray,
+                 delta: Optional[float]):
+    """Owner-side Reduce-1: segment received ⟨key, e[, value]⟩ records and
+    run the variant's component operator, producing per-record
+    (set-signature, distinct cardinality, tuple-first flag).
+
+    ``delta=None``: prime cumulus (whole key segment).  Otherwise the
+    δ-range operator — each record queries its own value window inside
+    its key segment, exactly like the single-shard pipeline."""
     big = jnp.int32(np.iinfo(np.int32).max)
     key_cols = [jnp.where(rvalid, recv[:, j], big) for j in range(n_other)]
     e_col = jnp.where(rvalid, recv[:, n_other], big)
     l = recv.shape[0]
-    perm = B.lex_perm(key_cols + [e_col])
+    if delta is not None:
+        vals = jax.lax.bitcast_convert_type(recv[:, n_other + 1], jnp.float32)
+        vals = jnp.where(rvalid, vals, jnp.float32(np.inf))
+        perm = PL.lex_perm(key_cols + [vals, e_col])
+    else:
+        vals = None
+        perm = PL.lex_perm(key_cols + [e_col])
     s_keys = [c[perm] for c in key_cols]
     s_e = e_col[perm]
     s_valid = rvalid[perm]
-    seg_flag = B.segment_starts(s_keys)
+    seg_flag = PL.segment_starts(s_keys)
     seg = jnp.cumsum(seg_flag) - 1
-    first_occ = B.segment_starts(s_keys + [s_e]) & s_valid
+    s_vals = vals[perm] if vals is not None else None
+    first_occ = PL.segment_starts(
+        s_keys + ([s_vals] if s_vals is not None else []) + [s_e]) & s_valid
     e_safe = jnp.where(s_valid, s_e, 0)
     w_lo = jnp.where(first_occ, r_lo[e_safe], jnp.uint32(0))
     w_hi = jnp.where(first_occ, r_hi[e_safe], jnp.uint32(0))
-    sig_lo = jax.ops.segment_sum(w_lo, seg, num_segments=l)
-    sig_hi = jax.ops.segment_sum(w_hi, seg, num_segments=l)
-    distinct = jax.ops.segment_sum(first_occ.astype(jnp.int32), seg,
-                                   num_segments=l)
-    # per-received-record responses, back in recv-slot order
     inv = jnp.zeros((l,), jnp.int32).at[perm].set(jnp.arange(l, dtype=jnp.int32))
-    return (sig_lo[seg][inv], sig_hi[seg][inv], distinct[seg][inv],
-            first_occ[inv])
+    if delta is None:
+        sig_lo = jax.ops.segment_sum(w_lo, seg, num_segments=l)
+        sig_hi = jax.ops.segment_sum(w_hi, seg, num_segments=l)
+        distinct = jax.ops.segment_sum(first_occ.astype(jnp.int32), seg,
+                                       num_segments=l)
+        # per-received-record responses, back in recv-slot order
+        return (sig_lo[seg][inv], sig_hi[seg][inv], distinct[seg][inv],
+                first_occ[inv])
+    # δ-range: prefix sums of masked weights + two binary searches per record
+    zero_u = jnp.zeros((1,), jnp.uint32)
+    pref_lo = jnp.concatenate([zero_u, jnp.cumsum(w_lo, dtype=jnp.uint32)])
+    pref_hi = jnp.concatenate([zero_u, jnp.cumsum(w_hi, dtype=jnp.uint32)])
+    pref_cnt = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(first_occ.astype(jnp.int32), dtype=jnp.int32)])
+    pos = jnp.arange(l)
+    seg_start = jax.ops.segment_min(pos, seg, num_segments=l)
+    seg_len = jax.ops.segment_sum(jnp.ones((l,), jnp.int32), seg,
+                                  num_segments=l)
+    a = seg_start[seg]
+    b = a + seg_len[seg]
+    lo_idx = PL.bsearch(s_vals, a, b, s_vals - jnp.float32(delta), leq=False)
+    hi_idx = PL.bsearch(s_vals, a, b, s_vals + jnp.float32(delta), leq=True)
+    sig_lo = pref_lo[hi_idx] - pref_lo[lo_idx]
+    sig_hi = pref_hi[hi_idx] - pref_hi[lo_idx]
+    distinct = pref_cnt[hi_idx] - pref_cnt[lo_idx]
+    return sig_lo[inv], sig_hi[inv], distinct[inv], first_occ[inv]
 
 
-def _shuffle_mode(tuples, k, axes, n_shards, capacity, r_lo, r_hi):
+def _shuffle_mode(tuples, values, k, axes, n_shards, capacity, r_lo, r_hi,
+                  delta):
     """Stages 1+2 of the M/R algorithm for one mode over ``axes``."""
     n = tuples.shape[1]
     others = [tuples[:, j] for j in range(n) if j != k]
     owner = (_hash_columns(others, 0xA11CE + k) %
              jnp.uint32(n_shards)).astype(jnp.int32)
-    gidx = jnp.arange(tuples.shape[0], dtype=jnp.int32)
-    records = jnp.stack(others + [tuples[:, k], gidx], axis=1)
+    cols = others + [tuples[:, k]]
+    if delta is not None:
+        cols = cols + [jax.lax.bitcast_convert_type(values, jnp.int32)]
+    records = jnp.stack(cols, axis=1)
     buf, valid, slot, ok, overflow = _dispatch(records, owner, n_shards,
                                                capacity)
     recv = jax.lax.all_to_all(buf, axes, 0, 0, tiled=True)
     rvalid = jax.lax.all_to_all(valid.astype(jnp.int32), axes, 0, 0,
                                 tiled=True).astype(bool)
     sig_lo, sig_hi, card, tfirst = _owner_stage(recv, rvalid, n - 1,
-                                                r_lo, r_hi)
+                                                r_lo, r_hi, delta)
     resp = jnp.stack([sig_lo, sig_hi, card.astype(jnp.uint32),
                       tfirst.astype(jnp.uint32)], axis=1)
     resp = jax.lax.all_to_all(resp, axes, 0, 0, tiled=True)
@@ -169,30 +197,36 @@ def _shuffle_mode(tuples, k, axes, n_shards, capacity, r_lo, r_hi):
 # ---------------------------------------------------------------------------
 
 class DistributedMiner:
-    """Multi-device multimodal clustering over a mesh.
+    """Multi-device clustering over a mesh — prime *and* NOAC variants.
 
     Args:
       sizes: mode cardinalities.
       mesh: jax Mesh containing ``axes``.
       axes: data-parallel mesh axis name(s) the tuple table is sharded over.
-      theta: minimal density threshold (paper Alg. 7 θ).
+      theta: minimal density threshold (paper Alg. 7 θ; prime variant).
       strategy: 'replicate' | 'shuffle'.
       capacity_factor: shuffle per-destination buffer slack (≥1).
+      delta: many-valued δ — switches the engine to the NOAC variant.
+      rho_min: NOAC minimal density (plays θ's role).
+      minsup: NOAC minimal per-mode cardinality.
     """
 
     def __init__(self, sizes: Sequence[int], mesh, axes="data",
                  theta: float = 0.0, strategy: str = "replicate",
                  capacity_factor: float = 2.0, seed: int = 0x5EED,
-                 max_retries: int = 4):
+                 max_retries: int = 4, delta: Optional[float] = None,
+                 rho_min: float = 0.0, minsup: int = 0):
         self.sizes = tuple(int(s) for s in sizes)
         self.mesh = mesh
         self.axes: Axis = (axes,) if isinstance(axes, str) else tuple(axes)
-        self.theta = float(theta)
+        self.delta = None if delta is None else float(delta)
+        self.theta = float(rho_min) if self.delta is not None else float(theta)
+        self.minsup = int(minsup)
         self.strategy = strategy
         self.capacity_factor = float(capacity_factor)
         self.max_retries = int(max_retries)
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
-        vecs = B.mode_hash_vectors(self.sizes, seed)
+        vecs = PL.mode_hash_vectors(self.sizes, seed)
         self._lo = [jnp.asarray(lo) for lo, _ in vecs]
         self._hi = [jnp.asarray(hi) for _, hi in vecs]
         if strategy not in ("replicate", "shuffle"):
@@ -202,17 +236,19 @@ class DistributedMiner:
 
     # -- shard bodies -------------------------------------------------------
 
-    def _body_replicate(self, tuples, lo, hi):
+    def _body_replicate(self, tuples, values, lo, hi):
         axes = self.axes
         full = jax.lax.all_gather(tuples, axes, tiled=True)
-        res = B.mine(full, lo, hi, theta=self.theta)
+        vfull = (jax.lax.all_gather(values, axes, tiled=True)
+                 if self.delta is not None else None)
+        res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
+                             theta=self.theta, minsup=self.minsup)
         # keep this shard's block
         shard_id = jax.lax.axis_index(axes)
         tl = tuples.shape[0]
         sl = jax.lax.dynamic_slice_in_dim
         start = shard_id * tl
-        card = jnp.stack([m.seg_distinct[m.seg_of_tuple] for m in res.modes])
-        out = DistributedResult(
+        return DistributedResult(
             sig_lo=sl(res.sig_lo, start, tl),
             sig_hi=sl(res.sig_hi, start, tl),
             is_unique=sl(res.is_unique, start, tl),
@@ -220,12 +256,11 @@ class DistributedMiner:
             volume=sl(res.volume, start, tl),
             density=sl(res.density, start, tl),
             keep=sl(res.keep, start, tl),
-            cardinalities=sl(card, start, tl, axis=1),
+            cardinalities=sl(res.cardinalities, start, tl, axis=1),
             n_clusters=res.is_unique.sum(),
             overflow=jnp.int32(0))
-        return out
 
-    def _body_shuffle(self, tuples, lo, hi):
+    def _body_shuffle(self, tuples, values, lo, hi):
         axes, nsh = self.axes, self.n_shards
         tl, n = tuples.shape
         capacity = max(1, int(np.ceil(tl / nsh * self.capacity_factor)))
@@ -235,7 +270,8 @@ class DistributedMiner:
         ok_all = jnp.ones((tl,), bool)
         for k in range(n):
             slo, shi, card, tfirst, ok, ovf = _shuffle_mode(
-                tuples, k, axes, nsh, capacity, lo[k], hi[k])
+                tuples, values, k, axes, nsh, capacity, lo[k], hi[k],
+                self.delta)
             per_lo.append(slo)
             per_hi.append(shi)
             cards.append(card)
@@ -243,7 +279,7 @@ class DistributedMiner:
             ok_all = ok_all & ok
             if k == 0:
                 tuple_first = tfirst
-        sig_lo, sig_hi = B._mix_signatures(per_lo, per_hi)
+        sig_lo, sig_hi = PL.mix_signatures(per_lo, per_hi)
         volume = jnp.ones((tl,), jnp.float32)
         for c in cards:
             volume = volume * c.astype(jnp.float32)
@@ -251,7 +287,7 @@ class DistributedMiner:
         g_lo = jax.lax.all_gather(sig_lo, axes, tiled=True)
         g_hi = jax.lax.all_gather(sig_hi, axes, tiled=True)
         g_tf = jax.lax.all_gather(tuple_first, axes, tiled=True)
-        gen_of, is_unique = _global_sort_stage3(g_lo, g_hi, g_tf, self.theta)
+        gen_of, is_unique = PL.stage3_dedup(g_lo, g_hi, g_tf)
         shard_id = jax.lax.axis_index(axes)
         sl = jax.lax.dynamic_slice_in_dim
         start = shard_id * tl
@@ -259,6 +295,9 @@ class DistributedMiner:
         uniq_l = sl(is_unique, start, tl)
         density = gen_l.astype(jnp.float32) / jnp.maximum(volume, 1.0)
         keep = uniq_l & (density >= jnp.float32(self.theta))
+        if self.minsup:
+            for c in cards:
+                keep = keep & (c >= self.minsup)
         overflow = jax.lax.psum(overflow, axes)
         return DistributedResult(
             sig_lo=sig_lo, sig_hi=sig_hi, is_unique=uniq_l, gen_count=gen_l,
@@ -278,28 +317,36 @@ class DistributedMiner:
             gen_count=data_spec, volume=data_spec, density=data_spec,
             keep=data_spec, cardinalities=card_spec, n_clusters=P(),
             overflow=P())
-        fn = jax.shard_map(body, mesh=self.mesh,
-                           in_specs=(P(self.axes, None), P(), P()),
-                           out_specs=out_specs, check_vma=False)
+        fn = PL.shard_map(body, mesh=self.mesh,
+                          in_specs=(P(self.axes, None), P(self.axes),
+                                    P(), P()),
+                          out_specs=out_specs)
         return jax.jit(fn)
 
-    def lowered(self, tuples):
+    def _coerce(self, tuples, values):
+        tuples = jnp.asarray(tuples, jnp.int32)
+        if values is None:
+            values = jnp.zeros((tuples.shape[0],), jnp.float32)
+        return tuples, jnp.asarray(values, jnp.float32)
+
+    def lowered(self, tuples, values=None):
         """Lower (no execution) for dry-run / roofline analysis of the
         mining pipeline itself — same artifact path as the LM cells."""
-        tuples = jnp.asarray(tuples, jnp.int32)
+        tuples, values = self._coerce(tuples, values)
         fn = self._build(tuples.shape[0])
         structs = (jax.ShapeDtypeStruct(tuples.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(values.shape, jnp.float32),
                    [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._lo],
                    [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._hi])
         with self.mesh:
             return fn.lower(*structs)
 
-    def __call__(self, tuples) -> DistributedResult:
+    def __call__(self, tuples, values=None) -> DistributedResult:
         """Run the pipeline. On shuffle-capacity overflow (the M/R skew
         failure mode the paper's §1 warns about) the capacity factor is
         doubled and the job re-executed — the analogue of Hadoop re-running
         a failed reducer with more memory."""
-        tuples = jnp.asarray(tuples, jnp.int32)
+        tuples, values = self._coerce(tuples, values)
         t = tuples.shape[0]
         if t % self.n_shards:
             raise ValueError(
@@ -308,13 +355,13 @@ class DistributedMiner:
         if self._fn is None or self._t_global != t:
             self._fn = self._build(t)
             self._t_global = t
-        res = self._fn(tuples, self._lo, self._hi)
+        res = self._fn(tuples, values, self._lo, self._hi)
         for _ in range(self.max_retries):
             if self.strategy != "shuffle" or int(res.overflow) == 0:
                 break
             self.capacity_factor *= 2.0
             self._fn = self._build(t)
-            res = self._fn(tuples, self._lo, self._hi)
+            res = self._fn(tuples, values, self._lo, self._hi)
         return res
 
 
@@ -326,3 +373,13 @@ def pad_tuples(tuples: np.ndarray, multiple: int) -> np.ndarray:
     if pad == 0:
         return tuples
     return np.concatenate([tuples, np.repeat(tuples[:1], pad, 0)], 0)
+
+
+def pad_values(values: np.ndarray, multiple: int) -> np.ndarray:
+    """Value-column companion of ``pad_tuples`` (pads with the first value,
+    keeping V a function of the tuple)."""
+    t = values.shape[0]
+    pad = (-t) % multiple
+    if pad == 0:
+        return values
+    return np.concatenate([values, np.repeat(values[:1], pad, 0)], 0)

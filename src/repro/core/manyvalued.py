@@ -1,154 +1,54 @@
-"""Many-valued δ-triclustering (paper §3.2) / NOAC (paper §4.3) in JAX.
+"""Many-valued δ-triclustering (paper §3.2) / NOAC (paper §4.3).
 
-For a many-valued context K_V = (A_1..A_N, W, I, V) the δ-operator along
-mode k of a generating tuple i with value v0 keeps the entities of the
-tuple's cumulus whose triple value is within δ of v0.
+A thin driver over the shared Stage-1/2/3 pipeline (``core.pipeline``,
+DESIGN.md §3) with the *δ-range* component operator: each mode's table is
+sorted by (other columns, value), so every δ-cumulus is a contiguous
+value range inside a contiguous key segment, found with two vectorised
+binary searches — O(T log T) total, versus the O(T · |A_k|) dictionary
+walks of the C#/.Net NOAC implementation the paper benchmarks in §6.
 
-TPU-native formulation: sort each mode's table by (other columns, value).
-Then every δ-cumulus is a *contiguous value range inside a contiguous key
-segment*, found with two vectorised binary searches — O(T log T) total,
-versus the O(T · |A_k|) dictionary walks of the C#/.Net NOAC implementation
-the paper benchmarks in §6.
-
-Set signatures of ranges come from per-mode prefix sums of uint32 hash
-weights (modular arithmetic makes range differences exact). Precondition:
-the tuple table is deduplicated — V is a *function* of the tuple (paper
-§3.2), so duplicates carry no information; ``NOACMiner`` dedups host-side.
+Set signatures of ranges come from per-mode prefix sums of
+first-occurrence-masked uint32 hash weights (modular arithmetic makes
+range differences exact), so the engine is duplicate-idempotent like the
+prime variant: V must be a *function* of the tuple (paper §3.2), but the
+tuple table itself may contain duplicates (e.g. shard padding or
+at-least-once delivery) without changing any output.
 
 Validity checks (per §4.3): minimal per-mode cardinality (minsup) and
 minimal density ρ_min, with density estimated exactly as the M/R stage 3
-does (distinct generating tuples / volume), so the two engines agree.
+does (distinct generating tuples / volume), so all engines agree.  NOAC
+also runs distributed (core/distributed.py, both merge strategies) and
+streaming (core/streaming.py) through the same pipeline, bit-identical
+to this single-shard engine.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import batch as B
+from . import pipeline as P
 from .context import PolyadicContext
 
-
-def _bsearch(vals: jnp.ndarray, lo0: jnp.ndarray, hi0: jnp.ndarray,
-             target: jnp.ndarray, leq: bool) -> jnp.ndarray:
-    """Vectorised binary search. Returns, per query, the first index in
-    [lo0, hi0) where vals[idx] >= target (leq=False: lower bound) or
-    vals[idx] > target (leq=True: upper bound); hi0 if none."""
-    t = vals.shape[0]
-    iters = max(1, int(np.ceil(np.log2(max(t, 2)))) + 1)
-    lo, hi = lo0, hi0
-    for _ in range(iters):
-        mid = (lo + hi) // 2
-        v = vals[jnp.clip(mid, 0, t - 1)]
-        go_right = (v <= target) if leq else (v < target)
-        go_right = go_right & (lo < hi)
-        lo = jnp.where(go_right, mid + 1, lo)
-        hi = jnp.where(go_right | (lo >= hi), hi, mid)
-    return lo
+_bsearch = P.bsearch                 # canonical home: core.pipeline
+NOACResult = P.PipelineResult        # unified result type
 
 
-@dataclasses.dataclass
-class NOACResult:
-    sig_lo: jnp.ndarray
-    sig_hi: jnp.ndarray
-    is_unique: jnp.ndarray
-    gen_count: jnp.ndarray
-    volume: jnp.ndarray
-    density: jnp.ndarray
-    keep: jnp.ndarray         # unique & minsup & density filters
-    range_lo: jnp.ndarray     # (N, T) start of the δ-range (sorted order)
-    range_hi: jnp.ndarray     # (N, T) end (exclusive)
-    perms: jnp.ndarray        # (N, T) per-mode sort permutations
-
-jax.tree_util.register_dataclass(
-    NOACResult, data_fields=["sig_lo", "sig_hi", "is_unique", "gen_count",
-                             "volume", "density", "keep", "range_lo",
-                             "range_hi", "perms"],
-    meta_fields=[])
+def noac_mine(tuples, values, hash_lo, hash_hi, delta: float,
+              rho_min: float = 0.0, minsup: int = 0) -> NOACResult:
+    """The full three-stage δ pipeline on one shard (jit-able)."""
+    return P.mine_tuples(tuples, hash_lo, hash_hi, values=values,
+                         delta=delta, theta=rho_min, minsup=minsup)
 
 
-def noac_mine(tuples: jnp.ndarray, values: jnp.ndarray,
-              hash_lo: Sequence[jnp.ndarray], hash_hi: Sequence[jnp.ndarray],
-              delta: float, rho_min: float = 0.0,
-              minsup: int = 0) -> NOACResult:
-    t, n = tuples.shape
-    per_lo, per_hi, range_lo_all, range_hi_all, perms = [], [], [], [], []
-    volume = jnp.ones((t,), jnp.float32)
-    for k in range(n):
-        others = [tuples[:, j] for j in range(n) if j != k]
-        # segment by key, ordered by value inside each segment
-        perm = B.lex_perm(others + [values, tuples[:, k]])
-        s_others = [c[perm] for c in others]
-        s_vals = values[perm]
-        s_e = tuples[perm, k]
-        seg_flag = B.segment_starts(s_others)
-        seg = jnp.cumsum(seg_flag) - 1
-        pos = jnp.arange(t)
-        seg_start = jax.ops.segment_min(pos, seg, num_segments=t)
-        seg_len = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), seg,
-                                      num_segments=t)
-        # prefix (exclusive) of hash weights along the sorted order
-        w_lo = hash_lo[k][s_e]
-        w_hi = hash_hi[k][s_e]
-        pref_lo = jnp.concatenate([jnp.zeros((1,), jnp.uint32),
-                                   jnp.cumsum(w_lo, dtype=jnp.uint32)])
-        pref_hi = jnp.concatenate([jnp.zeros((1,), jnp.uint32),
-                                   jnp.cumsum(w_hi, dtype=jnp.uint32)])
-        # per-tuple query in its own segment
-        inv = jnp.zeros((t,), jnp.int32).at[perm].set(pos.astype(jnp.int32))
-        my_seg = seg[inv]
-        a = seg_start[my_seg]
-        b = a + seg_len[my_seg]
-        lo_idx = _bsearch(s_vals, a, b, values - jnp.float32(delta), leq=False)
-        hi_idx = _bsearch(s_vals, a, b, values + jnp.float32(delta), leq=True)
-        card = (hi_idx - lo_idx).astype(jnp.int32)
-        sig_lo_k = pref_lo[hi_idx] - pref_lo[lo_idx]
-        sig_hi_k = pref_hi[hi_idx] - pref_hi[lo_idx]
-        per_lo.append(sig_lo_k)
-        per_hi.append(sig_hi_k)
-        range_lo_all.append(lo_idx.astype(jnp.int32))
-        range_hi_all.append(hi_idx.astype(jnp.int32))
-        perms.append(perm.astype(jnp.int32))
-        volume = volume * card.astype(jnp.float32)
-    sig_lo, sig_hi = B._mix_signatures(per_lo, per_hi)
-    card_ok = jnp.ones((t,), bool)
-    for lo_idx, hi_idx in zip(range_lo_all, range_hi_all):
-        card_ok = card_ok & ((hi_idx - lo_idx) >= minsup)
-    # stage-3 dedup / generating counts (tuples are pre-deduplicated)
-    order = B.lex_perm([sig_lo, sig_hi])
-    cstart = B.segment_starts([sig_lo[order], sig_hi[order]])
-    cseg = jnp.cumsum(cstart) - 1
-    gen = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), cseg, num_segments=t)
-    gen_of = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
-    is_unique = jnp.zeros((t,), bool).at[order].set(cstart)
-    density = gen_of.astype(jnp.float32) / jnp.maximum(volume, 1.0)
-    keep = is_unique & card_ok & (density >= jnp.float32(rho_min))
-    return NOACResult(sig_lo, sig_hi, is_unique, gen_of, volume, density,
-                      keep, jnp.stack(range_lo_all), jnp.stack(range_hi_all),
-                      jnp.stack(perms))
-
-
-class NOACMiner:
+class NOACMiner(P.PipelineMiner):
     """jit-compiled many-valued (δ) multimodal clustering."""
 
     def __init__(self, sizes: Sequence[int], delta: float,
                  rho_min: float = 0.0, minsup: int = 0, seed: int = 0x5EED):
-        self.sizes = tuple(int(s) for s in sizes)
-        self.delta, self.rho_min, self.minsup = float(delta), float(rho_min), int(minsup)
-        vecs = B.mode_hash_vectors(self.sizes, seed)
-        self._lo = [jnp.asarray(lo) for lo, _ in vecs]
-        self._hi = [jnp.asarray(hi) for _, hi in vecs]
-        self._fn = jax.jit(functools.partial(
-            noac_mine, delta=self.delta, rho_min=self.rho_min,
-            minsup=self.minsup))
-
-    def __call__(self, tuples, values) -> NOACResult:
-        return self._fn(jnp.asarray(tuples, jnp.int32),
-                        jnp.asarray(values, jnp.float32), self._lo, self._hi)
+        super().__init__(sizes, theta=rho_min, delta=delta, minsup=minsup,
+                         seed=seed)
+        self.rho_min = float(rho_min)
 
     def mine_context(self, ctx: PolyadicContext):
         if ctx.values is None:
@@ -157,19 +57,4 @@ class NOACMiner:
                                   np.zeros(ctx.num_tuples, np.float32),
                                   ctx.names)
         ctx = ctx.deduplicated()
-        res = self(ctx.tuples, ctx.values)
-        return self.materialise(res, ctx)
-
-    def materialise(self, res: NOACResult, ctx: PolyadicContext):
-        keep = np.asarray(res.keep)
-        rlo, rhi = np.asarray(res.range_lo), np.asarray(res.range_hi)
-        perms = np.asarray(res.perms)
-        dens = np.asarray(res.density)
-        out = []
-        for i in np.nonzero(keep)[0]:
-            comps = []
-            for k in range(ctx.arity):
-                idx = perms[k][rlo[k, i]:rhi[k, i]]
-                comps.append(frozenset(ctx.tuples[idx, k].tolist()))
-            out.append((tuple(comps), float(dens[i])))
-        return out
+        return self.materialise(self(ctx.tuples, ctx.values), ctx.tuples)

@@ -6,8 +6,9 @@ Mirrors the paper's naming: the three M/R stages of §4.1 correspond to
   Stage 2 (Alg. 4+5)  -> gather cumuli back to generating tuples
   Stage 3 (Alg. 6+7)  -> signature dedup + density (θ) filtering
 
-Backends: ``batch`` (single shard), ``distributed`` (shard_map mesh,
-'replicate' or 'shuffle' merge strategy), ``streaming`` (online ingestion).
+All engines compose the shared pipeline core (``core.pipeline``); backend
+and variant selection goes through the engine registry
+(``core.engines.mine`` / ``make_miner``).
 """
 from __future__ import annotations
 
@@ -15,15 +16,19 @@ from typing import Optional, Sequence
 
 from .batch import BatchMiner, MiningResult
 from .context import PolyadicContext, from_named_triples, tricontext
-from .distributed import DistributedMiner, DistributedResult, pad_tuples
+from .distributed import (DistributedMiner, DistributedResult, pad_tuples,
+                          pad_values)
+from .engines import MineRun, available_engines, mine, resolve_engine
 from .manyvalued import NOACMiner, NOACResult
+from .pipeline import PipelineResult
 from .streaming import StreamingMiner
 
 __all__ = [
     "BatchMiner", "DistributedMiner", "StreamingMiner", "NOACMiner",
-    "MiningResult", "DistributedResult", "NOACResult",
+    "MiningResult", "DistributedResult", "NOACResult", "PipelineResult",
     "PolyadicContext", "tricontext", "from_named_triples", "pad_tuples",
-    "make_miner",
+    "pad_values", "make_miner", "mine", "MineRun", "available_engines",
+    "resolve_engine",
 ]
 
 
@@ -31,17 +36,33 @@ def make_miner(sizes: Sequence[int], backend: str = "batch",
                theta: float = 0.0, mesh=None, axes="data",
                strategy: str = "replicate", delta: Optional[float] = None,
                rho_min: float = 0.0, minsup: int = 0, **kw):
-    """Factory selecting the backend (the paper's algorithm variants)."""
-    if delta is not None:
-        return NOACMiner(sizes, delta=delta, rho_min=rho_min, minsup=minsup,
-                         **kw)
+    """Factory selecting the backend (the paper's algorithm variants).
+
+    Thin compatibility wrapper over the engine registry; prefer
+    ``repro.core.mine(ctx, backend=..., variant=...)`` for one-shot runs.
+    """
+    variant = "noac" if delta is not None else "prime"
+    resolve_engine(backend, variant)  # clear error on unknown combinations
+    if backend == "reference":
+        raise ValueError("the reference oracle has no miner object; "
+                         "use repro.core.mine(ctx, backend='reference')")
+    if variant == "noac":
+        if backend == "batch":
+            return NOACMiner(sizes, delta=delta, rho_min=rho_min,
+                             minsup=minsup, **kw)
+        if backend == "streaming":
+            return StreamingMiner(sizes, delta=delta, rho_min=rho_min,
+                                  minsup=minsup, **kw)
+        if mesh is None:
+            raise ValueError("distributed backend needs a mesh")
+        return DistributedMiner(sizes, mesh, axes=axes, strategy=strategy,
+                                delta=delta, rho_min=rho_min, minsup=minsup,
+                                **kw)
     if backend == "batch":
         return BatchMiner(sizes, theta=theta, **kw)
     if backend == "streaming":
         return StreamingMiner(sizes, theta=theta, **kw)
-    if backend == "distributed":
-        if mesh is None:
-            raise ValueError("distributed backend needs a mesh")
-        return DistributedMiner(sizes, mesh, axes=axes, theta=theta,
-                                strategy=strategy, **kw)
-    raise ValueError(f"unknown backend {backend!r}")
+    if mesh is None:
+        raise ValueError("distributed backend needs a mesh")
+    return DistributedMiner(sizes, mesh, axes=axes, theta=theta,
+                            strategy=strategy, **kw)

@@ -1,0 +1,408 @@
+"""Shared Stage-1/2/3 mining pipeline — the one skeleton behind every
+engine (DESIGN.md §3, "Unified pipeline").
+
+The paper's M/R algorithm is the *same* three jobs for the prime OAC,
+multimodal (N-ary) and many-valued (NOAC, §3.2/§4.3) variants; only the
+per-key *component operator* differs.  This module is that factoring:
+
+  Stage 1  ``sort_mode``            per-mode lexicographic sort of the
+           tuple table by the mode's shuffle key (the N-1 "other"
+           columns, plus the value column for many-valued contexts) and
+           segmentation of the sorted order — the Hadoop
+           shuffle-by-subrelation as a sort.
+  comp-op  ``prime_components``     cumulus = the whole key segment.
+           ``delta_components``     δ-range inside the key segment
+                                    (two vectorised binary searches).
+           This is the only place the variants differ.
+  Stage 2  ``mix_signatures``       gather per-mode ⟨signature,
+           cardinality⟩ aggregates back to each generating tuple.
+  Stage 3  ``stage3_dedup``         order-independent dedup + distinct
+           generating-tuple counts on 2×32-bit set signatures, via one
+           more sort; density is the paper-faithful Alg. 7 estimate
+           ``#distinct generating tuples / volume``.
+
+``mine_tuples`` composes the stages into the full jit-able pipeline;
+``batch``, ``distributed``, ``streaming`` and ``manyvalued`` are thin
+drivers around it (single shard / shard_map mesh / incremental sorted
+runs).  All signatures are *order-independent modular sums of
+first-occurrence-masked hash weights*, which makes every engine
+duplicate-idempotent (M/R at-least-once, §5.1) and lets the distributed
+and streaming engines reproduce single-shard results bit-exactly.
+
+Shapes are static in ``T`` (tuples) and ``N`` (arity), so each engine
+jits once per context shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# jax version compatibility (canonical home: repro._compat)
+from .._compat import shard_map  # noqa: F401  (re-export for the engines)
+
+
+# ---------------------------------------------------------------------------
+# Hashing
+# ---------------------------------------------------------------------------
+
+# Per-mode multipliers for mixing mode signatures into a cluster signature.
+# Odd constants (invertible mod 2^32) from splitmix64 / Weyl sequences.
+_MIX = np.array([0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+                 0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09],
+                dtype=np.uint32)
+
+
+def mode_hash_vectors(sizes: Sequence[int], seed: int = 0x5EED):
+    """Two independent uint32 hash vectors per mode (host-side, fixed seed).
+
+    Every engine built from the same (sizes, seed) produces bit-identical
+    cluster signatures — the cross-backend parity guarantee."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    return [
+        (rng.integers(1, 2**32, size=n, dtype=np.uint32),
+         rng.integers(1, 2**32, size=n, dtype=np.uint32))
+        for n in sizes
+    ]
+
+
+def mix_signatures(per_mode_lo, per_mode_hi):
+    """Combine per-mode set signatures into one 2×32-bit cluster signature."""
+    lo = jnp.zeros_like(per_mode_lo[0])
+    hi = jnp.zeros_like(per_mode_hi[0])
+    for k, (slo, shi) in enumerate(zip(per_mode_lo, per_mode_hi)):
+        lo = lo + jnp.uint32(_MIX[k % len(_MIX)]) * slo
+        hi = hi + jnp.uint32(_MIX[(k + 3) % len(_MIX)]) * shi
+    # final avalanche
+    lo = (lo ^ (lo >> 16)) * jnp.uint32(0x7FEB352D)
+    hi = (hi ^ (hi >> 15)) * jnp.uint32(0x846CA68B)
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# Sorting / segmentation primitives
+# ---------------------------------------------------------------------------
+
+def lex_perm(columns: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Permutation sorting rows lexicographically by ``columns`` (first column
+    is the most significant key)."""
+    return jnp.lexsort(tuple(reversed(list(columns))))
+
+
+def segment_starts(sorted_key_cols: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Boolean start-of-segment flags for already-sorted key columns."""
+    t = sorted_key_cols[0].shape[0]
+    change = jnp.zeros((t,), bool).at[0].set(True)
+    for c in sorted_key_cols:
+        change = change | jnp.concatenate(
+            [jnp.ones((1,), bool), c[1:] != c[:-1]])
+    return change
+
+
+@dataclasses.dataclass
+class SortedMode:
+    """Stage-1 output for one mode: the tuple table sorted by the mode's
+    shuffle key and segmented by it.  All arrays have length T;
+    ``seg_start``/``seg_len`` are indexed by segment id (padded to T)."""
+    perm: jnp.ndarray         # sorted order of tuples
+    inv: jnp.ndarray          # inverse permutation (original → sorted pos)
+    seg: jnp.ndarray          # segment id per *sorted* position
+    seg_start: jnp.ndarray    # first sorted position of each segment
+    seg_len: jnp.ndarray      # total entries (with duplicates)
+    sorted_e: jnp.ndarray     # mode-k entity column under perm
+    sorted_vals: Optional[jnp.ndarray]  # values under perm (None: prime)
+    first_occ: jnp.ndarray    # per sorted position: first of its
+                              # identical (key[, value], e) run
+
+jax.tree_util.register_dataclass(
+    SortedMode, data_fields=["perm", "inv", "seg", "seg_start", "seg_len",
+                             "sorted_e", "sorted_vals", "first_occ"],
+    meta_fields=[])
+
+
+def sort_mode(tuples: jnp.ndarray, k: int,
+              values: Optional[jnp.ndarray] = None,
+              perm: Optional[jnp.ndarray] = None) -> SortedMode:
+    """Stage 1 for mode k.  Sort key: (other columns..., [value,] e_k), so
+    duplicates of a (key[, value], e) pair land adjacent and the
+    ``first_occ`` mask makes all downstream sums duplicate-idempotent.
+
+    ``perm`` short-circuits the sort with a precomputed permutation (the
+    streaming engine maintains one by merging sorted runs)."""
+    t, n = tuples.shape
+    others = [tuples[:, j] for j in range(n) if j != k]
+    tail = ([values] if values is not None else []) + [tuples[:, k]]
+    if perm is None:
+        perm = lex_perm(others + tail)
+    s_others = [c[perm] for c in others]
+    s_e = tuples[perm, k]
+    s_vals = values[perm] if values is not None else None
+    seg_flag = segment_starts(s_others)
+    seg = jnp.cumsum(seg_flag) - 1
+    pos = jnp.arange(t)
+    seg_start = jax.ops.segment_min(pos, seg, num_segments=t)
+    seg_len = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), seg,
+                                  num_segments=t)
+    first_occ = segment_starts(
+        s_others + ([s_vals] if s_vals is not None else []) + [s_e])
+    inv = jnp.zeros((t,), jnp.int32).at[perm].set(pos.astype(jnp.int32))
+    return SortedMode(perm, inv, seg, seg_start, seg_len, s_e, s_vals,
+                      first_occ)
+
+
+# ---------------------------------------------------------------------------
+# Component operators (the pluggable part)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ModeComponents:
+    """One mode's component per tuple, in *original* tuple order.
+
+    ``range_lo``/``range_hi`` delimit the component as a half-open window
+    of the mode's sorted order — the cumulus tables of the paper shrink
+    from O(|I|·Σ|A_j|) dictionary bytes to O(|I|) ranges."""
+    sig_lo: jnp.ndarray     # order-independent set hash of the component
+    sig_hi: jnp.ndarray
+    card: jnp.ndarray       # distinct entity count
+    range_lo: jnp.ndarray   # window start in sorted order
+    range_hi: jnp.ndarray   # window end (exclusive)
+
+jax.tree_util.register_dataclass(
+    ModeComponents, data_fields=["sig_lo", "sig_hi", "card", "range_lo",
+                                 "range_hi"],
+    meta_fields=[])
+
+
+def prime_components(sm: SortedMode, r_lo: jnp.ndarray,
+                     r_hi: jnp.ndarray) -> ModeComponents:
+    """Prime cumulus operator (Alg. 2+3): the component of a tuple along a
+    mode is its *whole* key segment.  Signatures/cardinalities are segment
+    sums of first-occurrence-masked hash weights."""
+    t = sm.sorted_e.shape[0]
+    w_lo = jnp.where(sm.first_occ, r_lo[sm.sorted_e], jnp.uint32(0))
+    w_hi = jnp.where(sm.first_occ, r_hi[sm.sorted_e], jnp.uint32(0))
+    sig_lo = jax.ops.segment_sum(w_lo, sm.seg, num_segments=t)
+    sig_hi = jax.ops.segment_sum(w_hi, sm.seg, num_segments=t)
+    distinct = jax.ops.segment_sum(sm.first_occ.astype(jnp.int32), sm.seg,
+                                   num_segments=t)
+    my = sm.seg[sm.inv]
+    start = sm.seg_start[my].astype(jnp.int32)
+    return ModeComponents(sig_lo[my], sig_hi[my], distinct[my], start,
+                          start + sm.seg_len[my].astype(jnp.int32))
+
+
+def bsearch(vals: jnp.ndarray, lo0: jnp.ndarray, hi0: jnp.ndarray,
+            target: jnp.ndarray, leq: bool) -> jnp.ndarray:
+    """Vectorised binary search. Returns, per query, the first index in
+    [lo0, hi0) where vals[idx] >= target (leq=False: lower bound) or
+    vals[idx] > target (leq=True: upper bound); hi0 if none."""
+    t = vals.shape[0]
+    iters = max(1, int(np.ceil(np.log2(max(t, 2)))) + 1)
+    lo, hi = lo0, hi0
+    for _ in range(iters):
+        mid = (lo + hi) // 2
+        v = vals[jnp.clip(mid, 0, t - 1)]
+        go_right = (v <= target) if leq else (v < target)
+        go_right = go_right & (lo < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right | (lo >= hi), hi, mid)
+    return lo
+
+
+def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
+                     values: jnp.ndarray, delta: float) -> ModeComponents:
+    """δ-range operator (NOAC, §3.2/§4.3): the component of a tuple with
+    value v0 is the contiguous value-window [v0-δ, v0+δ] *inside* its key
+    segment, found with two binary searches.  Signatures are differences
+    of prefix sums of first-occurrence-masked hash weights (modular
+    arithmetic makes range differences exact)."""
+    t = sm.sorted_e.shape[0]
+    w_lo = jnp.where(sm.first_occ, r_lo[sm.sorted_e], jnp.uint32(0))
+    w_hi = jnp.where(sm.first_occ, r_hi[sm.sorted_e], jnp.uint32(0))
+    zero_u = jnp.zeros((1,), jnp.uint32)
+    pref_lo = jnp.concatenate([zero_u, jnp.cumsum(w_lo, dtype=jnp.uint32)])
+    pref_hi = jnp.concatenate([zero_u, jnp.cumsum(w_hi, dtype=jnp.uint32)])
+    pref_cnt = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(sm.first_occ.astype(jnp.int32), dtype=jnp.int32)])
+    # per-tuple query window inside its own segment
+    my = sm.seg[sm.inv]
+    a = sm.seg_start[my]
+    b = a + sm.seg_len[my]
+    lo_idx = bsearch(sm.sorted_vals, a, b, values - jnp.float32(delta),
+                     leq=False)
+    hi_idx = bsearch(sm.sorted_vals, a, b, values + jnp.float32(delta),
+                     leq=True)
+    return ModeComponents(pref_lo[hi_idx] - pref_lo[lo_idx],
+                          pref_hi[hi_idx] - pref_hi[lo_idx],
+                          pref_cnt[hi_idx] - pref_cnt[lo_idx],
+                          lo_idx.astype(jnp.int32),
+                          hi_idx.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: dedup + generating-tuple counts
+# ---------------------------------------------------------------------------
+
+def stage3_dedup(sig_lo: jnp.ndarray, sig_hi: jnp.ndarray,
+                 tuple_first: jnp.ndarray):
+    """Dedup clusters on their signatures with one sort; count *distinct*
+    generating tuples per cluster (Alg. 6+7 reducer semantics).
+
+    Returns (gen_count, is_unique) in original tuple order; ``is_unique``
+    marks the first distinct generating tuple of each cluster."""
+    t = sig_lo.shape[0]
+    order = lex_perm([sig_lo, sig_hi])
+    s_lo, s_hi = sig_lo[order], sig_hi[order]
+    s_first = tuple_first[order]
+    cstart = segment_starts([s_lo, s_hi])
+    cseg = jnp.cumsum(cstart) - 1
+    gen = jax.ops.segment_sum(s_first.astype(jnp.int32), cseg,
+                              num_segments=t)
+    gen_of = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
+    pos = jnp.arange(t)
+    first_pos = jax.ops.segment_min(jnp.where(s_first, pos, t), cseg,
+                                    num_segments=t)
+    uniq_sorted = (pos == first_pos[cseg]) & s_first
+    is_unique = jnp.zeros((t,), bool).at[order].set(uniq_sorted)
+    return gen_of, is_unique
+
+
+# ---------------------------------------------------------------------------
+# The full pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Unified per-tuple mining output (original tuple order; length-T
+    arrays), shared by every backend and variant."""
+    sig_lo: jnp.ndarray        # cluster signature of the tuple's cluster
+    sig_hi: jnp.ndarray
+    is_unique: jnp.ndarray     # bool: first distinct generating tuple
+    gen_count: jnp.ndarray     # distinct generating tuples of the cluster
+    volume: jnp.ndarray        # float32 Π_k |component_k|
+    density: jnp.ndarray       # Alg. 7 estimate  gen_count / volume
+    keep: jnp.ndarray          # unique & density ≥ θ (& minsup)
+    cardinalities: jnp.ndarray  # (N, T) distinct |component_k| per tuple
+    range_lo: jnp.ndarray      # (N, T) component window starts (sorted ord.)
+    range_hi: jnp.ndarray      # (N, T) window ends (exclusive)
+    sorted_e: jnp.ndarray      # (N, T) per-mode entity columns, sorted order
+    perms: jnp.ndarray         # (N, T) per-mode sort permutations
+
+jax.tree_util.register_dataclass(
+    PipelineResult,
+    data_fields=["sig_lo", "sig_hi", "is_unique", "gen_count", "volume",
+                 "density", "keep", "cardinalities", "range_lo", "range_hi",
+                 "sorted_e", "perms"],
+    meta_fields=[])
+
+
+def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
+                hash_hi: Sequence[jnp.ndarray], *,
+                values: Optional[jnp.ndarray] = None,
+                delta: Optional[float] = None, theta: float = 0.0,
+                minsup: int = 0,
+                perms: Optional[jnp.ndarray] = None) -> PipelineResult:
+    """The full three-stage pipeline on one shard (jit-able; T, N static).
+
+    ``delta=None`` runs the prime cumulus operator (multimodal/OAC);
+    otherwise the δ-range operator (NOAC) with ``theta`` acting as ρ_min
+    and ``minsup`` as the per-mode minimal cardinality.  ``perms``
+    (N, T) supplies precomputed per-mode sort orders (streaming)."""
+    t, n = tuples.shape
+    comps, sms = [], []
+    for k in range(n):
+        sm = sort_mode(tuples, k, values=values,
+                       perm=None if perms is None else perms[k])
+        if delta is None:
+            comps.append(prime_components(sm, hash_lo[k], hash_hi[k]))
+        else:
+            comps.append(delta_components(sm, hash_lo[k], hash_hi[k],
+                                          values, delta))
+        sms.append(sm)
+    # Stage 2: per-tuple cluster = mix of per-mode component aggregates.
+    sig_lo, sig_hi = mix_signatures([c.sig_lo for c in comps],
+                                    [c.sig_hi for c in comps])
+    volume = jnp.ones((t,), jnp.float32)
+    for c in comps:
+        volume = volume * c.card.astype(jnp.float32)
+    # Stage 3.  Mode 0's sort key covers the whole row, so its
+    # first-of-run flags already mark the lowest-index copy of each
+    # duplicate row (stable sorts) — no extra full-table sort needed.
+    tfirst = jnp.zeros((t,), bool).at[sms[0].perm].set(sms[0].first_occ)
+    gen_of, is_unique = stage3_dedup(sig_lo, sig_hi, tfirst)
+    density = gen_of.astype(jnp.float32) / jnp.maximum(volume, 1.0)
+    keep = is_unique & (density >= jnp.float32(theta))
+    if minsup:
+        for c in comps:
+            keep = keep & (c.card >= minsup)
+    return PipelineResult(
+        sig_lo, sig_hi, is_unique, gen_of, volume, density, keep,
+        cardinalities=jnp.stack([c.card for c in comps]),
+        range_lo=jnp.stack([c.range_lo for c in comps]),
+        range_hi=jnp.stack([c.range_hi for c in comps]),
+        sorted_e=jnp.stack([sm.sorted_e for sm in sms]),
+        perms=jnp.stack([sm.perm.astype(jnp.int32) for sm in sms]))
+
+
+# ---------------------------------------------------------------------------
+# Host-side materialisation (shared by all engines with component ranges)
+# ---------------------------------------------------------------------------
+
+def materialise(result: PipelineResult, only_kept: bool = True):
+    """Extract cluster component sets [(components, density), ...] for kept
+    (or all unique) tuples by slicing the per-mode sorted windows."""
+    flag = np.asarray(result.keep if only_kept else result.is_unique)
+    rlo, rhi = np.asarray(result.range_lo), np.asarray(result.range_hi)
+    sorted_e = np.asarray(result.sorted_e)
+    dens = np.asarray(result.density)
+    n = sorted_e.shape[0]
+    out = []
+    for i in np.nonzero(flag)[0]:
+        comps = []
+        for k in range(n):
+            window = sorted_e[k][rlo[k, i]:rhi[k, i]]
+            comps.append(frozenset(np.unique(window).tolist()))
+        out.append((tuple(comps), float(dens[i])))
+    return out
+
+
+class PipelineMiner:
+    """Base driver: jit-compiled single-shard pipeline over fixed sizes.
+
+    Subclasses (``BatchMiner``, ``NOACMiner``) pin the component operator;
+    everything else — hashing, jit caching, materialisation — is shared."""
+
+    def __init__(self, sizes: Sequence[int], *, theta: float = 0.0,
+                 delta: Optional[float] = None, minsup: int = 0,
+                 seed: int = 0x5EED):
+        self.sizes = tuple(int(s) for s in sizes)
+        self.theta = float(theta)
+        self.delta = None if delta is None else float(delta)
+        self.minsup = int(minsup)
+        vecs = mode_hash_vectors(self.sizes, seed)
+        self._lo = [jnp.asarray(lo) for lo, _ in vecs]
+        self._hi = [jnp.asarray(hi) for _, hi in vecs]
+        self._fn = jax.jit(functools.partial(
+            mine_tuples, delta=self.delta, theta=self.theta,
+            minsup=self.minsup))
+
+    def __call__(self, tuples, values=None) -> PipelineResult:
+        tuples = jnp.asarray(tuples, jnp.int32)
+        if self.delta is not None:
+            if values is None:
+                values = jnp.zeros((tuples.shape[0],), jnp.float32)
+            values = jnp.asarray(values, jnp.float32)
+        else:
+            values = None
+        return self._fn(tuples, self._lo, self._hi, values=values)
+
+    def materialise(self, result: PipelineResult, tuples=None,
+                    only_kept: bool = True):
+        """``tuples`` is accepted for API compatibility and unused — the
+        result carries its own component windows."""
+        return materialise(result, only_kept)

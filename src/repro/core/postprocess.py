@@ -2,7 +2,8 @@
 
 The paper (§2) treats duplicate elimination and user-constraint selection
 as post-processing with O(|I|) cost; these helpers operate on the host
-over ``MiningResult`` / ``DistributedResult`` arrays.
+over the unified ``PipelineResult`` / ``DistributedResult`` arrays (every
+engine returns per-tuple ``cardinalities``).
 """
 from __future__ import annotations
 
@@ -23,11 +24,7 @@ def select(result, min_density: float = 0.0, min_gen: int = 1,
     if max_volume is not None:
         mask &= vol <= max_volume
     if min_cardinality:
-        card = np.asarray(getattr(result, "cardinalities", None)
-                          if hasattr(result, "cardinalities") else
-                          np.stack([np.asarray(m.seg_distinct)[
-                              np.asarray(m.seg_of_tuple)]
-                              for m in result.modes]))
+        card = np.asarray(result.cardinalities)
         mask &= (card >= min_cardinality).all(axis=0)
     return np.nonzero(mask)[0]
 

@@ -8,12 +8,13 @@ from __future__ import annotations
 
 import jax
 
+from .._compat import make_mesh  # noqa: F401  (re-export; single shim home)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1, pod: int = 0):
@@ -26,8 +27,7 @@ def make_local_mesh(model: int = 1, pod: int = 0):
     else:
         shape = (n // model, model)
         axes = ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def mesh_name(mesh) -> str:

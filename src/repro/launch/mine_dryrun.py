@@ -37,7 +37,8 @@ def run_cell(mesh, mesh_label, strategy: str, n_tuples: int, arity: int,
     dt = time.time() - t0
     prof = profile_module(compiled.as_text(), int(mesh.devices.size))
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from ..analysis.roofline import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     out = {
         "cell": f"tricluster/{strategy}", "mesh": mesh_label,
         "axes": list(axes), "n_shards": miner.n_shards,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .._compat import shard_map as _shard_map
 from ..configs.base import ModelConfig
 from ..kernels import ops
 
@@ -320,7 +321,7 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jnp.ndarray, rules=None):
                   "w_up": P_(None, None, "model" if model_axes else None),
                   "w_down": P_(None, "model" if model_axes else None, None)}
             pw = {k2: p[k2] for k2 in ws}
-            y = jax.shard_map(
+            y = _shard_map(
                 lambda pw_, x_, te_, tw_: _moe_dispatch_ffn(
                     cfg, pw_, x_, te_, tw_, model_axes),
                 mesh=mesh,

@@ -1,5 +1,6 @@
 """Subprocess body: run the distributed miner on an 8-device host mesh and
-compare against the single-device batch engine. Invoked by
+compare against the single-device batch/NOAC engines — prime and NOAC
+variants, both merge strategies, bit-identical signatures. Invoked by
 test_core_distributed.py; prints 'OK' on success."""
 import os
 import sys
@@ -9,8 +10,26 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax
 
-from repro.core import BatchMiner, DistributedMiner, pad_tuples
+from repro.core import (BatchMiner, DistributedMiner, NOACMiner, pad_tuples,
+                        pad_values)
 from repro.data import synthetic
+from repro.launch.mesh import make_mesh
+
+
+def _compare(got, want):
+    assert int(got.overflow) == 0, f"overflow={int(got.overflow)}"
+    for name in ["sig_lo", "sig_hi", "gen_count", "volume", "density"]:
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=name)
+    # unique flags may pick different representatives per cluster; compare
+    # the *set* of signatures of unique clusters instead.
+    def uniq_set(r):
+        u = np.asarray(r.is_unique)
+        return set(zip(np.asarray(r.sig_lo)[u].tolist(),
+                       np.asarray(r.sig_hi)[u].tolist()))
+    assert uniq_set(got) == uniq_set(want)
+    assert int(got.n_clusters) == int(np.asarray(want.is_unique).sum())
+    assert (np.asarray(got.keep).sum() == np.asarray(want.keep).sum())
 
 
 def check(mesh, axes, strategy, sizes, t, theta, seed):
@@ -22,31 +41,34 @@ def check(mesh, axes, strategy, sizes, t, theta, seed):
     want = bm(tuples)
     dm = DistributedMiner(sizes, mesh, axes=axes, theta=theta,
                           strategy=strategy)
-    got = dm(tuples)
-    assert int(got.overflow) == 0, f"overflow={int(got.overflow)}"
-    for name in ["sig_lo", "sig_hi", "gen_count", "volume", "density"]:
-        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
-        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=name)
-    # unique flags may pick different representatives per cluster; compare
-    # the *set* of (sig, density) of unique clusters instead.
-    def uniq_set(r):
-        u = np.asarray(r.is_unique)
-        return set(zip(np.asarray(r.sig_lo)[u].tolist(),
-                       np.asarray(r.sig_hi)[u].tolist()))
-    assert uniq_set(got) == uniq_set(want)
-    assert int(got.n_clusters) == int(np.asarray(want.is_unique).sum())
-    # keep counts agree
-    assert (np.asarray(got.keep).sum() == np.asarray(want.keep).sum())
+    _compare(dm(tuples), want)
+
+
+def check_noac(mesh, axes, strategy, sizes, t, delta, rho_min, minsup, seed):
+    ctx = synthetic.random_context(sizes, t, seed=seed,
+                                   values=True).deduplicated()
+    n_sh = int(np.prod([mesh.shape[a] for a in
+                        ((axes,) if isinstance(axes, str) else axes)]))
+    tuples = pad_tuples(ctx.tuples, n_sh)
+    values = pad_values(ctx.values, n_sh)
+    nm = NOACMiner(sizes, delta=delta, rho_min=rho_min, minsup=minsup)
+    want = nm(tuples, values)
+    dm = DistributedMiner(sizes, mesh, axes=axes, strategy=strategy,
+                          delta=delta, rho_min=rho_min, minsup=minsup)
+    _compare(dm(tuples, values), want)
 
 
 def main():
-    auto = (jax.sharding.AxisType.Auto,)
-    mesh8 = jax.make_mesh((8,), ("data",), axis_types=auto)
-    mesh2x4 = jax.make_mesh((2, 4), ("pod", "data"), axis_types=auto * 2)
+    mesh8 = make_mesh((8,), ("data",))
+    mesh2x4 = make_mesh((2, 4), ("pod", "data"))
     for strategy in ("replicate", "shuffle"):
         check(mesh8, "data", strategy, (9, 7, 5), 160, 0.0, seed=0)
         check(mesh8, "data", strategy, (6, 6, 6, 4), 240, 0.3, seed=1)
         check(mesh2x4, ("pod", "data"), strategy, (9, 7, 5), 160, 0.0, seed=2)
+        check_noac(mesh8, "data", strategy, (9, 7, 5), 160, 120.0, 0.0, 0,
+                   seed=3)
+        check_noac(mesh2x4, ("pod", "data"), strategy, (7, 6, 5), 120, 80.0,
+                   0.3, 2, seed=4)
     print("OK")
 
 

@@ -12,6 +12,7 @@ import pytest
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_mesh
 from repro.models.api import get_model, input_specs
 from repro.sharding.rules import MeshRules
 from repro.train.step import TrainConfig, init_train_state, jit_train_step
@@ -27,8 +28,7 @@ def _batch(cfg):
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = MeshRules(mesh)
     batch = _batch(cfg)
     with mesh:
@@ -63,8 +63,9 @@ DECODE_ARCHS = ["qwen3-0.6b", "mixtral-8x7b", "zamba2-7b", "xlstm-125m",
         reason="KNOWN DEFECT (open): prefill-path logits diverge from the "
                "parallel forward for the hybrid and patch-frontend "
                "families (~7e-2 max abs); decode caches under "
-               "investigation — see EXPERIMENTS.md §7",
-        strict=True) if a in ("zamba2-7b", "internvl2-76b") else ())
+               "investigation — see EXPERIMENTS.md §7; reproduces only "
+               "on some jax versions, so non-strict",
+        strict=False) if a in ("zamba2-7b", "internvl2-76b") else ())
     for a in DECODE_ARCHS])
 def test_prefill_decode_matches_forward(arch):
     """The decode path (ring cache / SSM states / LSTM states) must agree

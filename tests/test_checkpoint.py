@@ -73,8 +73,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train.checkpoints import CheckpointManager
 
-mesh = jax.make_mesh((%(n)d,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((%(n)d,), ("data",))
 sh = NamedSharding(mesh, P("data"))
 mgr = CheckpointManager(sys.argv[1])
 tmpl = {"w": jnp.zeros((16, 4))}

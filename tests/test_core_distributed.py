@@ -11,14 +11,14 @@ import jax
 
 from repro.core import BatchMiner, DistributedMiner, pad_tuples
 from repro.data import synthetic
+from repro.launch.mesh import make_mesh
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.mark.parametrize("strategy", ["replicate", "shuffle"])
 def test_single_device_parity(strategy):
-    auto = (jax.sharding.AxisType.Auto,)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=auto)
+    mesh = make_mesh((1,), ("data",))
     ctx = synthetic.random_context((8, 6, 5), 96, seed=0)
     bm = BatchMiner(ctx.sizes)
     dm = DistributedMiner(ctx.sizes, mesh, axes="data", strategy=strategy)

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
 from repro.models import common as C
 from repro.models import xlstm as X
 from repro.models.api import get_model
@@ -33,8 +34,7 @@ def test_mlstm_chunked_matches_monolithic():
 def test_moe_shard_map_matches_gspmd():
     """M1: per-shard dispatch + psum equals the partitioner path."""
     cfg = get_smoke_config("mixtral-8x7b")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = MeshRules(mesh)
     model = get_model(cfg)
     params = model.init(cfg, jax.random.PRNGKey(2))

@@ -1,0 +1,140 @@
+"""Unified pipeline: NOAC through the distributed and streaming engines
+(vs the pure-python oracle and vs single-shard, bit-identically), plus
+the engine registry front-end.
+
+Multi-device (8 simulated hosts) parity for both variants and both merge
+strategies runs in the subprocess of
+``test_core_distributed.py::test_multidevice_subprocess``."""
+import numpy as np
+import pytest
+
+from repro.core import (BatchMiner, DistributedMiner, NOACMiner,
+                        StreamingMiner, available_engines, mine, pad_tuples,
+                        pad_values, resolve_engine)
+from repro.core import reference as ref
+from repro.core.context import PolyadicContext
+from repro.core.postprocess import cluster_set
+from repro.data import synthetic
+from repro.launch.mesh import make_mesh
+
+
+def _noac_oracle(ctx, delta, rho_min=0.0, minsup=0):
+    out = ref.noac(ctx.deduplicated(), delta, rho_min=rho_min, minsup=minsup)
+    return {tuple(tuple(sorted(c)) for c in cl) for cl in out}
+
+
+@pytest.mark.parametrize("strategy", ["replicate", "shuffle"])
+def test_noac_distributed_parity(strategy):
+    """NOAC on the shard_map engine: bit-identical signatures to the
+    single-shard NOACMiner and kept-cluster count equal to the oracle."""
+    mesh = make_mesh((1,), ("data",))
+    ctx = synthetic.random_context((8, 6, 5), 96, seed=0,
+                                   values=True).deduplicated()
+    delta, rho, minsup = 75.0, 0.3, 2
+    tuples = pad_tuples(ctx.tuples, 1)
+    values = pad_values(ctx.values, 1)
+    nm = NOACMiner(ctx.sizes, delta=delta, rho_min=rho, minsup=minsup)
+    want = nm(tuples, values)
+    dm = DistributedMiner(ctx.sizes, mesh, axes="data", strategy=strategy,
+                          delta=delta, rho_min=rho, minsup=minsup)
+    got = dm(tuples, values)
+    assert int(got.overflow) == 0
+    np.testing.assert_array_equal(np.asarray(got.sig_lo),
+                                  np.asarray(want.sig_lo))
+    np.testing.assert_array_equal(np.asarray(got.sig_hi),
+                                  np.asarray(want.sig_hi))
+    np.testing.assert_array_equal(np.asarray(got.gen_count),
+                                  np.asarray(want.gen_count))
+    np.testing.assert_allclose(np.asarray(got.density),
+                               np.asarray(want.density), rtol=1e-6)
+    assert (int(np.asarray(got.keep).sum())
+            == int(np.asarray(want.keep).sum())
+            == len(_noac_oracle(ctx, delta, rho, minsup)))
+
+
+def test_noac_distributed_duplicate_padding():
+    """Shard padding duplicates rows; the δ-pipeline must be idempotent."""
+    mesh = make_mesh((1,), ("data",))
+    ctx = synthetic.random_context((6, 5, 4), 61, seed=1,
+                                   values=True).deduplicated()
+    dm = DistributedMiner(ctx.sizes, mesh, delta=50.0)
+    got = dm(pad_tuples(ctx.tuples, 8), pad_values(ctx.values, 8))
+    assert (int(np.asarray(got.keep).sum())
+            == len(_noac_oracle(ctx, 50.0)))
+
+
+@pytest.mark.parametrize("delta,rho,minsup", [(0.0, 0.0, 0),
+                                              (60.0, 0.0, 0),
+                                              (60.0, 0.4, 2)])
+def test_noac_streaming_incremental_snapshots(delta, rho, minsup):
+    """Incremental (sorted-run merge) snapshots at several chunk
+    boundaries: exactly the oracle, and bit-identical to a full re-mine
+    of the buffer."""
+    ctx = synthetic.random_context((7, 6, 5), 96, seed=2,
+                                   values=True).deduplicated()
+    sm = StreamingMiner(ctx.sizes, delta=delta, rho_min=rho, minsup=minsup)
+    assert sm.incremental, "key codec must fit for this context"
+    chunk = 24
+    for lo in range(0, ctx.num_tuples, chunk):
+        sm.add(ctx.tuples[lo:lo + chunk], ctx.values[lo:lo + chunk])
+        seen = PolyadicContext(ctx.sizes, ctx.tuples[:lo + chunk],
+                               ctx.values[:lo + chunk])
+        inc = sm.snapshot()
+        full = sm.snapshot(full_remine=True)
+        np.testing.assert_array_equal(np.asarray(inc.sig_lo),
+                                      np.asarray(full.sig_lo))
+        np.testing.assert_array_equal(np.asarray(inc.gen_count),
+                                      np.asarray(full.gen_count))
+        got = cluster_set(sm.materialise(inc))
+        assert got == _noac_oracle(seen, delta, rho, minsup)
+    assert sm.stats["chunk_sorted_rows"] == ctx.num_tuples
+
+
+def test_prime_streaming_incremental_bit_identical():
+    """Prime variant: merged-permutation snapshots equal device re-sorts
+    bit-for-bit, while only chunks were host-sorted."""
+    ctx = synthetic.random_context((9, 8, 7), 160, seed=3)
+    sm = StreamingMiner(ctx.sizes)
+    bm = BatchMiner(ctx.sizes)
+    for lo in range(0, 160, 40):
+        sm.add(ctx.tuples[lo:lo + 40])
+        inc = sm.snapshot()
+        full = sm.snapshot(full_remine=True)
+        for f in ("sig_lo", "sig_hi", "gen_count", "volume"):
+            np.testing.assert_array_equal(np.asarray(getattr(inc, f)),
+                                          np.asarray(getattr(full, f)))
+        seen = PolyadicContext(ctx.sizes, ctx.tuples[:lo + 40])
+        assert (cluster_set(sm.materialise(inc))
+                == cluster_set(bm.mine_context(seen)))
+    assert sm.stats["chunk_sorted_rows"] == 160
+    assert sm.stats["full_resorts"] == 4  # only the explicit baselines
+
+
+def test_registry_backends_agree():
+    ctx = synthetic.random_context((6, 5, 4), 64, seed=4, values=True)
+    runs = {b: mine(ctx, backend=b, variant="noac", delta=40.0)
+            for b in ("batch", "streaming", "reference", "distributed")}
+    counts = {b: r.n_clusters for b, r in runs.items()}
+    assert len(set(counts.values())) == 1, counts
+    sets = {b: cluster_set(r.clusters) for b, r in runs.items()
+            if r.clusters is not None}
+    assert len(set(map(frozenset, sets.values()))) == 1
+
+
+def test_registry_unknown_combination_lists_choices():
+    ctx = synthetic.random_context((4, 4, 4), 16, seed=5)
+    with pytest.raises(ValueError, match="batch/prime"):
+        mine(ctx, backend="spark", variant="prime")
+    with pytest.raises(ValueError, match="delta"):
+        mine(ctx, backend="batch", variant="noac")
+    with pytest.raises(ValueError, match="valid"):
+        resolve_engine("batch", "fuzzy")
+    assert ("distributed", "noac") in available_engines()
+
+
+def test_launcher_rejects_unknown_backend(capsys):
+    from repro.launch import tricluster as tri
+    assert tri.main(["--dataset", "random", "--n-tuples", "64",
+                     "--backend", "hadoop"]) == 2
+    err = capsys.readouterr().err
+    assert "valid backend/variant choices" in err and "batch/prime" in err

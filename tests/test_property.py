@@ -7,6 +7,9 @@ deliverable c). The core M/R-algebra properties the paper relies on:
 * deterministic, step-indexed data pipeline (resume correctness).
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import BatchMiner
