@@ -1,0 +1,159 @@
+"""Packed-key vs lexsort sort paths: end-to-end, per-stage, per-engine.
+
+The tentpole comparison of the packed-key subsystem (``core.keys``): the
+same pipeline run twice on the MovieLens-like dataset — once with the
+single-word packed sort path (``packed=True``) and once with the
+N+1-column lexsort baseline (``packed=False``) — for both the prime and
+the NOAC (δ) variants, plus the batch/streaming engine rows and a
+per-stage timing breakdown (Stage 1 sort+segment, Stage 2 components,
+Stage 3 dedup).  Both paths produce bit-identical results (asserted by
+``tests/test_keys_property.py``); only the time differs.
+
+All probes of one variant are timed *interleaved* (packed, lexsort,
+packed, ... round-robin, best-of-``repeat`` per probe) so a drifting
+machine load skews both paths equally instead of whichever happened to
+run later.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import StreamingMiner
+from repro.core import keys as KY
+from repro.core import pipeline as P
+from repro.data import synthetic
+
+from .common import print_table, save_json
+
+DATASET = "movielens-like"
+DELTA = 1.0
+PATHS = {True: "packed", False: "lexsort"}
+
+
+def _interleaved_best(probes: dict, repeat: int) -> dict:
+    """Best-of-``repeat`` wall time per probe, measured round-robin."""
+    import jax
+    for fn in probes.values():          # compile everything first
+        jax.block_until_ready(fn())
+    best = {k: float("inf") for k in probes}
+    for _ in range(repeat):
+        for k, fn in probes.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return {k: v * 1e3 for k, v in best.items()}
+
+
+def _stage_probes(sizes, tuples, values, delta, packed, use_pallas):
+    """Cumulative-stage jitted probes (sort+segment; + components; full
+    pipeline), all on the same kernel path (``use_pallas``)."""
+    import jax
+    import jax.numpy as jnp
+    vecs = P.mode_hash_vectors(sizes)
+    lo = [jnp.asarray(a) for a, _ in vecs]
+    hi = [jnp.asarray(b) for _, b in vecs]
+    plans = KY.plan_context_keys(sizes, with_values=values is not None)
+    use_packed = packed and plans[0].fits
+    n = tuples.shape[1]
+    tuples = jnp.asarray(tuples)
+    values = jnp.asarray(values) if values is not None else None
+
+    def sort_stage(tu, va):
+        return [P.sort_mode(tu, k, values=va,
+                            plan=plans[k] if use_packed else None)
+                for k in range(n)]
+
+    def comp_stage(tu, va):
+        comps = []
+        for k, sm in enumerate(sort_stage(tu, va)):
+            if delta is None:
+                comps.append(P.prime_components(sm, lo[k], hi[k],
+                                                use_pallas))
+            else:
+                comps.append(P.delta_components(sm, lo[k], hi[k], va, delta,
+                                                use_pallas))
+        return P.mix_signatures([c.sig_lo for c in comps],
+                                [c.sig_hi for c in comps])
+
+    f1 = jax.jit(lambda tu, va: [(sm.perm, sm.seg_a, sm.seg_b, sm.first_occ)
+                                 for sm in sort_stage(tu, va)])
+    f12 = jax.jit(comp_stage)
+    full = jax.jit(functools.partial(P.mine_tuples, delta=delta,
+                                     packed=packed, use_pallas=use_pallas))
+    return {"s1": lambda: f1(tuples, values),
+            "s12": lambda: f12(tuples, values),
+            "full": lambda: full(tuples, lo, hi, values=values)}
+
+
+def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
+    raw = {"rows": [], "speedup": {}}
+    full_ctx = synthetic.movielens_like(n_tuples=int(1_000_000 * scale),
+                                        seed=0)
+    noac_ctx = full_ctx.deduplicated()
+    jobs = [
+        ("prime", full_ctx.tuples, None, None),
+        ("noac", noac_ctx.tuples, noac_ctx.values, DELTA),
+    ]
+    rows_disp = []
+    for variant, tuples, values, delta in jobs:
+        n = tuples.shape[0]
+        probes = {}
+        for packed, path in PATHS.items():
+            for stage, fn in _stage_probes(full_ctx.sizes, tuples, values,
+                                           delta, packed,
+                                           use_pallas).items():
+                probes[(path, stage)] = fn
+        best = _interleaved_best(probes, repeat)
+        for path in PATHS.values():
+            stages = {
+                "stage1_sort_ms": best[(path, "s1")],
+                "stage2_components_ms": max(best[(path, "s12")]
+                                            - best[(path, "s1")], 0.0),
+                "stage3_dedup_ms": max(best[(path, "full")]
+                                       - best[(path, "s12")], 0.0),
+                "total_ms": best[(path, "full")]}
+            raw["rows"].append({
+                "backend": "batch", "variant": variant, "dataset": DATASET,
+                "sort_path": path, "n_tuples": int(n),
+                "ms": best[(path, "full")], "stages": stages})
+            rows_disp.append([variant, "batch", path, f"{n:,}",
+                              f"{best[(path, 'full')]:,.1f}",
+                              f"{stages['stage1_sort_ms']:.1f}"])
+        # streaming engine: one full-buffer snapshot per path, interleaved
+        sprobes = {}
+        for packed, path in PATHS.items():
+            sm = StreamingMiner(full_ctx.sizes, packed=packed, delta=delta,
+                                use_pallas=use_pallas, incremental=False)
+            sm.add(tuples, values)
+            sprobes[path] = functools.partial(sm.snapshot, full_remine=True)
+        sbest = _interleaved_best(sprobes, repeat)
+        for path, ms in sbest.items():
+            raw["rows"].append({
+                "backend": "streaming", "variant": variant,
+                "dataset": DATASET, "sort_path": path,
+                "n_tuples": int(n), "ms": ms})
+            rows_disp.append([variant, "streaming", path, f"{n:,}",
+                              f"{ms:,.1f}", ""])
+    # headline ratios: the sort path itself (Stage 1, the subsystem this
+    # PR swaps) and the full pipeline
+    for variant in ("prime", "noac"):
+        by = {r["sort_path"]: r for r in raw["rows"]
+              if r["variant"] == variant and r["backend"] == "batch"}
+        raw["speedup"][variant] = {
+            "stage1_sort": (by["lexsort"]["stages"]["stage1_sort_ms"]
+                            / max(by["packed"]["stages"]["stage1_sort_ms"],
+                                  1e-9)),
+            "end_to_end": by["lexsort"]["ms"] / max(by["packed"]["ms"],
+                                                    1e-9)}
+    print_table("Packed-key vs lexsort (movielens-like)",
+                ["variant", "backend", "path", "|I|", "ms", "s1 ms"],
+                rows_disp)
+    print("speedups:", {v: {k: round(x, 2) for k, x in d.items()}
+                        for v, d in raw["speedup"].items()})
+    save_json("packed.json", raw)
+    return raw
+
+
+if __name__ == "__main__":
+    run()

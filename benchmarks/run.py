@@ -45,6 +45,10 @@ def _mining_summary(results: dict, scale: float) -> dict:
     for r in (results.get("table5") or []):
         row("batch", "noac", "frames-like", r["n"], r["par_ms"])
         row("reference", "noac", "frames-like", r["n"], r["seq_ms"])
+    for r in (results.get("packed") or {}).get("rows", []):
+        row(r["backend"], r["variant"], r["dataset"], r["n_tuples"],
+            r["ms"], sort_path=r["sort_path"],
+            **({"stages": r["stages"]} if "stages" in r else {}))
     dist = results.get("distributed") or {}
     for strategy in ("replicate", "shuffle"):
         for variant, key in (("prime", strategy), ("noac",
@@ -55,7 +59,12 @@ def _mining_summary(results: dict, scale: float) -> dict:
                      else dist.get("n_tuples"))  # noac mines deduplicated
                 row("distributed", variant, "movielens-like", n, d["ms"],
                     strategy=strategy, devices=8)
-    return {"scale": scale, "rows": rows}
+    out = {"scale": scale, "rows": rows}
+    if results.get("packed"):
+        # headline packed-key vs lexsort ratios (Stage-1 sort path and
+        # end-to-end), movielens-like, both variants
+        out["packed_speedup"] = results["packed"]["speedup"]
+    return out
 
 
 def main(argv=None):
@@ -65,10 +74,13 @@ def main(argv=None):
     ap.add_argument("--repeat", type=int, default=3)
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,scaling,"
-                    "distributed")
+                    "distributed,packed")
+    ap.add_argument("--out", default="BENCH_mining.json",
+                    help="summary filename under results/ (smoke runs "
+                    "should not overwrite the tracked full-scale file)")
     args = ap.parse_args(argv)
 
-    from . import distributed, scaling, table3, table4, table5
+    from . import distributed, packed, scaling, table3, table4, table5
     from .common import save_json
     n_dist = int(320_000 * args.scale)
     jobs = {
@@ -80,6 +92,7 @@ def main(argv=None):
         "scaling": lambda: scaling.run(scale=args.scale,
                                        repeat=args.repeat),
         "distributed": lambda: distributed.run(n_tuples=n_dist),
+        "packed": lambda: packed.run(scale=args.scale, repeat=args.repeat),
     }
     only = [s for s in args.only.split(",") if s] or list(jobs)
     rc = 0
@@ -93,8 +106,7 @@ def main(argv=None):
             rc = 1
     if results.get("distributed") is not None:
         results["distributed"]["n_tuples"] = n_dist
-    path = save_json("BENCH_mining.json",
-                     _mining_summary(results, args.scale))
+    path = save_json(args.out, _mining_summary(results, args.scale))
     print(f"\n[bench] wrote {path}")
     return rc
 

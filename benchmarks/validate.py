@@ -1,0 +1,95 @@
+"""Schema gate for ``results/BENCH_mining.json`` (CI bench-smoke step).
+
+Usage: ``PYTHONPATH=src python -m benchmarks.validate [path]``.
+Exits non-zero listing every violation, so a benchmark refactor that
+silently stops emitting rows (or emits malformed ones) fails CI instead
+of producing an empty perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import RESULTS_DIR
+
+BACKENDS = {"batch", "distributed", "streaming", "reference"}
+VARIANTS = {"prime", "noac"}
+SORT_PATHS = {"packed", "lexsort"}
+ROW_REQUIRED = {"backend": str, "variant": str, "dataset": str,
+                "n_tuples": int, "ms": (int, float),
+                "tuples_per_s": (int, float)}
+STAGE_KEYS = {"stage1_sort_ms", "stage2_components_ms", "stage3_dedup_ms",
+              "total_ms"}
+
+
+def validate(doc: dict) -> list[str]:
+    errs = []
+    if not isinstance(doc.get("scale"), (int, float)):
+        errs.append("missing/invalid top-level 'scale'")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return errs + ["'rows' missing or empty"]
+    for i, r in enumerate(rows):
+        where = f"rows[{i}]"
+        for key, typ in ROW_REQUIRED.items():
+            if not isinstance(r.get(key), typ) or isinstance(r.get(key),
+                                                             bool):
+                errs.append(f"{where}: bad '{key}' ({r.get(key)!r})")
+                continue
+        if isinstance(r.get("ms"), (int, float)) and r["ms"] <= 0:
+            errs.append(f"{where}: non-positive ms")
+        if isinstance(r.get("n_tuples"), int) and r["n_tuples"] <= 0:
+            errs.append(f"{where}: non-positive n_tuples")
+        if r.get("backend") not in BACKENDS:
+            errs.append(f"{where}: unknown backend {r.get('backend')!r}")
+        if r.get("variant") not in VARIANTS:
+            errs.append(f"{where}: unknown variant {r.get('variant')!r}")
+        if "sort_path" in r and r["sort_path"] not in SORT_PATHS:
+            errs.append(f"{where}: bad sort_path {r['sort_path']!r}")
+        if "stages" in r:
+            missing = STAGE_KEYS - set(r["stages"])
+            if missing:
+                errs.append(f"{where}: stages missing {sorted(missing)}")
+    paths = {r.get("sort_path") for r in rows}
+    if SORT_PATHS & paths:
+        if not SORT_PATHS <= paths:
+            errs.append("sort-path comparison incomplete: need both "
+                        "'packed' and 'lexsort' rows")
+        sp = doc.get("packed_speedup")
+        if not isinstance(sp, dict) or not VARIANTS <= set(sp):
+            errs.append("missing 'packed_speedup' summary for both "
+                        "variants")
+        else:
+            for v in VARIANTS:
+                for k in ("stage1_sort", "end_to_end"):
+                    if not isinstance(sp[v].get(k), (int, float)):
+                        errs.append(f"packed_speedup[{v}][{k}] missing")
+    return errs
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else os.path.join(RESULTS_DIR,
+                                             "BENCH_mining.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[validate] cannot read {path}: {e}")
+        return 1
+    errs = validate(doc)
+    if errs:
+        for e in errs:
+            print(f"[validate] {e}")
+        print(f"[validate] FAIL: {len(errs)} problem(s) in {path}")
+        return 1
+    n = len(doc["rows"])
+    print(f"[validate] OK: {n} rows, scale={doc['scale']}"
+          + (f", packed_speedup={doc['packed_speedup']}"
+             if "packed_speedup" in doc else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

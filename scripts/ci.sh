@@ -1,5 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: install dev deps and run the tier-1 suite (ROADMAP.md).
+# CI entry point: install dev deps, run the tier-1 suite (ROADMAP.md),
+# then the bench-smoke step: a tiny-scale packed-vs-lexsort benchmark
+# run whose results/BENCH_mining.json must pass the schema gate
+# (benchmarks/validate.py).
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -7,4 +10,11 @@ cd "$(dirname "$0")/.."
 python -m pip install --quiet -r requirements-dev.txt
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+echo "== bench smoke (tiny scale) + BENCH_mining.json schema gate =="
+# smoke output goes to an untracked file so the committed full-scale
+# perf trajectory (results/BENCH_mining.json) is never clobbered
+python -m benchmarks.run --scale 0.004 --repeat 1 --only packed \
+    --out BENCH_smoke.json
+python -m benchmarks.validate results/BENCH_smoke.json

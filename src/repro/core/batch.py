@@ -47,8 +47,10 @@ class BatchMiner(P.PipelineMiner):
     """jit-compiled multimodal clustering of a polyadic context."""
 
     def __init__(self, sizes: Sequence[int], theta: float = 0.0,
-                 seed: int = 0x5EED):
-        super().__init__(sizes, theta=theta, seed=seed)
+                 seed: int = 0x5EED, packed: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
+        super().__init__(sizes, theta=theta, seed=seed, packed=packed,
+                         use_pallas=use_pallas)
 
     def mine_context(self, ctx: PolyadicContext, only_kept: bool = True):
         if ctx.sizes != self.sizes:

@@ -29,6 +29,13 @@ paper's §1:
   Skew shows up as capacity overflow and is *reported*, not silently
   dropped (a reducer-OOM analogue).
 
+  When the context's sort key fits 64 bits (``core.keys``), senders ship
+  the *pre-packed* key words (8 bytes/record instead of (N+1)×4) and
+  owners sort the received words directly — entity ids and value columns
+  are recovered from the key's bit-fields, so owners never re-pack or
+  re-derive the shuffle key.  Wider keys fall back to the original
+  column records behind the same API.
+
 Both strategies return bit-identical signatures/densities to the
 single-shard ``BatchMiner``/``NOACMiner`` (same hash vectors), which is
 what the tests assert.
@@ -43,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from . import keys as K
 from . import pipeline as PL
 
 Axis = tuple[str, ...]
@@ -104,16 +112,32 @@ def _dispatch(records: jnp.ndarray, owner: jnp.ndarray, n_shards: int,
     return buf, valid, slot_safe, ok, overflow
 
 
+def _sorted_components(w_lo_raw, w_hi_raw, first_occ, seg_flag, s_vals,
+                       delta: Optional[float], use_pallas: bool):
+    """Per sorted position: (sig_lo, sig_hi, distinct) of the position's
+    component — the whole key segment (prime) or the δ-window inside it —
+    as boundary differences of the fused masked prefix sums (the same
+    reduction the single-shard pipeline runs)."""
+    pref_lo, pref_hi, pref_cnt = PL.masked_prefix(w_lo_raw, w_hi_raw,
+                                                  first_occ, use_pallas)
+    a, b = PL.segment_bounds(seg_flag)
+    if delta is not None:
+        lo_idx = PL.bsearch(s_vals, a, b, s_vals - jnp.float32(delta),
+                            leq=False)
+        hi_idx = PL.bsearch(s_vals, a, b, s_vals + jnp.float32(delta),
+                            leq=True)
+        a, b = lo_idx, hi_idx
+    return pref_lo[b] - pref_lo[a], pref_hi[b] - pref_hi[a], \
+        pref_cnt[b] - pref_cnt[a]
+
+
 def _owner_stage(recv: jnp.ndarray, rvalid: jnp.ndarray, n_other: int,
                  r_lo: jnp.ndarray, r_hi: jnp.ndarray,
-                 delta: Optional[float]):
-    """Owner-side Reduce-1: segment received ⟨key, e[, value]⟩ records and
-    run the variant's component operator, producing per-record
-    (set-signature, distinct cardinality, tuple-first flag).
-
-    ``delta=None``: prime cumulus (whole key segment).  Otherwise the
-    δ-range operator — each record queries its own value window inside
-    its key segment, exactly like the single-shard pipeline."""
+                 delta: Optional[float], use_pallas: bool = False):
+    """Owner-side Reduce-1 (column-record fallback): segment received
+    ⟨key, e[, value]⟩ records and run the variant's component operator,
+    producing per-record (set-signature, distinct cardinality,
+    tuple-first flag)."""
     big = jnp.int32(np.iinfo(np.int32).max)
     key_cols = [jnp.where(rvalid, recv[:, j], big) for j in range(n_other)]
     e_col = jnp.where(rvalid, recv[:, n_other], big)
@@ -129,61 +153,76 @@ def _owner_stage(recv: jnp.ndarray, rvalid: jnp.ndarray, n_other: int,
     s_e = e_col[perm]
     s_valid = rvalid[perm]
     seg_flag = PL.segment_starts(s_keys)
-    seg = jnp.cumsum(seg_flag) - 1
     s_vals = vals[perm] if vals is not None else None
     first_occ = PL.segment_starts(
         s_keys + ([s_vals] if s_vals is not None else []) + [s_e]) & s_valid
     e_safe = jnp.where(s_valid, s_e, 0)
-    w_lo = jnp.where(first_occ, r_lo[e_safe], jnp.uint32(0))
-    w_hi = jnp.where(first_occ, r_hi[e_safe], jnp.uint32(0))
-    inv = jnp.zeros((l,), jnp.int32).at[perm].set(jnp.arange(l, dtype=jnp.int32))
-    if delta is None:
-        sig_lo = jax.ops.segment_sum(w_lo, seg, num_segments=l)
-        sig_hi = jax.ops.segment_sum(w_hi, seg, num_segments=l)
-        distinct = jax.ops.segment_sum(first_occ.astype(jnp.int32), seg,
-                                       num_segments=l)
-        # per-received-record responses, back in recv-slot order
-        return (sig_lo[seg][inv], sig_hi[seg][inv], distinct[seg][inv],
-                first_occ[inv])
-    # δ-range: prefix sums of masked weights + two binary searches per record
-    zero_u = jnp.zeros((1,), jnp.uint32)
-    pref_lo = jnp.concatenate([zero_u, jnp.cumsum(w_lo, dtype=jnp.uint32)])
-    pref_hi = jnp.concatenate([zero_u, jnp.cumsum(w_hi, dtype=jnp.uint32)])
-    pref_cnt = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32),
-         jnp.cumsum(first_occ.astype(jnp.int32), dtype=jnp.int32)])
-    pos = jnp.arange(l)
-    seg_start = jax.ops.segment_min(pos, seg, num_segments=l)
-    seg_len = jax.ops.segment_sum(jnp.ones((l,), jnp.int32), seg,
-                                  num_segments=l)
-    a = seg_start[seg]
-    b = a + seg_len[seg]
-    lo_idx = PL.bsearch(s_vals, a, b, s_vals - jnp.float32(delta), leq=False)
-    hi_idx = PL.bsearch(s_vals, a, b, s_vals + jnp.float32(delta), leq=True)
-    sig_lo = pref_lo[hi_idx] - pref_lo[lo_idx]
-    sig_hi = pref_hi[hi_idx] - pref_hi[lo_idx]
-    distinct = pref_cnt[hi_idx] - pref_cnt[lo_idx]
+    sig_lo, sig_hi, distinct = _sorted_components(
+        r_lo[e_safe], r_hi[e_safe], first_occ, seg_flag, s_vals, delta,
+        use_pallas)
+    inv = jnp.zeros((l,), jnp.int32).at[perm].set(
+        jnp.arange(l, dtype=jnp.int32))
+    return sig_lo[inv], sig_hi[inv], distinct[inv], first_occ[inv]
+
+
+def _owner_stage_packed(recv: jnp.ndarray, rvalid: jnp.ndarray,
+                        plan: K.ModeKeyPlan, r_lo: jnp.ndarray,
+                        r_hi: jnp.ndarray, delta: Optional[float],
+                        use_pallas: bool = False):
+    """Owner-side Reduce-1 over *pre-packed* key words: one stable sort
+    keyed on (validity, key words) with the permutation carried as a
+    payload; entity ids and value columns are bit-field extractions from
+    the shipped key, so owners never re-pack."""
+    l = recv.shape[0]
+    words = tuple(recv[:, i] for i in range(recv.shape[1]))
+    inval = (~rvalid).astype(jnp.uint32)   # invalid slots sort last
+    iota = jnp.arange(l, dtype=jnp.int32)
+    out = jax.lax.sort((inval,) + words + (rvalid, iota),
+                       num_keys=1 + len(words), is_stable=True)
+    s_inval, s_words = out[0], tuple(out[1:1 + len(words)])
+    s_valid, perm = out[-2], out[-1]
+    seg_flag = PL.segment_starts(
+        [s_inval] + list(K.drop_low_bits(s_words, plan.seg_shift)))
+    first_occ = PL.segment_starts([s_inval] + list(s_words)) & s_valid
+    e_safe = jnp.where(s_valid, plan.extract_entity(s_words), 0)
+    s_vals = plan.extract_values(s_words) if delta is not None else None
+    sig_lo, sig_hi, distinct = _sorted_components(
+        r_lo[e_safe], r_hi[e_safe], first_occ, seg_flag, s_vals, delta,
+        use_pallas)
+    inv = jnp.zeros((l,), jnp.int32).at[perm].set(iota)
     return sig_lo[inv], sig_hi[inv], distinct[inv], first_occ[inv]
 
 
 def _shuffle_mode(tuples, values, k, axes, n_shards, capacity, r_lo, r_hi,
-                  delta):
-    """Stages 1+2 of the M/R algorithm for one mode over ``axes``."""
+                  delta, plan: Optional[K.ModeKeyPlan] = None,
+                  use_pallas: bool = False):
+    """Stages 1+2 of the M/R algorithm for one mode over ``axes``.
+
+    With a fitting ``plan``, records on the wire are the packed key
+    words (8 bytes each); otherwise the original column records."""
     n = tuples.shape[1]
     others = [tuples[:, j] for j in range(n) if j != k]
     owner = (_hash_columns(others, 0xA11CE + k) %
              jnp.uint32(n_shards)).astype(jnp.int32)
-    cols = others + [tuples[:, k]]
-    if delta is not None:
-        cols = cols + [jax.lax.bitcast_convert_type(values, jnp.int32)]
-    records = jnp.stack(cols, axis=1)
+    if plan is not None and plan.fits:
+        records = jnp.stack(plan.pack_device(tuples, values), axis=1)
+    else:
+        plan = None
+        cols = others + [tuples[:, k]]
+        if delta is not None:
+            cols = cols + [jax.lax.bitcast_convert_type(values, jnp.int32)]
+        records = jnp.stack(cols, axis=1)
     buf, valid, slot, ok, overflow = _dispatch(records, owner, n_shards,
                                                capacity)
     recv = jax.lax.all_to_all(buf, axes, 0, 0, tiled=True)
     rvalid = jax.lax.all_to_all(valid.astype(jnp.int32), axes, 0, 0,
                                 tiled=True).astype(bool)
-    sig_lo, sig_hi, card, tfirst = _owner_stage(recv, rvalid, n - 1,
-                                                r_lo, r_hi, delta)
+    if plan is not None:
+        sig_lo, sig_hi, card, tfirst = _owner_stage_packed(
+            recv, rvalid, plan, r_lo, r_hi, delta, use_pallas)
+    else:
+        sig_lo, sig_hi, card, tfirst = _owner_stage(
+            recv, rvalid, n - 1, r_lo, r_hi, delta, use_pallas)
     resp = jnp.stack([sig_lo, sig_hi, card.astype(jnp.uint32),
                       tfirst.astype(jnp.uint32)], axis=1)
     resp = jax.lax.all_to_all(resp, axes, 0, 0, tiled=True)
@@ -209,13 +248,18 @@ class DistributedMiner:
       delta: many-valued δ — switches the engine to the NOAC variant.
       rho_min: NOAC minimal density (plays θ's role).
       minsup: NOAC minimal per-mode cardinality.
+      packed: packed-key sort path (None: auto when the key fits 64 bits;
+        False: column lexsort baseline).
+      use_pallas: fused Pallas segment reductions (None: on TPU only).
     """
 
     def __init__(self, sizes: Sequence[int], mesh, axes="data",
                  theta: float = 0.0, strategy: str = "replicate",
                  capacity_factor: float = 2.0, seed: int = 0x5EED,
                  max_retries: int = 4, delta: Optional[float] = None,
-                 rho_min: float = 0.0, minsup: int = 0):
+                 rho_min: float = 0.0, minsup: int = 0,
+                 packed: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
         self.sizes = tuple(int(s) for s in sizes)
         self.mesh = mesh
         self.axes: Axis = (axes,) if isinstance(axes, str) else tuple(axes)
@@ -226,6 +270,14 @@ class DistributedMiner:
         self.capacity_factor = float(capacity_factor)
         self.max_retries = int(max_retries)
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
+        self.packed = packed
+        self.key_plans = K.plan_context_keys(self.sizes,
+                                             with_values=delta is not None)
+        self.packed_active = ((packed is not False)
+                              and self.key_plans[0].fits)
+        from ..kernels import ops as kops
+        self.use_pallas = (kops.on_tpu() if use_pallas is None
+                           else bool(use_pallas))
         vecs = PL.mode_hash_vectors(self.sizes, seed)
         self._lo = [jnp.asarray(lo) for lo, _ in vecs]
         self._hi = [jnp.asarray(hi) for _, hi in vecs]
@@ -242,7 +294,8 @@ class DistributedMiner:
         vfull = (jax.lax.all_gather(values, axes, tiled=True)
                  if self.delta is not None else None)
         res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
-                             theta=self.theta, minsup=self.minsup)
+                             theta=self.theta, minsup=self.minsup,
+                             packed=self.packed, use_pallas=self.use_pallas)
         # keep this shard's block
         shard_id = jax.lax.axis_index(axes)
         tl = tuples.shape[0]
@@ -271,7 +324,9 @@ class DistributedMiner:
         for k in range(n):
             slo, shi, card, tfirst, ok, ovf = _shuffle_mode(
                 tuples, values, k, axes, nsh, capacity, lo[k], hi[k],
-                self.delta)
+                self.delta,
+                plan=self.key_plans[k] if self.packed_active else None,
+                use_pallas=self.use_pallas)
             per_lo.append(slo)
             per_hi.append(shi)
             cards.append(card)
@@ -287,7 +342,8 @@ class DistributedMiner:
         g_lo = jax.lax.all_gather(sig_lo, axes, tiled=True)
         g_hi = jax.lax.all_gather(sig_hi, axes, tiled=True)
         g_tf = jax.lax.all_gather(tuple_first, axes, tiled=True)
-        gen_of, is_unique = PL.stage3_dedup(g_lo, g_hi, g_tf)
+        gen_of, is_unique = PL.stage3_dedup(g_lo, g_hi, g_tf,
+                                            packed=self.packed is not False)
         shard_id = jax.lax.axis_index(axes)
         sl = jax.lax.dynamic_slice_in_dim
         start = shard_id * tl

@@ -82,7 +82,9 @@ def mine(ctx: PolyadicContext, backend: str = "batch",
     """Mine ``ctx`` with the selected backend/variant.
 
     Common params: ``theta`` (prime min density), ``delta``/``rho_min``/
-    ``minsup`` (noac), ``seed``.  Backend-specific: ``mesh``/``axes``/
+    ``minsup`` (noac), ``seed``, ``packed`` (packed-key sort path; None =
+    auto, False = lexsort baseline), ``use_pallas`` (fused Pallas segment
+    reductions; None = on TPU only).  Backend-specific: ``mesh``/``axes``/
     ``strategy``/``capacity_factor`` (distributed), ``chunks``
     (streaming).  ``variant='noac'`` requires ``delta``.
     """
@@ -112,6 +114,11 @@ def _noac_ctx(ctx: PolyadicContext) -> PolyadicContext:
 # where ``rerun`` re-executes the mining step warm (no re-compile).
 # ---------------------------------------------------------------------------
 
+def _pipe_kw(p):
+    """Pipeline-core params shared by every jax backend."""
+    return {"packed": p.get("packed"), "use_pallas": p.get("use_pallas")}
+
+
 def _timed(step, block=True):
     """Wrap a mining step: each call blocks on the device result (when it
     has one) and records its wall time in ``go.last_s``."""
@@ -129,7 +136,7 @@ def _timed(step, block=True):
 @register_engine("batch", "prime")
 def _batch_prime(ctx, p):
     miner = BatchMiner(ctx.sizes, theta=p.get("theta", 0.0),
-                       seed=p.get("seed", 0x5EED))
+                       seed=p.get("seed", 0x5EED), **_pipe_kw(p))
     rerun = _timed(lambda: miner(ctx.tuples))
     res = rerun()
     clusters = miner.materialise(res)
@@ -141,7 +148,8 @@ def _batch_noac(ctx, p):
     ctx = _noac_ctx(ctx)
     miner = NOACMiner(ctx.sizes, delta=p["delta"],
                       rho_min=p.get("rho_min", 0.0),
-                      minsup=p.get("minsup", 0), seed=p.get("seed", 0x5EED))
+                      minsup=p.get("minsup", 0), seed=p.get("seed", 0x5EED),
+                      **_pipe_kw(p))
     rerun = _timed(lambda: miner(ctx.tuples, ctx.values))
     res = rerun()
     clusters = miner.materialise(res)
@@ -159,7 +167,7 @@ def _run_distributed(ctx, p, values, **variant_kw):
         ctx.sizes, mesh, axes=p.get("axes", "data"),
         strategy=p.get("strategy", "replicate"),
         capacity_factor=p.get("capacity_factor", 2.0),
-        seed=p.get("seed", 0x5EED), **variant_kw)
+        seed=p.get("seed", 0x5EED), **_pipe_kw(p), **variant_kw)
     tuples = pad_tuples(ctx.tuples, miner.n_shards)
     values = (pad_values(values, miner.n_shards)
               if values is not None else None)
@@ -184,7 +192,7 @@ def _distributed_noac(ctx, p):
 def _run_streaming(ctx, p, values, **variant_kw):
     miner = StreamingMiner(ctx.sizes, seed=p.get("seed", 0x5EED),
                            incremental=p.get("incremental", True),
-                           **variant_kw)
+                           **_pipe_kw(p), **variant_kw)
     chunks = max(1, int(p.get("chunks", 8)))
     step = -(-ctx.num_tuples // chunks)
 

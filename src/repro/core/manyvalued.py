@@ -23,7 +23,7 @@ to this single-shard engine.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -45,9 +45,11 @@ class NOACMiner(P.PipelineMiner):
     """jit-compiled many-valued (δ) multimodal clustering."""
 
     def __init__(self, sizes: Sequence[int], delta: float,
-                 rho_min: float = 0.0, minsup: int = 0, seed: int = 0x5EED):
+                 rho_min: float = 0.0, minsup: int = 0, seed: int = 0x5EED,
+                 packed: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
         super().__init__(sizes, theta=rho_min, delta=delta, minsup=minsup,
-                         seed=seed)
+                         seed=seed, packed=packed, use_pallas=use_pallas)
         self.rho_min = float(rho_min)
 
     def mine_context(self, ctx: PolyadicContext):

@@ -5,11 +5,14 @@ The paper's M/R algorithm is the *same* three jobs for the prime OAC,
 multimodal (N-ary) and many-valued (NOAC, §3.2/§4.3) variants; only the
 per-key *component operator* differs.  This module is that factoring:
 
-  Stage 1  ``sort_mode``            per-mode lexicographic sort of the
-           tuple table by the mode's shuffle key (the N-1 "other"
-           columns, plus the value column for many-valued contexts) and
-           segmentation of the sorted order — the Hadoop
-           shuffle-by-subrelation as a sort.
+  Stage 1  ``sort_mode``            per-mode sort of the tuple table by
+           the mode's shuffle key (the N-1 "other" columns, plus the
+           value column for many-valued contexts) and segmentation of
+           the sorted order — the Hadoop shuffle-by-subrelation as a
+           sort.  When the key fits 64 bits (``core.keys`` plans), the
+           sort is ONE stable ``lax.sort`` over the packed key word(s)
+           with payloads carried as sort operands; otherwise the
+           N+1-column lexsort fallback runs behind the same API.
   comp-op  ``prime_components``     cumulus = the whole key segment.
            ``delta_components``     δ-range inside the key segment
                                     (two vectorised binary searches).
@@ -44,6 +47,8 @@ import numpy as np
 
 # jax version compatibility (canonical home: repro._compat)
 from .._compat import shard_map  # noqa: F401  (re-export for the engines)
+from ..kernels import ops as kops
+from . import keys as K
 
 
 # ---------------------------------------------------------------------------
@@ -103,55 +108,97 @@ def segment_starts(sorted_key_cols: Sequence[jnp.ndarray]) -> jnp.ndarray:
     return change
 
 
+def segment_bounds(flags: jnp.ndarray):
+    """Per sorted position: the [a, b) window of its own run, where
+    ``flags`` marks run starts (``flags[0]`` must be True).
+
+    Two O(T) scans — a forward cummax and a reverse cummin — instead of
+    the segment-id cumsum + ``segment_min``/``segment_sum`` scatter
+    formulation, which dominates Stage-1 time on scatter-unfriendly
+    backends."""
+    t = flags.shape[0]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    a = jax.lax.cummax(jnp.where(flags, pos, 0))
+    suff = jax.lax.cummin(jnp.where(flags, pos, jnp.int32(t)), reverse=True)
+    b = jnp.concatenate([suff[1:], jnp.full((1,), t, jnp.int32)])
+    return a, b
+
+
 @dataclasses.dataclass
 class SortedMode:
     """Stage-1 output for one mode: the tuple table sorted by the mode's
-    shuffle key and segmented by it.  All arrays have length T;
-    ``seg_start``/``seg_len`` are indexed by segment id (padded to T)."""
+    shuffle key and segmented by it.  All arrays have length T and are
+    indexed by *sorted* position; ``seg_a``/``seg_b`` delimit each
+    position's own key segment as a half-open window of sorted order."""
     perm: jnp.ndarray         # sorted order of tuples
     inv: jnp.ndarray          # inverse permutation (original → sorted pos)
-    seg: jnp.ndarray          # segment id per *sorted* position
-    seg_start: jnp.ndarray    # first sorted position of each segment
-    seg_len: jnp.ndarray      # total entries (with duplicates)
+    seg_a: jnp.ndarray        # segment start per sorted position
+    seg_b: jnp.ndarray        # segment end (exclusive) per sorted position
     sorted_e: jnp.ndarray     # mode-k entity column under perm
     sorted_vals: Optional[jnp.ndarray]  # values under perm (None: prime)
     first_occ: jnp.ndarray    # per sorted position: first of its
                               # identical (key[, value], e) run
+    sorted_words: Optional[tuple] = None  # packed key words (packed path)
+    plan: Optional[K.ModeKeyPlan] = None  # the key layout (packed path)
 
 jax.tree_util.register_dataclass(
-    SortedMode, data_fields=["perm", "inv", "seg", "seg_start", "seg_len",
-                             "sorted_e", "sorted_vals", "first_occ"],
-    meta_fields=[])
+    SortedMode, data_fields=["perm", "inv", "seg_a", "seg_b",
+                             "sorted_e", "sorted_vals", "first_occ",
+                             "sorted_words"],
+    meta_fields=["plan"])
 
 
 def sort_mode(tuples: jnp.ndarray, k: int,
               values: Optional[jnp.ndarray] = None,
-              perm: Optional[jnp.ndarray] = None) -> SortedMode:
+              perm: Optional[jnp.ndarray] = None,
+              plan: Optional[K.ModeKeyPlan] = None) -> SortedMode:
     """Stage 1 for mode k.  Sort key: (other columns..., [value,] e_k), so
     duplicates of a (key[, value], e) pair land adjacent and the
     ``first_occ`` mask makes all downstream sums duplicate-idempotent.
 
+    ``plan`` (a fitting ``keys.ModeKeyPlan``) selects the packed-key
+    path: one stable ``lax.sort`` on 1–2 uint32 key words carrying the
+    permutation iota as payload; the entity and value columns are
+    decoded from the sorted key's bit-fields, and segment/first-
+    occurrence flags are 1–2 word comparisons.  Without a plan (or when
+    the key exceeds 64 bits) the N+1-column lexsort fallback runs.  Both
+    paths are bit-identical (the packed word order *is* the
+    lexicographic column order, and both sorts are stable).
+
     ``perm`` short-circuits the sort with a precomputed permutation (the
     streaming engine maintains one by merging sorted runs)."""
     t, n = tuples.shape
-    others = [tuples[:, j] for j in range(n) if j != k]
-    tail = ([values] if values is not None else []) + [tuples[:, k]]
-    if perm is None:
-        perm = lex_perm(others + tail)
-    s_others = [c[perm] for c in others]
-    s_e = tuples[perm, k]
-    s_vals = values[perm] if values is not None else None
-    seg_flag = segment_starts(s_others)
-    seg = jnp.cumsum(seg_flag) - 1
-    pos = jnp.arange(t)
-    seg_start = jax.ops.segment_min(pos, seg, num_segments=t)
-    seg_len = jax.ops.segment_sum(jnp.ones((t,), jnp.int32), seg,
-                                  num_segments=t)
-    first_occ = segment_starts(
-        s_others + ([s_vals] if s_vals is not None else []) + [s_e])
-    inv = jnp.zeros((t,), jnp.int32).at[perm].set(pos.astype(jnp.int32))
-    return SortedMode(perm, inv, seg, seg_start, seg_len, s_e, s_vals,
-                      first_occ)
+    s_words = None
+    if plan is not None and plan.fits:
+        words = plan.pack_device(tuples, values)
+        if perm is None:
+            s_words, (perm,) = K.sort_with_payload(
+                words, (jnp.arange(t, dtype=jnp.int32),))
+        else:
+            s_words = tuple(w[perm] for w in words)
+        # the sorted value column is a bit-field of the sorted key — decode
+        # it instead of carrying a float payload through the sort
+        s_vals = plan.extract_values(s_words) if values is not None else None
+        s_e = plan.extract_entity(s_words)
+        seg_flag = segment_starts(K.drop_low_bits(s_words, plan.seg_shift))
+        first_occ = segment_starts(s_words)
+    else:
+        plan = None
+        others = [tuples[:, j] for j in range(n) if j != k]
+        tail = ([values] if values is not None else []) + [tuples[:, k]]
+        if perm is None:
+            perm = lex_perm(others + tail)
+        s_others = [c[perm] for c in others]
+        s_e = tuples[perm, k]
+        s_vals = values[perm] if values is not None else None
+        seg_flag = segment_starts(s_others)
+        first_occ = segment_starts(
+            s_others + ([s_vals] if s_vals is not None else []) + [s_e])
+    seg_a, seg_b = segment_bounds(seg_flag)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    inv = jnp.zeros((t,), jnp.int32).at[perm].set(pos)
+    return SortedMode(perm, inv, seg_a, seg_b, s_e, s_vals, first_occ,
+                      s_words, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -177,22 +224,32 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def prime_components(sm: SortedMode, r_lo: jnp.ndarray,
-                     r_hi: jnp.ndarray) -> ModeComponents:
+def masked_prefix(w_lo: jnp.ndarray, w_hi: jnp.ndarray,
+                  first_occ: jnp.ndarray, use_pallas: bool = False):
+    """Exclusive (length T+1) prefix sums of first-occurrence-masked hash
+    weights and of the mask — the one segment-reduction sweep both
+    component operators consume (``kernels/segment_reduce`` fuses the
+    three sums into a single pass; ``use_pallas=False`` runs the
+    bit-identical jnp oracle)."""
+    lo, hi, cnt = kops.segment_reduce(w_lo, w_hi, first_occ,
+                                      use_pallas=use_pallas)
+    zu = jnp.zeros((1,), jnp.uint32)
+    return (jnp.concatenate([zu, lo]), jnp.concatenate([zu, hi]),
+            jnp.concatenate([jnp.zeros((1,), jnp.int32), cnt]))
+
+
+def prime_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
+                     use_pallas: bool = False) -> ModeComponents:
     """Prime cumulus operator (Alg. 2+3): the component of a tuple along a
-    mode is its *whole* key segment.  Signatures/cardinalities are segment
-    sums of first-occurrence-masked hash weights."""
-    t = sm.sorted_e.shape[0]
-    w_lo = jnp.where(sm.first_occ, r_lo[sm.sorted_e], jnp.uint32(0))
-    w_hi = jnp.where(sm.first_occ, r_hi[sm.sorted_e], jnp.uint32(0))
-    sig_lo = jax.ops.segment_sum(w_lo, sm.seg, num_segments=t)
-    sig_hi = jax.ops.segment_sum(w_hi, sm.seg, num_segments=t)
-    distinct = jax.ops.segment_sum(sm.first_occ.astype(jnp.int32), sm.seg,
-                                   num_segments=t)
-    my = sm.seg[sm.inv]
-    start = sm.seg_start[my].astype(jnp.int32)
-    return ModeComponents(sig_lo[my], sig_hi[my], distinct[my], start,
-                          start + sm.seg_len[my].astype(jnp.int32))
+    mode is its *whole* key segment.  Signatures/cardinalities are
+    boundary differences of the fused masked prefix sums (modular uint32
+    arithmetic makes them exactly the segment sums)."""
+    pref_lo, pref_hi, pref_cnt = masked_prefix(
+        r_lo[sm.sorted_e], r_hi[sm.sorted_e], sm.first_occ, use_pallas)
+    a = sm.seg_a[sm.inv]
+    b = sm.seg_b[sm.inv]
+    return ModeComponents(pref_lo[b] - pref_lo[a], pref_hi[b] - pref_hi[a],
+                          pref_cnt[b] - pref_cnt[a], a, b)
 
 
 def bsearch(vals: jnp.ndarray, lo0: jnp.ndarray, hi0: jnp.ndarray,
@@ -214,29 +271,42 @@ def bsearch(vals: jnp.ndarray, lo0: jnp.ndarray, hi0: jnp.ndarray,
 
 
 def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
-                     values: jnp.ndarray, delta: float) -> ModeComponents:
+                     values: jnp.ndarray, delta: float,
+                     use_pallas: bool = False) -> ModeComponents:
     """δ-range operator (NOAC, §3.2/§4.3): the component of a tuple with
     value v0 is the contiguous value-window [v0-δ, v0+δ] *inside* its key
     segment, found with two binary searches.  Signatures are differences
-    of prefix sums of first-occurrence-masked hash weights (modular
-    arithmetic makes range differences exact)."""
-    t = sm.sorted_e.shape[0]
-    w_lo = jnp.where(sm.first_occ, r_lo[sm.sorted_e], jnp.uint32(0))
-    w_hi = jnp.where(sm.first_occ, r_hi[sm.sorted_e], jnp.uint32(0))
-    zero_u = jnp.zeros((1,), jnp.uint32)
-    pref_lo = jnp.concatenate([zero_u, jnp.cumsum(w_lo, dtype=jnp.uint32)])
-    pref_hi = jnp.concatenate([zero_u, jnp.cumsum(w_hi, dtype=jnp.uint32)])
-    pref_cnt = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32),
-         jnp.cumsum(sm.first_occ.astype(jnp.int32), dtype=jnp.int32)])
+    of the fused masked prefix sums (modular arithmetic makes range
+    differences exact)."""
+    pref_lo, pref_hi, pref_cnt = masked_prefix(
+        r_lo[sm.sorted_e], r_hi[sm.sorted_e], sm.first_occ, use_pallas)
     # per-tuple query window inside its own segment
-    my = sm.seg[sm.inv]
-    a = sm.seg_start[my]
-    b = a + sm.seg_len[my]
-    lo_idx = bsearch(sm.sorted_vals, a, b, values - jnp.float32(delta),
-                     leq=False)
-    hi_idx = bsearch(sm.sorted_vals, a, b, values + jnp.float32(delta),
-                     leq=True)
+    if sm.sorted_words is not None and sm.plan is not None \
+            and sm.plan.with_values:
+        # packed path: δ-window bounds by *global* search over the sorted
+        # key words — the query key carries the tuple's own subrelation
+        # prefix with the value lane set to v∓δ and e_k at its extreme,
+        # so the search self-clamps to the segment and no per-query
+        # window (or segment_bounds scan) is needed.  -0.0 targets are
+        # normalised so word order agrees with float order.
+        plan, d = sm.plan, jnp.float32(delta)
+        t_lo, t_hi = sm.sorted_vals - d, sm.sorted_vals + d
+        t_lo = jnp.where(t_lo == 0, jnp.float32(0.0), t_lo)
+        t_hi = jnp.where(t_hi == 0, jnp.float32(0.0), t_hi)
+        q_lo = plan.delta_query_words(sm.sorted_words,
+                                      K.float_sort_bits(t_lo))
+        q_hi = plan.delta_query_words(sm.sorted_words,
+                                      K.float_sort_bits(t_hi))
+        q_hi = q_hi[:-1] + (q_hi[-1] | jnp.uint32(plan.e_mask),)
+        lo_idx = K.search_words(sm.sorted_words, q_lo, upper=False)[sm.inv]
+        hi_idx = K.search_words(sm.sorted_words, q_hi, upper=True)[sm.inv]
+    else:
+        a = sm.seg_a[sm.inv]
+        b = sm.seg_b[sm.inv]
+        lo_idx = bsearch(sm.sorted_vals, a, b, values - jnp.float32(delta),
+                         leq=False)
+        hi_idx = bsearch(sm.sorted_vals, a, b, values + jnp.float32(delta),
+                         leq=True)
     return ModeComponents(pref_lo[hi_idx] - pref_lo[lo_idx],
                           pref_hi[hi_idx] - pref_hi[lo_idx],
                           pref_cnt[hi_idx] - pref_cnt[lo_idx],
@@ -249,26 +319,40 @@ def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def stage3_dedup(sig_lo: jnp.ndarray, sig_hi: jnp.ndarray,
-                 tuple_first: jnp.ndarray):
+                 tuple_first: jnp.ndarray, packed: bool = True):
     """Dedup clusters on their signatures with one sort; count *distinct*
     generating tuples per cluster (Alg. 6+7 reducer semantics).
+
+    ``packed`` keys the sort on the (sig_lo, sig_hi) pair — the 2×32-bit
+    cluster signature as one uint64 word — and carries ``tuple_first``
+    and the permutation as sort payloads; the lexsort branch is the
+    bit-identical baseline kept for benchmarking.
 
     Returns (gen_count, is_unique) in original tuple order; ``is_unique``
     marks the first distinct generating tuple of each cluster."""
     t = sig_lo.shape[0]
-    order = lex_perm([sig_lo, sig_hi])
-    s_lo, s_hi = sig_lo[order], sig_hi[order]
+    if packed:
+        (s_lo, s_hi), (order,) = K.sort_with_payload(
+            (sig_lo, sig_hi), (jnp.arange(t, dtype=jnp.int32),))
+    else:
+        order = lex_perm([sig_lo, sig_hi])
+        s_lo, s_hi = sig_lo[order], sig_hi[order]
     s_first = tuple_first[order]
     cstart = segment_starts([s_lo, s_hi])
-    cseg = jnp.cumsum(cstart) - 1
-    gen = jax.ops.segment_sum(s_first.astype(jnp.int32), cseg,
-                              num_segments=t)
-    gen_of = jnp.zeros((t,), jnp.int32).at[order].set(gen[cseg])
-    pos = jnp.arange(t)
-    first_pos = jax.ops.segment_min(jnp.where(s_first, pos, t), cseg,
-                                    num_segments=t)
-    uniq_sorted = (pos == first_pos[cseg]) & s_first
-    is_unique = jnp.zeros((t,), bool).at[order].set(uniq_sorted)
+    a, b = segment_bounds(cstart)
+    # distinct generating tuples per cluster: prefix-count differences at
+    # the cluster window bounds (no scatter); a tuple is the cluster's
+    # unique representative iff it is the window's first s_first entry.
+    pref = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(s_first.astype(jnp.int32), dtype=jnp.int32)])
+    pos = jnp.arange(t, dtype=jnp.int32)
+    uniq_sorted = s_first & (pref[pos] == pref[a])
+    # one inverse-permutation scatter + two gathers (scatters dominate
+    # the non-sort cost of the pipeline on scatter-unfriendly backends)
+    inv_order = jnp.zeros((t,), jnp.int32).at[order].set(pos)
+    gen_of = (pref[b] - pref[a])[inv_order]
+    is_unique = uniq_sorted[inv_order]
     return gen_of, is_unique
 
 
@@ -306,23 +390,37 @@ def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
                 values: Optional[jnp.ndarray] = None,
                 delta: Optional[float] = None, theta: float = 0.0,
                 minsup: int = 0,
-                perms: Optional[jnp.ndarray] = None) -> PipelineResult:
+                perms: Optional[jnp.ndarray] = None,
+                packed: Optional[bool] = None,
+                use_pallas: Optional[bool] = None) -> PipelineResult:
     """The full three-stage pipeline on one shard (jit-able; T, N static).
 
     ``delta=None`` runs the prime cumulus operator (multimodal/OAC);
     otherwise the δ-range operator (NOAC) with ``theta`` acting as ρ_min
     and ``minsup`` as the per-mode minimal cardinality.  ``perms``
-    (N, T) supplies precomputed per-mode sort orders (streaming)."""
+    (N, T) supplies precomputed per-mode sort orders (streaming).
+
+    ``packed`` selects the single-word Stage-1/3 sort path (None: packed
+    whenever the context's key fits 64 bits; False: always lexsort — the
+    benchmarking baseline).  ``use_pallas`` routes the Stage-2 segment
+    reductions through the fused Pallas kernel (None: on TPU only)."""
     t, n = tuples.shape
+    if use_pallas is None:
+        use_pallas = kops.on_tpu()
+    plans = K.plan_context_keys([h.shape[0] for h in hash_lo],
+                                with_values=values is not None)
+    use_packed = (packed is not False) and plans[0].fits
     comps, sms = [], []
     for k in range(n):
         sm = sort_mode(tuples, k, values=values,
-                       perm=None if perms is None else perms[k])
+                       perm=None if perms is None else perms[k],
+                       plan=plans[k] if use_packed else None)
         if delta is None:
-            comps.append(prime_components(sm, hash_lo[k], hash_hi[k]))
+            comps.append(prime_components(sm, hash_lo[k], hash_hi[k],
+                                          use_pallas))
         else:
             comps.append(delta_components(sm, hash_lo[k], hash_hi[k],
-                                          values, delta))
+                                          values, delta, use_pallas))
         sms.append(sm)
     # Stage 2: per-tuple cluster = mix of per-mode component aggregates.
     sig_lo, sig_hi = mix_signatures([c.sig_lo for c in comps],
@@ -332,9 +430,11 @@ def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
         volume = volume * c.card.astype(jnp.float32)
     # Stage 3.  Mode 0's sort key covers the whole row, so its
     # first-of-run flags already mark the lowest-index copy of each
-    # duplicate row (stable sorts) — no extra full-table sort needed.
-    tfirst = jnp.zeros((t,), bool).at[sms[0].perm].set(sms[0].first_occ)
-    gen_of, is_unique = stage3_dedup(sig_lo, sig_hi, tfirst)
+    # duplicate row (stable sorts) — no extra full-table sort needed;
+    # gathering through mode 0's inverse permutation avoids a scatter.
+    tfirst = sms[0].first_occ[sms[0].inv]
+    gen_of, is_unique = stage3_dedup(sig_lo, sig_hi, tfirst,
+                                     packed=packed is not False)
     density = gen_of.astype(jnp.float32) / jnp.maximum(volume, 1.0)
     keep = is_unique & (density >= jnp.float32(theta))
     if minsup:
@@ -379,17 +479,27 @@ class PipelineMiner:
 
     def __init__(self, sizes: Sequence[int], *, theta: float = 0.0,
                  delta: Optional[float] = None, minsup: int = 0,
-                 seed: int = 0x5EED):
+                 seed: int = 0x5EED, packed: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
         self.sizes = tuple(int(s) for s in sizes)
         self.theta = float(theta)
         self.delta = None if delta is None else float(delta)
         self.minsup = int(minsup)
+        self.packed = packed
+        self.use_pallas = use_pallas
+        self.key_plans = K.plan_context_keys(self.sizes,
+                                             with_values=delta is not None)
         vecs = mode_hash_vectors(self.sizes, seed)
         self._lo = [jnp.asarray(lo) for lo, _ in vecs]
         self._hi = [jnp.asarray(hi) for _, hi in vecs]
         self._fn = jax.jit(functools.partial(
             mine_tuples, delta=self.delta, theta=self.theta,
-            minsup=self.minsup))
+            minsup=self.minsup, packed=packed, use_pallas=use_pallas))
+
+    @property
+    def packed_active(self) -> bool:
+        """True when Stage 1 runs the packed single-sort path."""
+        return (self.packed is not False) and self.key_plans[0].fits
 
     def __call__(self, tuples, values=None) -> PipelineResult:
         tuples = jnp.asarray(tuples, jnp.int32)

@@ -22,11 +22,13 @@ bit-identical signatures) to a full re-mine of the buffer, which is what
 the tests assert.  Both variants stream: prime/multimodal (θ) and NOAC
 (δ/ρ_min/minsup) — the value column simply joins each mode's sort key.
 
-Mechanics: run merging works on per-mode uint64-packed sort keys
-(entity-id bit-fields, plus an order-preserving float32 encoding for the
-value column).  If a context's key does not fit in 64 bits, the engine
-transparently falls back to exact full re-sorting per snapshot and
-reports it in ``stats['incremental']``.
+Mechanics: run merging works on per-mode uint64-packed sort keys from
+``core.keys`` (entity-id bit-fields, plus an order-preserving float32
+encoding for the value column) — the *same* bit-width plans the device
+pipeline sorts by, so host-merged permutations and device sorts order
+identically by construction.  If a context's key does not fit in 64
+bits, the engine transparently falls back to exact full re-sorting per
+snapshot and reports it in ``stats['incremental']``.
 
 Properties kept from the paper's online algorithm:
 * one pass over the data (each tuple enters the buffer once),
@@ -38,48 +40,12 @@ Properties kept from the paper's online algorithm:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
+from . import keys as K
 from . import pipeline as P
-
-
-# ---------------------------------------------------------------------------
-# Sort-key packing
-# ---------------------------------------------------------------------------
-
-def _float_sort_bits(v: np.ndarray) -> np.ndarray:
-    """Order-preserving uint32 encoding of float32 (finite values)."""
-    u = np.ascontiguousarray(v, np.float32).view(np.uint32)
-    return u ^ np.where(u & 0x80000000, np.uint32(0xFFFFFFFF),
-                        np.uint32(0x80000000))
-
-
-class _ModeKeyCodec:
-    """Packs one mode's lexicographic sort key — (other columns...,
-    [value,] e_k), matching ``pipeline.sort_mode`` — into a uint64."""
-
-    def __init__(self, sizes: Sequence[int], k: int, with_values: bool):
-        self.k = k
-        self.with_values = with_values
-        self.cols = [j for j in range(len(sizes)) if j != k] + [k]
-        self.bits = [max(1, int(np.ceil(np.log2(max(int(sizes[j]), 2)))))
-                     for j in self.cols]
-        self.fits = sum(self.bits) + (32 if with_values else 0) <= 64
-
-    def encode(self, rows: np.ndarray,
-               values: Optional[np.ndarray]) -> np.ndarray:
-        key = np.zeros(rows.shape[0], np.uint64)
-        *others, last = self.cols
-        for j, b in zip(others, self.bits):
-            key = (key << np.uint64(b)) | rows[:, j].astype(np.uint64)
-        if self.with_values:
-            key = (key << np.uint64(32)) | _float_sort_bits(values).astype(
-                np.uint64)
-        key = (key << np.uint64(self.bits[-1])) | rows[:, last].astype(
-            np.uint64)
-        return key
 
 
 @dataclasses.dataclass
@@ -141,12 +107,16 @@ class StreamingMiner(P.PipelineMiner):
 
     def __init__(self, sizes, theta: float = 0.0, seed: int = 0x5EED,
                  delta: Optional[float] = None, rho_min: float = 0.0,
-                 minsup: int = 0, incremental: bool = True):
+                 minsup: int = 0, incremental: bool = True,
+                 packed: Optional[bool] = None,
+                 use_pallas: Optional[bool] = None):
         super().__init__(sizes, theta=(rho_min if delta is not None
                                        else theta),
-                         delta=delta, minsup=minsup, seed=seed)
-        self._codecs = [_ModeKeyCodec(self.sizes, k, delta is not None)
-                        for k in range(len(self.sizes))]
+                         delta=delta, minsup=minsup, seed=seed,
+                         packed=packed, use_pallas=use_pallas)
+        # host packing shares the device pipeline's bit-width plans
+        # (core.keys) — the packers are bit-identical by construction
+        self._codecs = self.key_plans
         self.incremental = bool(incremental) and all(c.fits
                                                      for c in self._codecs)
         self.state: Optional[StreamState] = None
@@ -189,7 +159,7 @@ class StreamingMiner(P.PipelineMiner):
         vals = s.values[lo:hi] if s.values is not None else None
         keys, idx = [], []
         for codec in self._codecs:
-            k = codec.encode(rows, vals)
+            k = codec.pack_host(rows, vals)
             order = np.argsort(k, kind="stable")
             keys.append(k[order])
             idx.append((order + lo).astype(np.int32))
@@ -235,7 +205,7 @@ class StreamingMiner(P.PipelineMiner):
         pad_idx = np.arange(count, cap, dtype=np.int32)
         perms = []
         for codec, keys, idx in zip(self._codecs, run.keys, run.idx):
-            key0 = codec.encode(row0, val0)[0]
+            key0 = codec.pack_host(row0, val0)[0]
             pos = int(np.searchsorted(keys, key0, side="right"))
             perms.append(np.insert(idx, pos, pad_idx))
         return np.stack(perms)

@@ -21,6 +21,7 @@ from . import ref
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .rmsnorm import rmsnorm as _rmsnorm_kernel
+from .segment_reduce import segment_reduce as _segment_reduce_kernel
 from .signature import signature as _signature_kernel
 from .tricluster_density import tricluster_density as _density_kernel
 
@@ -120,8 +121,28 @@ def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6, *,
 
 
 # ---------------------------------------------------------------------------
-# Triclustering kernels (Stage-3 of the paper's pipeline)
+# Triclustering kernels (Stages 2/3 of the paper's pipeline)
 # ---------------------------------------------------------------------------
+
+def segment_reduce(w_lo: jnp.ndarray, w_hi: jnp.ndarray, first: jnp.ndarray,
+                   *, bt: int = 1024, use_pallas: bool = True,
+                   interpret: Optional[bool] = None):
+    """Fused masked prefix sums for Stage-2 segment reductions.
+
+    w_lo/w_hi (T,) uint32 hash weights, first (T,) bool/0-1 mask ->
+    three (T,) inclusive prefix sums (uint32, uint32, int32) of the
+    masked weights and of the mask — one pass instead of three
+    ``segment_sum``/``cumsum`` sweeps; per-segment (or δ-window) sums
+    are then boundary differences of the prefixes."""
+    if not use_pallas:
+        return ref.segment_reduce_ref(w_lo, w_hi, first)
+    t = w_lo.shape[0]
+    bt_ = min(bt, max(8, 1 << int(np.ceil(np.log2(max(t, 2))))))
+    f = first.astype(jnp.int32)
+    lo, hi, cnt = _segment_reduce_kernel(
+        _pad_to(w_lo, 0, bt_), _pad_to(w_hi, 0, bt_), _pad_to(f, 0, bt_),
+        bt=bt_, interpret=_interpret(interpret))
+    return lo[:t], hi[:t], cnt[:t]
 
 def set_signature(mask: jnp.ndarray, r: jnp.ndarray, *,
                   use_pallas: bool = True,

@@ -33,6 +33,21 @@ def signature_ref(mask: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
     return (m * r[None, :]).sum(axis=1, dtype=jnp.uint32)
 
 
+def segment_reduce_ref(w_lo: jnp.ndarray, w_hi: jnp.ndarray,
+                       first: jnp.ndarray):
+    """Fused masked prefix sums: inclusive cumsums of first-occurrence-
+    masked uint32 hash weights and of the mask itself.
+
+    w_lo, w_hi: (T,) uint32; first: (T,) bool/0-1.
+    Returns ((T,) uint32, (T,) uint32, (T,) int32).
+    """
+    f = first.astype(bool)
+    lo = jnp.cumsum(jnp.where(f, w_lo, jnp.uint32(0)), dtype=jnp.uint32)
+    hi = jnp.cumsum(jnp.where(f, w_hi, jnp.uint32(0)), dtype=jnp.uint32)
+    cnt = jnp.cumsum(f.astype(jnp.int32), dtype=jnp.int32)
+    return lo, hi, cnt
+
+
 def _attn_mask(sq: int, skv: int, q_offset: int, causal: bool,
                window: Optional[int]) -> jnp.ndarray:
     qpos = jnp.arange(sq)[:, None] + q_offset

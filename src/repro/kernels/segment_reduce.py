@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused masked-weight prefix sums for Stage-2 segment
+reductions.
+
+Every component operator of the mining pipeline (prime cumulus and
+δ-range alike) reduces the same three per-position streams over sorted
+order: two uint32 hash-weight lanes and the first-occurrence counter,
+all masked by the first-occurrence flag.  The jnp path spends three
+separate ``segment_sum``/``cumsum`` sweeps on them; this kernel computes
+the three *inclusive prefix sums* in one pass —
+
+    out_lo[i]  = Σ_{j<=i} first[j] ? w_lo[j] : 0      (mod 2³²)
+    out_hi[i]  = Σ_{j<=i} first[j] ? w_hi[j] : 0      (mod 2³²)
+    out_cnt[i] = Σ_{j<=i} first[j]
+
+— after which any segment or δ-window reduction is two boundary gathers
+(``pref[b] - pref[a]``; modular uint32 arithmetic makes the differences
+exact).  Within a block the scan is a log2(bt)-step Hillis–Steele ladder
+on the VPU; the sequential TPU grid carries the running block totals in
+scratch, so arbitrarily long tuple tables stream through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan(x: jnp.ndarray, bt: int) -> jnp.ndarray:
+    """Inclusive prefix sum of a (bt,) block: Hillis–Steele, static steps."""
+    s = 1
+    while s < bt:
+        x = x + jnp.concatenate([jnp.zeros((s,), x.dtype), x[:-s]])
+        s *= 2
+    return x
+
+
+def _kernel(wlo_ref, whi_ref, f_ref, olo_ref, ohi_ref, ocnt_ref,
+            clo_ref, chi_ref, ccnt_ref, *, bt: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        clo_ref[0] = jnp.uint32(0)
+        chi_ref[0] = jnp.uint32(0)
+        ccnt_ref[0] = jnp.int32(0)
+
+    f = f_ref[...] != 0
+    lo = _scan(jnp.where(f, wlo_ref[...], jnp.uint32(0)), bt) + clo_ref[0]
+    hi = _scan(jnp.where(f, whi_ref[...], jnp.uint32(0)), bt) + chi_ref[0]
+    cnt = _scan(f.astype(jnp.int32), bt) + ccnt_ref[0]
+    olo_ref[...] = lo
+    ohi_ref[...] = hi
+    ocnt_ref[...] = cnt
+    clo_ref[0] = lo[bt - 1]
+    chi_ref[0] = hi[bt - 1]
+    ccnt_ref[0] = cnt[bt - 1]
+
+
+def segment_reduce(w_lo: jnp.ndarray, w_hi: jnp.ndarray, first: jnp.ndarray,
+                   *, bt: int = 1024, interpret: bool = False):
+    """w_lo/w_hi (T,) uint32, first (T,) int32 0/1 -> three (T,) inclusive
+    masked prefix sums (uint32, uint32, int32).  T must divide by bt."""
+    t = w_lo.shape[0]
+    assert t % bt == 0, (t, bt)
+    spec = pl.BlockSpec((bt,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=(t // bt,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((t,), jnp.uint32),
+                   jax.ShapeDtypeStruct((t,), jnp.uint32),
+                   jax.ShapeDtypeStruct((t,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.uint32),
+                        pltpu.SMEM((1,), jnp.uint32),
+                        pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(w_lo, w_hi, first)

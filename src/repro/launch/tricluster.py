@@ -56,6 +56,11 @@ def main(argv=None):
     ap.add_argument("--minsup", type=int, default=0)
     ap.add_argument("--chunks", type=int, default=8,
                     help="streaming: number of ingestion chunks")
+    ap.add_argument("--sort-path", default="auto",
+                    choices=["auto", "packed", "lexsort"],
+                    help="Stage-1/3 sort: packed single-word keys "
+                         "(core.keys), the lexsort baseline, or auto "
+                         "(packed whenever the key fits 64 bits)")
     ap.add_argument("--print-top", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeat", type=int, default=1,
@@ -71,10 +76,12 @@ def main(argv=None):
           f"|I|={ctx.tuples.shape[0]}")
 
     try:
+        packed = {"auto": None, "packed": True, "lexsort": False}
         run = mine(ctx, backend=args.backend, variant=variant,
                    theta=args.theta, delta=args.delta,
                    rho_min=args.rho_min, minsup=args.minsup,
                    strategy=args.strategy, chunks=args.chunks,
+                   packed=packed[args.sort_path],
                    seed=args.seed or 0x5EED)
         # warm repeats reuse the compiled engine (paper best-of-N protocol)
         best = run.elapsed_s

@@ -61,11 +61,10 @@ DECODE_ARCHS = ["qwen3-0.6b", "mixtral-8x7b", "zamba2-7b", "xlstm-125m",
 @pytest.mark.parametrize("arch", [
     pytest.param(a, marks=pytest.mark.xfail(
         reason="KNOWN DEFECT (open): prefill-path logits diverge from the "
-               "parallel forward for the hybrid and patch-frontend "
-               "families (~7e-2 max abs); decode caches under "
-               "investigation — see EXPERIMENTS.md §7; reproduces only "
-               "on some jax versions, so non-strict",
-        strict=False) if a in ("zamba2-7b", "internvl2-76b") else ())
+               "parallel forward for the hybrid family (~7e-2 max abs); "
+               "decode caches under investigation — see EXPERIMENTS.md "
+               "§7; reproduces only on some jax versions, so non-strict",
+        strict=False) if a == "zamba2-7b" else ())
     for a in DECODE_ARCHS])
 def test_prefill_decode_matches_forward(arch):
     """The decode path (ring cache / SSM states / LSTM states) must agree
