@@ -1,18 +1,23 @@
-"""Packed-key vs lexsort sort paths: end-to-end, per-stage, per-engine.
+"""Sort-backend comparison on the packed-key hot path: lexsort vs
+packed-lax vs packed-radix, end-to-end, per-stage, per-engine, per
+radix pass.
 
-The tentpole comparison of the packed-key subsystem (``core.keys``): the
-same pipeline run twice on the MovieLens-like dataset — once with the
-single-word packed sort path (``packed=True``) and once with the
-N+1-column lexsort baseline (``packed=False``) — for both the prime and
-the NOAC (δ) variants, plus the batch/streaming engine rows and a
-per-stage timing breakdown (Stage 1 sort+segment, Stage 2 components,
-Stage 3 dedup).  Both paths produce bit-identical results (asserted by
-``tests/test_keys_property.py``); only the time differs.
+The tentpole comparison of the radix subsystem (``core.radix``): the
+same pipeline run three ways on the MovieLens-like dataset — the
+N+1-column lexsort baseline (``packed=False``), the packed single
+``lax.sort`` (``sort_backend='lax'``), and the bit-plan-pruned LSD
+radix default (``sort_backend='radix'``) — for both the prime and the
+NOAC (δ) variants, plus batch/streaming engine rows, a per-stage
+timing breakdown (Stage 1 split into the sort itself vs the
+backend-independent segment work, Stage 2 components, Stage 3 dedup)
+and the radix path's per-pass attribution (cumulative truncated
+pass schedules).  Many-valued runs pack with the cardinality-pruned
+value lane (``core.keys`` value_slots), the engines' default.  All paths produce bit-identical results (asserted by
+``tests/test_radix_property.py``); only the time differs.
 
-All probes of one variant are timed *interleaved* (packed, lexsort,
-packed, ... round-robin, best-of-``repeat`` per probe) so a drifting
-machine load skews both paths equally instead of whichever happened to
-run later.
+All probes of one variant are timed *interleaved* (round-robin,
+best-of-``repeat`` per probe) so a drifting machine load skews every
+path equally instead of whichever happened to run later.
 """
 from __future__ import annotations
 
@@ -22,13 +27,19 @@ import time
 from repro.core import StreamingMiner
 from repro.core import keys as KY
 from repro.core import pipeline as P
+from repro.core import radix as RX
 from repro.data import synthetic
 
 from .common import print_table, save_json
 
 DATASET = "movielens-like"
 DELTA = 1.0
-PATHS = {True: "packed", False: "lexsort"}
+#: sort_path row label -> engine kwargs
+PATHS = {
+    "lexsort": {"packed": False},
+    "packed-lax": {"sort_backend": "lax"},
+    "packed-radix": {"sort_backend": "radix"},
+}
 
 
 def _interleaved_best(probes: dict, repeat: int) -> dict:
@@ -45,23 +56,60 @@ def _interleaved_best(probes: dict, repeat: int) -> dict:
     return {k: v * 1e3 for k, v in best.items()}
 
 
-def _stage_probes(sizes, tuples, values, delta, packed, use_pallas):
-    """Cumulative-stage jitted probes (sort+segment; + components; full
-    pipeline), all on the same kernel path (``use_pallas``)."""
+def _value_domain(values):
+    """Sorted distinct values (the lane-pruning domain) — hoisted out of
+    every timed probe.  (The engines recompute it per public call — a
+    one-off host ``np.unique`` on the untransferred column — but the
+    probes compare *sort backends*, so the shared domain prep stays
+    outside the clock for every path equally.)"""
+    if values is None:
+        return None
+    return KY.value_domain_host(values)
+
+
+def _stage_probes(sizes, tuples, values, delta, path, use_pallas):
+    """Cumulative-stage jitted probes (sort only; + segment; + components;
+    full pipeline), all on the same kernel path (``use_pallas``).
+
+    The ``s0`` probe times exactly what the sort backend swaps — key
+    packing + the stable word sort (or the column lexsort) per mode —
+    while ``s1`` adds the backend-independent segment/inverse-perm work,
+    so ``stage1_sort_ms`` attributes the subsystem and not its
+    neighbours."""
     import jax
     import jax.numpy as jnp
+    kw = PATHS[path]
+    backend = RX.resolve_sort_backend(kw.get("sort_backend"),
+                                      kw.get("packed"), True)
     vecs = P.mode_hash_vectors(sizes)
     lo = [jnp.asarray(a) for a, _ in vecs]
     hi = [jnp.asarray(b) for _, b in vecs]
-    plans = KY.plan_context_keys(sizes, with_values=values is not None)
-    use_packed = packed and plans[0].fits
+    domain = _value_domain(values)
+    plans = KY.plan_context_keys(
+        sizes, with_values=values is not None,
+        value_slots=None if domain is None else domain.shape[0])
+    use_packed = backend != "lexsort" and plans[0].fits
     n = tuples.shape[1]
     tuples = jnp.asarray(tuples)
     values = jnp.asarray(values) if values is not None else None
+    vdom = jnp.asarray(domain) if domain is not None else None
+
+    def sort_only(tu, va):
+        # P.mode_sort_perm IS the pipeline's Stage-1 sort (sort_mode
+        # delegates to it), so this probe can never drift from what the
+        # engines actually run
+        return [P.mode_sort_perm(tu, k, values=va,
+                                 plan=plans[k] if use_packed else None,
+                                 sort_backend=backend,
+                                 use_pallas=use_pallas,
+                                 value_domain=vdom)[0]
+                for k in range(n)]
 
     def sort_stage(tu, va):
         return [P.sort_mode(tu, k, values=va,
-                            plan=plans[k] if use_packed else None)
+                            plan=plans[k] if use_packed else None,
+                            sort_backend=backend, use_pallas=use_pallas,
+                            value_domain=vdom)
                 for k in range(n)]
 
     def comp_stage(tu, va):
@@ -72,22 +120,62 @@ def _stage_probes(sizes, tuples, values, delta, packed, use_pallas):
                                                 use_pallas))
             else:
                 comps.append(P.delta_components(sm, lo[k], hi[k], va, delta,
-                                                use_pallas))
+                                                use_pallas,
+                                                value_domain=vdom))
         return P.mix_signatures([c.sig_lo for c in comps],
                                 [c.sig_hi for c in comps])
 
+    f0 = jax.jit(sort_only)
     f1 = jax.jit(lambda tu, va: [(sm.perm, sm.seg_a, sm.seg_b, sm.first_occ)
                                  for sm in sort_stage(tu, va)])
     f12 = jax.jit(comp_stage)
     full = jax.jit(functools.partial(P.mine_tuples, delta=delta,
-                                     packed=packed, use_pallas=use_pallas))
-    return {"s1": lambda: f1(tuples, values),
+                                     use_pallas=use_pallas, **kw))
+    return {"s0": lambda: f0(tuples, values),
+            "s1": lambda: f1(tuples, values),
             "s12": lambda: f12(tuples, values),
-            "full": lambda: full(tuples, lo, hi, values=values)}
+            "full": lambda: full(tuples, lo, hi, values=values,
+                                 value_domain=vdom)}
+
+
+def _radix_pass_probes(sizes, tuples, values, use_pallas):
+    """Truncated-schedule probes: all modes packed + radix-sorted with
+    only the first p LSD passes, p = 0..npass (p=0 times the packing
+    alone) — the per-pass attribution of the radix backend."""
+    import jax
+    import jax.numpy as jnp
+    domain = _value_domain(values)
+    plans = KY.plan_context_keys(
+        sizes, with_values=values is not None,
+        value_slots=None if domain is None else domain.shape[0])
+    if not plans[0].fits:
+        return {}, None
+    # the attribution schedule must match the formulation actually run:
+    # composite-word digits on CPU, 8-bit histogram digits under Pallas
+    rplan = RX.plan_radix(plans[0].total_bits, tuples.shape[0],
+                          digit_bits=(RX.HIST_DIGIT_BITS if use_pallas
+                                      else None))
+    tuples = jnp.asarray(tuples)
+    values = jnp.asarray(values) if values is not None else None
+    vdom = jnp.asarray(domain) if domain is not None else None
+
+    def run(tu, va, p):
+        out = []
+        for plan in plans:
+            words = plan.pack_device(tu, va, domain=vdom)
+            out.append(words if p == 0 else
+                       RX.radix_sort_perm(words, plan.total_bits,
+                                          use_pallas, max_passes=p))
+        return out
+
+    probes = {p: jax.jit(functools.partial(run, p=p))
+              for p in range(rplan.passes + 1)}
+    return ({p: functools.partial(fn, tuples, values)
+             for p, fn in probes.items()}, rplan)
 
 
 def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
-    raw = {"rows": [], "speedup": {}}
+    raw = {"rows": [], "speedup": {}, "radix_speedup": {}}
     full_ctx = synthetic.movielens_like(n_tuples=int(1_000_000 * scale),
                                         seed=0)
     noac_ctx = full_ctx.deduplicated()
@@ -99,32 +187,51 @@ def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
     for variant, tuples, values, delta in jobs:
         n = tuples.shape[0]
         probes = {}
-        for packed, path in PATHS.items():
+        for path in PATHS:
             for stage, fn in _stage_probes(full_ctx.sizes, tuples, values,
-                                           delta, packed,
+                                           delta, path,
                                            use_pallas).items():
                 probes[(path, stage)] = fn
+        pass_probes, rplan = _radix_pass_probes(full_ctx.sizes, tuples,
+                                                values, use_pallas)
+        for p, fn in pass_probes.items():
+            probes[("passes", p)] = fn
         best = _interleaved_best(probes, repeat)
-        for path in PATHS.values():
+        cum = [best[("passes", p)] for p in range(rplan.passes + 1)] \
+            if rplan else []
+        radix_detail = {
+            "passes": rplan.passes, "digit_widths": list(rplan.widths),
+            "live_bits": rplan.live_bits, "pos_bits": rplan.pos_bits,
+            "pack_ms": cum[0],
+            "per_pass_ms": [max(b - a, 0.0)
+                            for a, b in zip(cum, cum[1:])],
+        } if rplan else None
+        for path in PATHS:
             stages = {
-                "stage1_sort_ms": best[(path, "s1")],
+                "stage1_sort_ms": best[(path, "s0")],
+                "stage1_segment_ms": max(best[(path, "s1")]
+                                         - best[(path, "s0")], 0.0),
                 "stage2_components_ms": max(best[(path, "s12")]
                                             - best[(path, "s1")], 0.0),
                 "stage3_dedup_ms": max(best[(path, "full")]
                                        - best[(path, "s12")], 0.0),
                 "total_ms": best[(path, "full")]}
-            raw["rows"].append({
+            row = {
                 "backend": "batch", "variant": variant, "dataset": DATASET,
                 "sort_path": path, "n_tuples": int(n),
-                "ms": best[(path, "full")], "stages": stages})
+                "ms": best[(path, "full")], "stages": stages}
+            if path == "packed-radix" and radix_detail:
+                row["radix"] = radix_detail
+            raw["rows"].append(row)
             rows_disp.append([variant, "batch", path, f"{n:,}",
                               f"{best[(path, 'full')]:,.1f}",
                               f"{stages['stage1_sort_ms']:.1f}"])
         # streaming engine: one full-buffer snapshot per path, interleaved
         sprobes = {}
-        for packed, path in PATHS.items():
-            sm = StreamingMiner(full_ctx.sizes, packed=packed, delta=delta,
-                                use_pallas=use_pallas, incremental=False)
+        for path, kw in PATHS.items():
+            sm = StreamingMiner(full_ctx.sizes, delta=delta,
+                                use_pallas=use_pallas, incremental=False,
+                                **kw)
             sm.add(tuples, values)
             sprobes[path] = functools.partial(sm.snapshot, full_remine=True)
         sbest = _interleaved_best(sprobes, repeat)
@@ -135,22 +242,37 @@ def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
                 "n_tuples": int(n), "ms": ms})
             rows_disp.append([variant, "streaming", path, f"{n:,}",
                               f"{ms:,.1f}", ""])
-    # headline ratios: the sort path itself (Stage 1, the subsystem this
-    # PR swaps) and the full pipeline
+    # headline ratios: the Stage-1 sort path (the subsystem this PR
+    # swaps) and the full pipeline — lexsort vs the packed default
+    # (packed_speedup, the PR-2 metric) and packed-lax vs packed-radix
+    # (radix_speedup, the comparison-sort replacement itself)
     for variant in ("prime", "noac"):
         by = {r["sort_path"]: r for r in raw["rows"]
               if r["variant"] == variant and r["backend"] == "batch"}
+
+        def ratio(a, b, key):
+            if key == "ms":
+                return by[a]["ms"] / max(by[b]["ms"], 1e-9)
+            return (by[a]["stages"][key] / max(by[b]["stages"][key], 1e-9))
+
         raw["speedup"][variant] = {
-            "stage1_sort": (by["lexsort"]["stages"]["stage1_sort_ms"]
-                            / max(by["packed"]["stages"]["stage1_sort_ms"],
-                                  1e-9)),
-            "end_to_end": by["lexsort"]["ms"] / max(by["packed"]["ms"],
-                                                    1e-9)}
-    print_table("Packed-key vs lexsort (movielens-like)",
+            "stage1_sort": ratio("lexsort", "packed-radix",
+                                 "stage1_sort_ms"),
+            "end_to_end": ratio("lexsort", "packed-radix", "ms")}
+        raw["radix_speedup"][variant] = {
+            "stage1_sort": ratio("packed-lax", "packed-radix",
+                                 "stage1_sort_ms"),
+            "end_to_end": ratio("packed-lax", "packed-radix", "ms")}
+    print_table("Sort backends: lexsort vs packed-lax vs packed-radix "
+                "(movielens-like)",
                 ["variant", "backend", "path", "|I|", "ms", "s1 ms"],
                 rows_disp)
-    print("speedups:", {v: {k: round(x, 2) for k, x in d.items()}
-                        for v, d in raw["speedup"].items()})
+    print("packed_speedup (lexsort/packed-radix):",
+          {v: {k: round(x, 2) for k, x in d.items()}
+           for v, d in raw["speedup"].items()})
+    print("radix_speedup (packed-lax/packed-radix):",
+          {v: {k: round(x, 2) for k, x in d.items()}
+           for v, d in raw["radix_speedup"].items()})
     save_json("packed.json", raw)
     return raw
 

@@ -48,7 +48,7 @@ def _mining_summary(results: dict, scale: float) -> dict:
     for r in (results.get("packed") or {}).get("rows", []):
         row(r["backend"], r["variant"], r["dataset"], r["n_tuples"],
             r["ms"], sort_path=r["sort_path"],
-            **({"stages": r["stages"]} if "stages" in r else {}))
+            **{k: r[k] for k in ("stages", "radix") if k in r})
     dist = results.get("distributed") or {}
     for strategy in ("replicate", "shuffle"):
         for variant, key in (("prime", strategy), ("noac",
@@ -61,9 +61,11 @@ def _mining_summary(results: dict, scale: float) -> dict:
                     strategy=strategy, devices=8)
     out = {"scale": scale, "rows": rows}
     if results.get("packed"):
-        # headline packed-key vs lexsort ratios (Stage-1 sort path and
-        # end-to-end), movielens-like, both variants
+        # headline sort-path ratios (Stage-1 sort and end-to-end),
+        # movielens-like, both variants: lexsort vs the packed default
+        # and packed-lax vs packed-radix (the comparison-sort swap)
         out["packed_speedup"] = results["packed"]["speedup"]
+        out["radix_speedup"] = results["packed"]["radix_speedup"]
     return out
 
 

@@ -15,12 +15,13 @@ from .common import RESULTS_DIR
 
 BACKENDS = {"batch", "distributed", "streaming", "reference"}
 VARIANTS = {"prime", "noac"}
-SORT_PATHS = {"packed", "lexsort"}
+SORT_PATHS = {"lexsort", "packed-lax", "packed-radix"}
 ROW_REQUIRED = {"backend": str, "variant": str, "dataset": str,
                 "n_tuples": int, "ms": (int, float),
                 "tuples_per_s": (int, float)}
-STAGE_KEYS = {"stage1_sort_ms", "stage2_components_ms", "stage3_dedup_ms",
-              "total_ms"}
+STAGE_KEYS = {"stage1_sort_ms", "stage1_segment_ms",
+              "stage2_components_ms", "stage3_dedup_ms", "total_ms"}
+RADIX_KEYS = {"passes", "digit_widths", "live_bits", "per_pass_ms"}
 
 
 def validate(doc: dict) -> list[str]:
@@ -51,20 +52,32 @@ def validate(doc: dict) -> list[str]:
             missing = STAGE_KEYS - set(r["stages"])
             if missing:
                 errs.append(f"{where}: stages missing {sorted(missing)}")
+        if "radix" in r:
+            missing = RADIX_KEYS - set(r["radix"])
+            if missing:
+                errs.append(f"{where}: radix missing {sorted(missing)}")
+            elif (len(r["radix"]["per_pass_ms"]) != r["radix"]["passes"]
+                  or sum(r["radix"]["digit_widths"])
+                  != r["radix"]["live_bits"]):
+                errs.append(f"{where}: radix pass schedule inconsistent")
     paths = {r.get("sort_path") for r in rows}
     if SORT_PATHS & paths:
         if not SORT_PATHS <= paths:
-            errs.append("sort-path comparison incomplete: need both "
-                        "'packed' and 'lexsort' rows")
-        sp = doc.get("packed_speedup")
-        if not isinstance(sp, dict) or not VARIANTS <= set(sp):
-            errs.append("missing 'packed_speedup' summary for both "
-                        "variants")
-        else:
-            for v in VARIANTS:
-                for k in ("stage1_sort", "end_to_end"):
-                    if not isinstance(sp[v].get(k), (int, float)):
-                        errs.append(f"packed_speedup[{v}][{k}] missing")
+            errs.append("sort-path comparison incomplete: need "
+                        "'lexsort', 'packed-lax' and 'packed-radix' rows")
+        if not any("radix" in r for r in rows
+                   if r.get("sort_path") == "packed-radix"):
+            errs.append("no packed-radix row carries the per-pass "
+                        "'radix' breakdown")
+        for name in ("packed_speedup", "radix_speedup"):
+            sp = doc.get(name)
+            if not isinstance(sp, dict) or not VARIANTS <= set(sp):
+                errs.append(f"missing '{name}' summary for both variants")
+            else:
+                for v in VARIANTS:
+                    for k in ("stage1_sort", "end_to_end"):
+                        if not isinstance(sp[v].get(k), (int, float)):
+                            errs.append(f"{name}[{v}][{k}] missing")
     return errs
 
 

@@ -48,9 +48,12 @@ class BatchMiner(P.PipelineMiner):
 
     def __init__(self, sizes: Sequence[int], theta: float = 0.0,
                  seed: int = 0x5EED, packed: Optional[bool] = None,
-                 use_pallas: Optional[bool] = None):
+                 sort_backend: Optional[str] = None,
+                 use_pallas: Optional[bool] = None,
+                 prune_values: bool = True):
         super().__init__(sizes, theta=theta, seed=seed, packed=packed,
-                         use_pallas=use_pallas)
+                         sort_backend=sort_backend, use_pallas=use_pallas,
+                         prune_values=prune_values)
 
     def mine_context(self, ctx: PolyadicContext, only_kept: bool = True):
         if ctx.sizes != self.sizes:

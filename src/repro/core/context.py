@@ -10,7 +10,16 @@ A polyadic context K_N = (A_1, ..., A_N, I ⊆ A_1 × ... × A_N) is stored as
     everything on device is integer ids, see DESIGN.md §3).
 
 Duplicated rows are legal (M/R at-least-once semantics, paper §5.1: the
-algebra must be idempotent under duplicates).
+algebra must be idempotent under duplicates) — except in many-valued
+contexts, where V must be a *function* of the tuple (§3.2).  Duplicate
+rows of a valued context are therefore canonicalised at construction:
+one row per distinct tuple, the **last** value winning (the upsert
+semantics of the paper's online Algorithm 1).  Without this, duplicate
+rows carrying conflicting values make every NOAC engine's output
+depend on which copy it happens to see first — the historical
+seq-vs-par MISMATCH of ``benchmarks/table5.py``.  (The streaming
+engine ingests raw arrays, bypassing this constructor: its streams
+must be value-consistent themselves — see ``core/streaming.py``.)
 """
 from __future__ import annotations
 
@@ -40,6 +49,21 @@ class PolyadicContext:
             if v.shape != (t.shape[0],):
                 raise ValueError("values must be (T,)")
             object.__setattr__(self, "values", v)
+            if t.shape[0]:
+                # canonicalise: V is a function of the tuple (§3.2) —
+                # keep one row per distinct tuple in first-occurrence
+                # order, last value winning (upsert semantics).  Row
+                # order is preserved so duplicate-free workloads — and
+                # the sort benchmarks — see the input exactly as given.
+                uniq, first, inv = np.unique(t, axis=0, return_index=True,
+                                             return_inverse=True)
+                if uniq.shape[0] != t.shape[0]:
+                    inv = inv.ravel()
+                    last = np.empty(uniq.shape[0], np.intp)
+                    last[inv] = np.arange(t.shape[0])
+                    order = np.argsort(first, kind="stable")
+                    object.__setattr__(self, "tuples", uniq[order])
+                    object.__setattr__(self, "values", v[last][order])
 
     @property
     def arity(self) -> int:
@@ -65,9 +89,15 @@ class PolyadicContext:
         return out
 
     def deduplicated(self) -> "PolyadicContext":
-        uniq, idx = np.unique(self.tuples, axis=0, return_index=True)
-        vals = self.values[idx] if self.values is not None else None
-        return PolyadicContext(self.sizes, uniq, vals, self.names)
+        """Distinct-row view.  Valued contexts are already canonicalised
+        at construction (one row per tuple, last value wins — the only
+        dedup policy), so they return themselves unchanged."""
+        if self.values is not None:
+            return self
+        uniq = np.unique(self.tuples, axis=0)
+        if uniq.shape[0] == self.tuples.shape[0]:
+            return self
+        return PolyadicContext(self.sizes, uniq, None, self.names)
 
     def subsample(self, n: int, seed: int = 0) -> "PolyadicContext":
         rng = np.random.default_rng(seed)

@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import keys as K
 from . import pipeline as PL
+from . import radix as RX
 
 Axis = tuple[str, ...]
 
@@ -84,6 +85,54 @@ def _hash_columns(cols: Sequence[jnp.ndarray], salt: int) -> jnp.ndarray:
         h = (h ^ c.astype(jnp.uint32)) * jnp.uint32(0x9E3779B1)
         h = h ^ (h >> 15)
     return h
+
+
+def _range_partition(words, plan: K.ModeKeyPlan, axes, n_shards: int,
+                     capacity: int, fallback_owner: jnp.ndarray):
+    """Owner shard per record from the radix plan's *top-digit*
+    histogram: the all-reduced 256-bucket histogram of the subrelation
+    prefix's top 8 live bits — the same primitive the radix backend's
+    sort is built on, here applied to the pre-shuffle keys — yields
+    balanced contiguous key ranges (boundary of shard s at the digit
+    where the cumulative count crosses s/n_shards of the total), so
+    owners receive contiguous key ranges instead of hash-scattered
+    ones.
+
+    Two skew escapes fall back to ``fallback_owner`` (the hash
+    partition, which spreads by the full subrelation key); both tests
+    are all-reduced so every shard takes the same branch (a key's
+    records must all reach one owner):
+
+    * a single bucket exceeding a fair shard share (range cuts can only
+      land on digit boundaries, so no contiguous assignment balances —
+      e.g. power-law ids concentrating in top digit 0);
+    * a source→owner *link* exceeding the dispatch ``capacity``: with
+      shard-locally key-clustered data (e.g. block-sharded pre-sorted
+      rows) a globally balanced range map still sends one shard's whole
+      block to one owner, which hash partitioning never stresses."""
+    # the digit may only read *subrelation* bits (above seg_shift) —
+    # cutting below them would split a key segment across owners
+    top_w = min(RX.HIST_DIGIT_BITS, plan.total_bits - plan.seg_shift)
+    dig = RX.extract_digit(words, plan.total_bits - top_w, top_w)
+    nb = 1 << top_w
+    hist = jnp.zeros((nb,), jnp.int32).at[dig.astype(jnp.int32)].add(1)
+    hist = jax.lax.psum(hist, axes)
+    cum_before = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(hist, dtype=jnp.int32)[:-1]])
+    total = jnp.maximum(cum_before[-1] + hist[-1], 1)
+    # boundary math in float32: cum*n_shards overflows int32 at scale,
+    # and any digit->shard function is correct (owners sort their own
+    # ranges), so rounding at a boundary is harmless
+    shard_of_digit = jnp.clip(
+        (cum_before.astype(jnp.float32) * jnp.float32(n_shards)
+         / total.astype(jnp.float32)).astype(jnp.int32),
+        0, n_shards - 1)
+    range_owner = shard_of_digit[dig.astype(jnp.int32)]
+    local_link = jnp.zeros((n_shards,), jnp.int32).at[range_owner].add(1)
+    link_max = jax.lax.pmax(local_link.max(), axes)
+    skewed = ((hist.max() > total // jnp.int32(n_shards))
+              | (link_max > jnp.int32(capacity)))
+    return jnp.where(skewed, fallback_owner, range_owner)
 
 
 # ---------------------------------------------------------------------------
@@ -165,27 +214,49 @@ def _owner_stage(recv: jnp.ndarray, rvalid: jnp.ndarray, n_other: int,
     return sig_lo[inv], sig_hi[inv], distinct[inv], first_occ[inv]
 
 
+def _validity_words(words, inval: jnp.ndarray, total_bits: int):
+    """The key words with the validity flag folded in as one extra MSB
+    (live bit ``total_bits``), so the owner sort runs as a single
+    (total_bits+1)-bit radix instead of a variadic comparison sort."""
+    if total_bits + 1 <= 32:
+        return (words[-1] | (inval << total_bits),)
+    hi = words[0] if len(words) == 2 else jnp.zeros_like(words[-1])
+    return (hi | (inval << (total_bits - 32)), words[-1])
+
+
 def _owner_stage_packed(recv: jnp.ndarray, rvalid: jnp.ndarray,
                         plan: K.ModeKeyPlan, r_lo: jnp.ndarray,
                         r_hi: jnp.ndarray, delta: Optional[float],
-                        use_pallas: bool = False):
+                        use_pallas: bool = False,
+                        sort_backend: str = "radix",
+                        value_domain=None):
     """Owner-side Reduce-1 over *pre-packed* key words: one stable sort
     keyed on (validity, key words) with the permutation carried as a
     payload; entity ids and value columns are bit-field extractions from
-    the shipped key, so owners never re-pack."""
+    the shipped key, so owners never re-pack.  The radix backend folds
+    the validity flag into the key as one extra MSB (falling back to
+    ``lax.sort`` for exactly-64-bit keys, where the flag has no room)."""
     l = recv.shape[0]
     words = tuple(recv[:, i] for i in range(recv.shape[1]))
     inval = (~rvalid).astype(jnp.uint32)   # invalid slots sort last
     iota = jnp.arange(l, dtype=jnp.int32)
-    out = jax.lax.sort((inval,) + words + (rvalid, iota),
-                       num_keys=1 + len(words), is_stable=True)
-    s_inval, s_words = out[0], tuple(out[1:1 + len(words)])
-    s_valid, perm = out[-2], out[-1]
+    if sort_backend == "radix" and plan.total_bits + 1 <= 64:
+        ext = _validity_words(words, inval, plan.total_bits)
+        perm = RX.radix_sort_perm(ext, plan.total_bits + 1, use_pallas)
+        s_inval = inval[perm]
+        s_words = tuple(w[perm] for w in words)
+        s_valid = rvalid[perm]
+    else:
+        out = jax.lax.sort((inval,) + words + (rvalid, iota),
+                           num_keys=1 + len(words), is_stable=True)
+        s_inval, s_words = out[0], tuple(out[1:1 + len(words)])
+        s_valid, perm = out[-2], out[-1]
     seg_flag = PL.segment_starts(
         [s_inval] + list(K.drop_low_bits(s_words, plan.seg_shift)))
     first_occ = PL.segment_starts([s_inval] + list(s_words)) & s_valid
     e_safe = jnp.where(s_valid, plan.extract_entity(s_words), 0)
-    s_vals = plan.extract_values(s_words) if delta is not None else None
+    s_vals = (plan.extract_values(s_words, domain=value_domain)
+              if delta is not None else None)
     sig_lo, sig_hi, distinct = _sorted_components(
         r_lo[e_safe], r_hi[e_safe], first_occ, seg_flag, s_vals, delta,
         use_pallas)
@@ -195,19 +266,27 @@ def _owner_stage_packed(recv: jnp.ndarray, rvalid: jnp.ndarray,
 
 def _shuffle_mode(tuples, values, k, axes, n_shards, capacity, r_lo, r_hi,
                   delta, plan: Optional[K.ModeKeyPlan] = None,
-                  use_pallas: bool = False):
+                  use_pallas: bool = False, sort_backend: str = "radix",
+                  value_domain=None):
     """Stages 1+2 of the M/R algorithm for one mode over ``axes``.
 
     With a fitting ``plan``, records on the wire are the packed key
-    words (8 bytes each); otherwise the original column records."""
+    words (8 bytes each) and owners are key *ranges* balanced by the
+    radix top-digit histogram; otherwise the original column records,
+    hash-partitioned."""
     n = tuples.shape[1]
     others = [tuples[:, j] for j in range(n) if j != k]
-    owner = (_hash_columns(others, 0xA11CE + k) %
-             jnp.uint32(n_shards)).astype(jnp.int32)
+    hash_owner = (_hash_columns(others, 0xA11CE + k) %
+                  jnp.uint32(n_shards)).astype(jnp.int32)
     if plan is not None and plan.fits:
-        records = jnp.stack(plan.pack_device(tuples, values), axis=1)
+        words = plan.pack_device(tuples, values, domain=value_domain)
+        owner = (_range_partition(words, plan, axes, n_shards, capacity,
+                                  hash_owner)
+                 if sort_backend == "radix" else hash_owner)
+        records = jnp.stack(words, axis=1)
     else:
         plan = None
+        owner = hash_owner
         cols = others + [tuples[:, k]]
         if delta is not None:
             cols = cols + [jax.lax.bitcast_convert_type(values, jnp.int32)]
@@ -219,7 +298,8 @@ def _shuffle_mode(tuples, values, k, axes, n_shards, capacity, r_lo, r_hi,
                                 tiled=True).astype(bool)
     if plan is not None:
         sig_lo, sig_hi, card, tfirst = _owner_stage_packed(
-            recv, rvalid, plan, r_lo, r_hi, delta, use_pallas)
+            recv, rvalid, plan, r_lo, r_hi, delta, use_pallas,
+            sort_backend, value_domain)
     else:
         sig_lo, sig_hi, card, tfirst = _owner_stage(
             recv, rvalid, n - 1, r_lo, r_hi, delta, use_pallas)
@@ -250,6 +330,8 @@ class DistributedMiner:
       minsup: NOAC minimal per-mode cardinality.
       packed: packed-key sort path (None: auto when the key fits 64 bits;
         False: column lexsort baseline).
+      sort_backend: packed word-sort algorithm ('radix' default | 'lax';
+        'lexsort' forces the column path).
       use_pallas: fused Pallas segment reductions (None: on TPU only).
     """
 
@@ -259,11 +341,16 @@ class DistributedMiner:
                  max_retries: int = 4, delta: Optional[float] = None,
                  rho_min: float = 0.0, minsup: int = 0,
                  packed: Optional[bool] = None,
-                 use_pallas: Optional[bool] = None):
+                 sort_backend: Optional[str] = None,
+                 use_pallas: Optional[bool] = None,
+                 prune_values: bool = True):
         self.sizes = tuple(int(s) for s in sizes)
+        self.prune_values = bool(prune_values)
         self.mesh = mesh
         self.axes: Axis = (axes,) if isinstance(axes, str) else tuple(axes)
         self.delta = None if delta is None else float(delta)
+        if self.delta is not None and self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
         self.theta = float(rho_min) if self.delta is not None else float(theta)
         self.minsup = int(minsup)
         self.strategy = strategy
@@ -271,10 +358,12 @@ class DistributedMiner:
         self.max_retries = int(max_retries)
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.axes]))
         self.packed = packed
+        self.sort_backend = sort_backend
         self.key_plans = K.plan_context_keys(self.sizes,
                                              with_values=delta is not None)
-        self.packed_active = ((packed is not False)
-                              and self.key_plans[0].fits)
+        self.resolved_sort_backend = RX.resolve_sort_backend(
+            sort_backend, packed, self.key_plans[0].fits)
+        self.packed_active = self.resolved_sort_backend != "lexsort"
         from ..kernels import ops as kops
         self.use_pallas = (kops.on_tpu() if use_pallas is None
                            else bool(use_pallas))
@@ -288,14 +377,17 @@ class DistributedMiner:
 
     # -- shard bodies -------------------------------------------------------
 
-    def _body_replicate(self, tuples, values, lo, hi):
+    def _body_replicate(self, tuples, values, vdom, lo, hi):
         axes = self.axes
         full = jax.lax.all_gather(tuples, axes, tiled=True)
         vfull = (jax.lax.all_gather(values, axes, tiled=True)
                  if self.delta is not None else None)
         res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
                              theta=self.theta, minsup=self.minsup,
-                             packed=self.packed, use_pallas=self.use_pallas)
+                             packed=self.packed,
+                             sort_backend=self.sort_backend,
+                             use_pallas=self.use_pallas,
+                             value_domain=vdom if vdom.shape[0] else None)
         # keep this shard's block
         shard_id = jax.lax.axis_index(axes)
         tl = tuples.shape[0]
@@ -313,10 +405,22 @@ class DistributedMiner:
             n_clusters=res.is_unique.sum(),
             overflow=jnp.int32(0))
 
-    def _body_shuffle(self, tuples, values, lo, hi):
+    def _body_shuffle(self, tuples, values, vdom, lo, hi):
         axes, nsh = self.axes, self.n_shards
         tl, n = tuples.shape
         capacity = max(1, int(np.ceil(tl / nsh * self.capacity_factor)))
+        # rebuild the plans with the (replicated) value domain's slot
+        # count — vdom is empty when pruning is off, restoring the
+        # 32-bit float lane
+        vdom_opt = vdom if vdom.shape[0] else None
+        plans = K.plan_context_keys(
+            self.sizes, with_values=self.delta is not None,
+            value_slots=None if vdom_opt is None else vdom_opt.shape[0])
+        # resolve from the PRUNED plans: a key that only fits thanks to
+        # the rank-coded lane still takes the packed path
+        backend = RX.resolve_sort_backend(self.sort_backend, self.packed,
+                                          plans[0].fits)
+        packed_active = backend != "lexsort"
         per_lo, per_hi, cards = [], [], []
         overflow = jnp.int32(0)
         tuple_first = None
@@ -325,8 +429,10 @@ class DistributedMiner:
             slo, shi, card, tfirst, ok, ovf = _shuffle_mode(
                 tuples, values, k, axes, nsh, capacity, lo[k], hi[k],
                 self.delta,
-                plan=self.key_plans[k] if self.packed_active else None,
-                use_pallas=self.use_pallas)
+                plan=plans[k] if packed_active else None,
+                use_pallas=self.use_pallas,
+                sort_backend=backend,
+                value_domain=vdom_opt)
             per_lo.append(slo)
             per_hi.append(shi)
             cards.append(card)
@@ -342,8 +448,12 @@ class DistributedMiner:
         g_lo = jax.lax.all_gather(sig_lo, axes, tiled=True)
         g_hi = jax.lax.all_gather(sig_hi, axes, tiled=True)
         g_tf = jax.lax.all_gather(tuple_first, axes, tiled=True)
+        s3_backend = RX.resolve_sort_backend(self.sort_backend, self.packed,
+                                             True)
         gen_of, is_unique = PL.stage3_dedup(g_lo, g_hi, g_tf,
-                                            packed=self.packed is not False)
+                                            packed=s3_backend != "lexsort",
+                                            sort_backend=s3_backend,
+                                            use_pallas=self.use_pallas)
         shard_id = jax.lax.axis_index(axes)
         sl = jax.lax.dynamic_slice_in_dim
         start = shard_id * tl
@@ -375,7 +485,7 @@ class DistributedMiner:
             overflow=P())
         fn = PL.shard_map(body, mesh=self.mesh,
                           in_specs=(P(self.axes, None), P(self.axes),
-                                    P(), P()),
+                                    P(), P(), P()),
                           out_specs=out_specs)
         return jax.jit(fn)
 
@@ -385,13 +495,24 @@ class DistributedMiner:
             values = jnp.zeros((tuples.shape[0],), jnp.float32)
         return tuples, jnp.asarray(values, jnp.float32)
 
+    def _value_domain(self, values) -> jnp.ndarray:
+        """Sorted distinct values for key-lane pruning, as a replicated
+        array (empty = pruning off: prime variant, lexsort path, or
+        ``prune_values=False``)."""
+        if self.delta is None or not RX.wants_value_pruning(
+                self.prune_values, self.packed, self.sort_backend):
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.asarray(K.value_domain_host(values))
+
     def lowered(self, tuples, values=None):
         """Lower (no execution) for dry-run / roofline analysis of the
         mining pipeline itself — same artifact path as the LM cells."""
         tuples, values = self._coerce(tuples, values)
+        vdom = self._value_domain(values)
         fn = self._build(tuples.shape[0])
         structs = (jax.ShapeDtypeStruct(tuples.shape, jnp.int32),
                    jax.ShapeDtypeStruct(values.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(vdom.shape, jnp.float32),
                    [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._lo],
                    [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in self._hi])
         with self.mesh:
@@ -411,13 +532,22 @@ class DistributedMiner:
         if self._fn is None or self._t_global != t:
             self._fn = self._build(t)
             self._t_global = t
-        res = self._fn(tuples, values, self._lo, self._hi)
+        vdom = self._value_domain(values)
+        res = self._fn(tuples, values, vdom, self._lo, self._hi)
         for _ in range(self.max_retries):
             if self.strategy != "shuffle" or int(res.overflow) == 0:
                 break
             self.capacity_factor *= 2.0
             self._fn = self._build(t)
-            res = self._fn(tuples, values, self._lo, self._hi)
+            res = self._fn(tuples, values, vdom, self._lo, self._hi)
+        if self.strategy == "shuffle" and int(res.overflow):
+            # overflowed records were dropped by _dispatch — returning
+            # would hand back silently-wrong clusters
+            raise RuntimeError(
+                f"shuffle capacity overflow persists after "
+                f"{self.max_retries} retries (capacity_factor="
+                f"{self.capacity_factor}); the partition is too skewed "
+                f"for n_shards={self.n_shards}")
         return res
 
 

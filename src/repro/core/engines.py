@@ -83,10 +83,11 @@ def mine(ctx: PolyadicContext, backend: str = "batch",
 
     Common params: ``theta`` (prime min density), ``delta``/``rho_min``/
     ``minsup`` (noac), ``seed``, ``packed`` (packed-key sort path; None =
-    auto, False = lexsort baseline), ``use_pallas`` (fused Pallas segment
-    reductions; None = on TPU only).  Backend-specific: ``mesh``/``axes``/
-    ``strategy``/``capacity_factor`` (distributed), ``chunks``
-    (streaming).  ``variant='noac'`` requires ``delta``.
+    auto, False = lexsort baseline), ``sort_backend`` ('radix' — the
+    bit-plan-pruned LSD default — | 'lax' | 'lexsort'), ``use_pallas``
+    (fused Pallas kernels; None = on TPU only).  Backend-specific:
+    ``mesh``/``axes``/``strategy``/``capacity_factor`` (distributed),
+    ``chunks`` (streaming).  ``variant='noac'`` requires ``delta``.
     """
     if variant == "noac" and params.get("delta") is None:
         raise ValueError("variant='noac' requires delta=<float>")
@@ -116,7 +117,10 @@ def _noac_ctx(ctx: PolyadicContext) -> PolyadicContext:
 
 def _pipe_kw(p):
     """Pipeline-core params shared by every jax backend."""
-    return {"packed": p.get("packed"), "use_pallas": p.get("use_pallas")}
+    return {"packed": p.get("packed"),
+            "sort_backend": p.get("sort_backend"),
+            "use_pallas": p.get("use_pallas"),
+            "prune_values": p.get("prune_values", True)}
 
 
 def _timed(step, block=True):

@@ -47,9 +47,13 @@ class NOACMiner(P.PipelineMiner):
     def __init__(self, sizes: Sequence[int], delta: float,
                  rho_min: float = 0.0, minsup: int = 0, seed: int = 0x5EED,
                  packed: Optional[bool] = None,
-                 use_pallas: Optional[bool] = None):
+                 sort_backend: Optional[str] = None,
+                 use_pallas: Optional[bool] = None,
+                 prune_values: bool = True):
         super().__init__(sizes, theta=rho_min, delta=delta, minsup=minsup,
-                         seed=seed, packed=packed, use_pallas=use_pallas)
+                         seed=seed, packed=packed,
+                         sort_backend=sort_backend, use_pallas=use_pallas,
+                         prune_values=prune_values)
         self.rho_min = float(rho_min)
 
     def mine_context(self, ctx: PolyadicContext):

@@ -10,9 +10,11 @@ per-key *component operator* differs.  This module is that factoring:
            value column for many-valued contexts) and segmentation of
            the sorted order — the Hadoop shuffle-by-subrelation as a
            sort.  When the key fits 64 bits (``core.keys`` plans), the
-           sort is ONE stable ``lax.sort`` over the packed key word(s)
-           with payloads carried as sort operands; otherwise the
-           N+1-column lexsort fallback runs behind the same API.
+           sort is ONE stable sort over the packed key word(s) — the
+           bit-plan-pruned radix backend (``core.radix``) by default,
+           or one ``lax.sort`` with payloads as sort operands
+           (``sort_backend='lax'``); otherwise the N+1-column lexsort
+           fallback runs behind the same API.
   comp-op  ``prime_components``     cumulus = the whole key segment.
            ``delta_components``     δ-range inside the key segment
                                     (two vectorised binary searches).
@@ -49,6 +51,7 @@ import numpy as np
 from .._compat import shard_map  # noqa: F401  (re-export for the engines)
 from ..kernels import ops as kops
 from . import keys as K
+from . import radix as RX
 
 
 # ---------------------------------------------------------------------------
@@ -148,44 +151,83 @@ jax.tree_util.register_dataclass(
     meta_fields=["plan"])
 
 
+def mode_key_columns(tuples: jnp.ndarray, k: int,
+                     values: Optional[jnp.ndarray] = None):
+    """Mode ``k``'s lexicographic sort-key columns — (others..., [value,]
+    e_k) — as (others, tail) lists.  THE column order of Stage 1's sort
+    (shared by ``sort_mode`` and the benchmark probes, so what the
+    benchmarks time is what the pipeline runs)."""
+    n = tuples.shape[1]
+    others = [tuples[:, j] for j in range(n) if j != k]
+    tail = ([values] if values is not None else []) + [tuples[:, k]]
+    return others, tail
+
+
+def mode_sort_perm(tuples: jnp.ndarray, k: int,
+                   values: Optional[jnp.ndarray] = None,
+                   plan: Optional[K.ModeKeyPlan] = None,
+                   sort_backend: str = "radix",
+                   use_pallas: bool = False,
+                   value_domain: Optional[jnp.ndarray] = None):
+    """Exactly Stage 1's sort — the part the sort backend swaps: key
+    packing + the stable word sort (packed plans) or the column lexsort.
+    Returns (perm, sorted_words-or-None).  ``sort_mode`` builds on this;
+    ``benchmarks/packed.py`` times it in isolation (``stage1_sort_ms``)."""
+    t = tuples.shape[0]
+    if plan is not None and plan.fits:
+        words = plan.pack_device(tuples, values, domain=value_domain)
+        s_words, (perm,) = K.sort_with_payload(
+            words, (jnp.arange(t, dtype=jnp.int32),),
+            backend=sort_backend, live_bits=plan.total_bits,
+            use_pallas=use_pallas)
+        return perm, s_words
+    others, tail = mode_key_columns(tuples, k, values)
+    return lex_perm(others + tail), None
+
+
 def sort_mode(tuples: jnp.ndarray, k: int,
               values: Optional[jnp.ndarray] = None,
               perm: Optional[jnp.ndarray] = None,
-              plan: Optional[K.ModeKeyPlan] = None) -> SortedMode:
+              plan: Optional[K.ModeKeyPlan] = None,
+              sort_backend: str = "radix",
+              use_pallas: bool = False,
+              value_domain: Optional[jnp.ndarray] = None) -> SortedMode:
     """Stage 1 for mode k.  Sort key: (other columns..., [value,] e_k), so
     duplicates of a (key[, value], e) pair land adjacent and the
     ``first_occ`` mask makes all downstream sums duplicate-idempotent.
 
     ``plan`` (a fitting ``keys.ModeKeyPlan``) selects the packed-key
-    path: one stable ``lax.sort`` on 1–2 uint32 key words carrying the
-    permutation iota as payload; the entity and value columns are
-    decoded from the sorted key's bit-fields, and segment/first-
-    occurrence flags are 1–2 word comparisons.  Without a plan (or when
-    the key exceeds 64 bits) the N+1-column lexsort fallback runs.  Both
-    paths are bit-identical (the packed word order *is* the
-    lexicographic column order, and both sorts are stable).
+    path: one stable sort on 1–2 uint32 key words — the bit-plan-pruned
+    radix backend by default, or one ``lax.sort`` carrying the
+    permutation iota as payload (``sort_backend='lax'``); the entity
+    and value columns are decoded from the sorted key's bit-fields, and
+    segment/first-occurrence flags are 1–2 word comparisons.  Without a
+    plan (or when the key exceeds 64 bits) the N+1-column lexsort
+    fallback runs.  All paths are bit-identical (the packed word order
+    *is* the lexicographic column order, and every sort is stable).
 
     ``perm`` short-circuits the sort with a precomputed permutation (the
     streaming engine maintains one by merging sorted runs)."""
     t, n = tuples.shape
     s_words = None
     if plan is not None and plan.fits:
-        words = plan.pack_device(tuples, values)
         if perm is None:
-            s_words, (perm,) = K.sort_with_payload(
-                words, (jnp.arange(t, dtype=jnp.int32),))
+            perm, s_words = mode_sort_perm(tuples, k, values, plan,
+                                           sort_backend, use_pallas,
+                                           value_domain)
         else:
+            words = plan.pack_device(tuples, values, domain=value_domain)
             s_words = tuple(w[perm] for w in words)
         # the sorted value column is a bit-field of the sorted key — decode
         # it instead of carrying a float payload through the sort
-        s_vals = plan.extract_values(s_words) if values is not None else None
+        s_vals = (plan.extract_values(s_words, domain=value_domain)
+                  if values is not None else None)
         s_e = plan.extract_entity(s_words)
         seg_flag = segment_starts(K.drop_low_bits(s_words, plan.seg_shift))
         first_occ = segment_starts(s_words)
     else:
         plan = None
-        others = [tuples[:, j] for j in range(n) if j != k]
-        tail = ([values] if values is not None else []) + [tuples[:, k]]
+        others, tail = mode_key_columns(tuples, k, values)
         if perm is None:
             perm = lex_perm(others + tail)
         s_others = [c[perm] for c in others]
@@ -272,7 +314,9 @@ def bsearch(vals: jnp.ndarray, lo0: jnp.ndarray, hi0: jnp.ndarray,
 
 def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
                      values: jnp.ndarray, delta: float,
-                     use_pallas: bool = False) -> ModeComponents:
+                     use_pallas: bool = False,
+                     value_domain: Optional[jnp.ndarray] = None
+                     ) -> ModeComponents:
     """δ-range operator (NOAC, §3.2/§4.3): the component of a tuple with
     value v0 is the contiguous value-window [v0-δ, v0+δ] *inside* its key
     segment, found with two binary searches.  Signatures are differences
@@ -291,12 +335,23 @@ def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
         # normalised so word order agrees with float order.
         plan, d = sm.plan, jnp.float32(delta)
         t_lo, t_hi = sm.sorted_vals - d, sm.sorted_vals + d
-        t_lo = jnp.where(t_lo == 0, jnp.float32(0.0), t_lo)
-        t_hi = jnp.where(t_hi == 0, jnp.float32(0.0), t_hi)
-        q_lo = plan.delta_query_words(sm.sorted_words,
-                                      K.float_sort_bits(t_lo))
-        q_hi = plan.delta_query_words(sm.sorted_words,
-                                      K.float_sort_bits(t_hi))
+        if plan.value_bits == 32:
+            t_lo = jnp.where(t_lo == 0, jnp.float32(0.0), t_lo)
+            t_hi = jnp.where(t_hi == 0, jnp.float32(0.0), t_hi)
+            lane_lo = K.float_sort_bits(t_lo)
+            lane_hi = K.float_sort_bits(t_hi)
+        else:
+            # rank-coded lane: the window bounds are domain ranks.  Every
+            # value ≥ v-δ has rank ≥ searchsorted-left(v-δ); every value
+            # ≤ v+δ has rank ≤ searchsorted-right(v+δ)-1 (≥ 0: the
+            # tuple's own value is in the domain and ≤ v+δ).
+            dom = value_domain.astype(jnp.float32)
+            lane_lo = jnp.searchsorted(dom, t_lo,
+                                       side="left").astype(jnp.uint32)
+            lane_hi = (jnp.searchsorted(dom, t_hi, side="right")
+                       - 1).astype(jnp.uint32)
+        q_lo = plan.delta_query_words(sm.sorted_words, lane_lo)
+        q_hi = plan.delta_query_words(sm.sorted_words, lane_hi)
         q_hi = q_hi[:-1] + (q_hi[-1] | jnp.uint32(plan.e_mask),)
         lo_idx = K.search_words(sm.sorted_words, q_lo, upper=False)[sm.inv]
         hi_idx = K.search_words(sm.sorted_words, q_hi, upper=True)[sm.inv]
@@ -319,21 +374,23 @@ def delta_components(sm: SortedMode, r_lo: jnp.ndarray, r_hi: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def stage3_dedup(sig_lo: jnp.ndarray, sig_hi: jnp.ndarray,
-                 tuple_first: jnp.ndarray, packed: bool = True):
+                 tuple_first: jnp.ndarray, packed: bool = True,
+                 sort_backend: str = "radix", use_pallas: bool = False):
     """Dedup clusters on their signatures with one sort; count *distinct*
     generating tuples per cluster (Alg. 6+7 reducer semantics).
 
     ``packed`` keys the sort on the (sig_lo, sig_hi) pair — the 2×32-bit
-    cluster signature as one uint64 word — and carries ``tuple_first``
-    and the permutation as sort payloads; the lexsort branch is the
-    bit-identical baseline kept for benchmarking.
+    cluster signature as one uint64 word, all 64 bits live for the
+    radix backend (signatures are avalanched hashes); the lexsort
+    branch is the bit-identical baseline kept for benchmarking.
 
     Returns (gen_count, is_unique) in original tuple order; ``is_unique``
     marks the first distinct generating tuple of each cluster."""
     t = sig_lo.shape[0]
     if packed:
         (s_lo, s_hi), (order,) = K.sort_with_payload(
-            (sig_lo, sig_hi), (jnp.arange(t, dtype=jnp.int32),))
+            (sig_lo, sig_hi), (jnp.arange(t, dtype=jnp.int32),),
+            backend=sort_backend, live_bits=64, use_pallas=use_pallas)
     else:
         order = lex_perm([sig_lo, sig_hi])
         s_lo, s_hi = sig_lo[order], sig_hi[order]
@@ -392,7 +449,9 @@ def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
                 minsup: int = 0,
                 perms: Optional[jnp.ndarray] = None,
                 packed: Optional[bool] = None,
-                use_pallas: Optional[bool] = None) -> PipelineResult:
+                sort_backend: Optional[str] = None,
+                use_pallas: Optional[bool] = None,
+                value_domain: Optional[jnp.ndarray] = None) -> PipelineResult:
     """The full three-stage pipeline on one shard (jit-able; T, N static).
 
     ``delta=None`` runs the prime cumulus operator (multimodal/OAC);
@@ -402,25 +461,46 @@ def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
 
     ``packed`` selects the single-word Stage-1/3 sort path (None: packed
     whenever the context's key fits 64 bits; False: always lexsort — the
-    benchmarking baseline).  ``use_pallas`` routes the Stage-2 segment
-    reductions through the fused Pallas kernel (None: on TPU only)."""
+    benchmarking baseline); ``sort_backend`` picks the word-sort
+    algorithm ('radix' — the bit-plan-pruned LSD default — or 'lax';
+    'lexsort' forces the column path like ``packed=False``).
+    ``use_pallas`` routes the Stage-2 segment reductions (and the radix
+    backend's histogram/rank sweeps) through the fused Pallas kernels
+    (None: on TPU only).  ``value_domain`` — the sorted distinct values
+    of the many-valued column, when the caller knows them — prunes the
+    key's value lane to rank width (``core.keys``), shrinking the radix
+    pass schedule; orderings are unchanged (rank coding is
+    order-isomorphic), so all sort paths stay bit-identical."""
     t, n = tuples.shape
+    if delta is not None and delta < 0:
+        raise ValueError(f"delta must be >= 0, got {delta}")
     if use_pallas is None:
         use_pallas = kops.on_tpu()
-    plans = K.plan_context_keys([h.shape[0] for h in hash_lo],
-                                with_values=values is not None)
-    use_packed = (packed is not False) and plans[0].fits
+    if values is None:
+        value_domain = None
+    plans = K.plan_context_keys(
+        [h.shape[0] for h in hash_lo], with_values=values is not None,
+        value_slots=(None if value_domain is None
+                     else value_domain.shape[0]))
+    backend = RX.resolve_sort_backend(sort_backend, packed, plans[0].fits)
+    use_packed = backend != "lexsort"
+    # the (sig_lo, sig_hi) pair always fits two words, so Stage 3 keeps
+    # its packed sort even when the context's own key does not fit
+    s3_backend = RX.resolve_sort_backend(sort_backend, packed, True)
     comps, sms = [], []
     for k in range(n):
         sm = sort_mode(tuples, k, values=values,
                        perm=None if perms is None else perms[k],
-                       plan=plans[k] if use_packed else None)
+                       plan=plans[k] if use_packed else None,
+                       sort_backend=backend, use_pallas=use_pallas,
+                       value_domain=value_domain)
         if delta is None:
             comps.append(prime_components(sm, hash_lo[k], hash_hi[k],
                                           use_pallas))
         else:
             comps.append(delta_components(sm, hash_lo[k], hash_hi[k],
-                                          values, delta, use_pallas))
+                                          values, delta, use_pallas,
+                                          value_domain=value_domain))
         sms.append(sm)
     # Stage 2: per-tuple cluster = mix of per-mode component aggregates.
     sig_lo, sig_hi = mix_signatures([c.sig_lo for c in comps],
@@ -434,7 +514,9 @@ def mine_tuples(tuples: jnp.ndarray, hash_lo: Sequence[jnp.ndarray],
     # gathering through mode 0's inverse permutation avoids a scatter.
     tfirst = sms[0].first_occ[sms[0].inv]
     gen_of, is_unique = stage3_dedup(sig_lo, sig_hi, tfirst,
-                                     packed=packed is not False)
+                                     packed=s3_backend != "lexsort",
+                                     sort_backend=s3_backend,
+                                     use_pallas=use_pallas)
     density = gen_of.astype(jnp.float32) / jnp.maximum(volume, 1.0)
     keep = is_unique & (density >= jnp.float32(theta))
     if minsup:
@@ -480,13 +562,21 @@ class PipelineMiner:
     def __init__(self, sizes: Sequence[int], *, theta: float = 0.0,
                  delta: Optional[float] = None, minsup: int = 0,
                  seed: int = 0x5EED, packed: Optional[bool] = None,
-                 use_pallas: Optional[bool] = None):
+                 sort_backend: Optional[str] = None,
+                 use_pallas: Optional[bool] = None,
+                 prune_values: bool = True):
         self.sizes = tuple(int(s) for s in sizes)
         self.theta = float(theta)
         self.delta = None if delta is None else float(delta)
+        if self.delta is not None and self.delta < 0:
+            # a negative δ makes the window [v-δ, v+δ] empty; the rank-
+            # coded lane's searchsorted bounds would underflow instead
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
         self.minsup = int(minsup)
         self.packed = packed
+        self.sort_backend = sort_backend
         self.use_pallas = use_pallas
+        self.prune_values = bool(prune_values)
         self.key_plans = K.plan_context_keys(self.sizes,
                                              with_values=delta is not None)
         vecs = mode_hash_vectors(self.sizes, seed)
@@ -494,22 +584,43 @@ class PipelineMiner:
         self._hi = [jnp.asarray(hi) for _, hi in vecs]
         self._fn = jax.jit(functools.partial(
             mine_tuples, delta=self.delta, theta=self.theta,
-            minsup=self.minsup, packed=packed, use_pallas=use_pallas))
+            minsup=self.minsup, packed=packed, sort_backend=sort_backend,
+            use_pallas=use_pallas))
+
+    @property
+    def resolved_sort_backend(self) -> str:
+        """The actual Stage-1 sort path: 'radix' | 'lax' | 'lexsort'."""
+        return RX.resolve_sort_backend(self.sort_backend, self.packed,
+                                       self.key_plans[0].fits)
 
     @property
     def packed_active(self) -> bool:
         """True when Stage 1 runs the packed single-sort path."""
-        return (self.packed is not False) and self.key_plans[0].fits
+        return self.resolved_sort_backend != "lexsort"
+
+    def value_domain(self, values) -> Optional[jnp.ndarray]:
+        """Sorted distinct values for lane pruning (None when pruning is
+        off or the caller forced the lexsort path — the shared
+        ``radix.wants_value_pruning`` gate)."""
+        if values is None or not RX.wants_value_pruning(
+                self.prune_values, self.packed, self.sort_backend):
+            return None
+        return jnp.asarray(K.value_domain_host(values))
 
     def __call__(self, tuples, values=None) -> PipelineResult:
         tuples = jnp.asarray(tuples, jnp.int32)
         if self.delta is not None:
             if values is None:
                 values = jnp.zeros((tuples.shape[0],), jnp.float32)
+            # domain from the caller's (usually host-side) array, before
+            # the device transfer — np.unique never round-trips the
+            # device column
+            vdom = self.value_domain(values)
             values = jnp.asarray(values, jnp.float32)
         else:
-            values = None
-        return self._fn(tuples, self._lo, self._hi, values=values)
+            values, vdom = None, None
+        return self._fn(tuples, self._lo, self._hi, values=values,
+                        value_domain=vdom)
 
     def materialise(self, result: PipelineResult, tuples=None,
                     only_kept: bool = True):

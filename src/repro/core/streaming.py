@@ -46,6 +46,7 @@ import numpy as np
 
 from . import keys as K
 from . import pipeline as P
+from . import radix as RX
 
 
 @dataclasses.dataclass
@@ -103,17 +104,33 @@ class StreamState:
 
 
 class StreamingMiner(P.PipelineMiner):
-    """Online one-pass mining with exact snapshot-on-demand semantics."""
+    """Online one-pass mining with exact snapshot-on-demand semantics.
+
+    Many-valued streams: ingestion is append-only (duplicate rows are
+    idempotent under the mining algebra), so a duplicate tuple arriving
+    with a *conflicting* value is a precondition violation — V must be
+    a function of the tuple (§3.2).  Batch/distributed inputs get this
+    canonicalised at ``PolyadicContext`` construction (last value
+    wins); a raw-array stream must be value-consistent itself.  True
+    upsert streaming (replacing a row inside already-sorted runs) needs
+    LSM tombstones — a ROADMAP item, not a property of this engine."""
 
     def __init__(self, sizes, theta: float = 0.0, seed: int = 0x5EED,
                  delta: Optional[float] = None, rho_min: float = 0.0,
                  minsup: int = 0, incremental: bool = True,
                  packed: Optional[bool] = None,
-                 use_pallas: Optional[bool] = None):
+                 sort_backend: Optional[str] = None,
+                 use_pallas: Optional[bool] = None,
+                 prune_values: bool = True):
+        # prune_values is accepted for registry-kwarg uniformity but has
+        # no effect on snapshots: the streaming device pipeline shares
+        # the host codecs' un-pruned float value lane (see module
+        # docstring) — only a direct PipelineMiner.__call__ would prune.
         super().__init__(sizes, theta=(rho_min if delta is not None
                                        else theta),
                          delta=delta, minsup=minsup, seed=seed,
-                         packed=packed, use_pallas=use_pallas)
+                         packed=packed, sort_backend=sort_backend,
+                         use_pallas=use_pallas, prune_values=prune_values)
         # host packing shares the device pipeline's bit-width plans
         # (core.keys) — the packers are bit-identical by construction
         self._codecs = self.key_plans
@@ -157,10 +174,14 @@ class StreamingMiner(P.PipelineMiner):
             return
         rows = s.buffer[lo:hi]
         vals = s.values[lo:hi] if s.values is not None else None
+        # the chunk sort mirrors the device's sort backend: host LSD
+        # radix over the same bit plans, or numpy's comparison sort
+        radix = self.resolved_sort_backend == "radix"
         keys, idx = [], []
         for codec in self._codecs:
             k = codec.pack_host(rows, vals)
-            order = np.argsort(k, kind="stable")
+            order = (RX.radix_argsort_host(k, codec.total_bits) if radix
+                     else np.argsort(k, kind="stable"))
             keys.append(k[order])
             idx.append((order + lo).astype(np.int32))
         s.runs.append(_Run(keys, idx))

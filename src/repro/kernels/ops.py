@@ -20,6 +20,8 @@ import numpy as np
 from . import ref
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
+from .radix_sort import radix_histogram as _radix_histogram_kernel
+from .radix_sort import radix_rank as _radix_rank_kernel
 from .rmsnorm import rmsnorm as _rmsnorm_kernel
 from .segment_reduce import segment_reduce as _segment_reduce_kernel
 from .signature import signature as _signature_kernel
@@ -143,6 +145,45 @@ def segment_reduce(w_lo: jnp.ndarray, w_hi: jnp.ndarray, first: jnp.ndarray,
         _pad_to(w_lo, 0, bt_), _pad_to(w_hi, 0, bt_), _pad_to(f, 0, bt_),
         bt=bt_, interpret=_interpret(interpret))
     return lo[:t], hi[:t], cnt[:t]
+
+def radix_histogram(words, shifts, widths, *, bt: int = 512,
+                    use_pallas: bool = True,
+                    interpret: Optional[bool] = None):
+    """One-sweep histograms of every pruned radix digit position.
+
+    words: 1-2 msb-first (T,) uint32 packed key arrays; shifts/widths:
+    static per-pass digit bit ranges -> (npass, 256) int32. The pad
+    rows appended to reach the block grid all carry digit 0, so their
+    count is subtracted from bucket 0 of every pass."""
+    if not use_pallas:
+        return ref.radix_histogram_ref(words, shifts, widths)
+    t = words[0].shape[0]
+    bt_ = min(bt, max(8, 1 << int(np.ceil(np.log2(max(t, 2))))))
+    pad = (-t) % bt_
+    hist = _radix_histogram_kernel(
+        [_pad_to(w, 0, bt_) for w in words], shifts=tuple(shifts),
+        widths=tuple(widths), bt=bt_, interpret=_interpret(interpret))
+    if pad:
+        hist = hist.at[:, 0].add(-pad)
+    return hist
+
+
+def radix_rank(digits: jnp.ndarray, starts: jnp.ndarray, *, bt: int = 512,
+               use_pallas: bool = True,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Stable radix-pass ranks ``starts[d_i] + occurrence_i``.
+
+    digits (T,) uint32 in [0, 256), starts (256,) int32 exclusive
+    bucket starts -> (T,) int32. End-padding is safe: pad positions
+    only consume ranks *after* every real element's."""
+    if not use_pallas:
+        return ref.radix_rank_ref(digits, starts)
+    t = digits.shape[0]
+    bt_ = min(bt, max(8, 1 << int(np.ceil(np.log2(max(t, 2))))))
+    out = _radix_rank_kernel(_pad_to(digits, 0, bt_), starts, bt=bt_,
+                             interpret=_interpret(interpret))
+    return out[:t]
+
 
 def set_signature(mask: jnp.ndarray, r: jnp.ndarray, *,
                   use_pallas: bool = True,

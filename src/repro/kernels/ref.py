@@ -48,6 +48,34 @@ def segment_reduce_ref(w_lo: jnp.ndarray, w_hi: jnp.ndarray,
     return lo, hi, cnt
 
 
+def radix_histogram_ref(words, shifts, widths):
+    """All pruned digit histograms of the packed key words.
+
+    words: 1-2 msb-first (T,) uint32 arrays; shifts/widths: the radix
+    plan's per-pass digit bit ranges. Returns (npass, 256) int32.
+    """
+    from ..core.radix import HIST_BUCKETS, extract_digit
+    rows = []
+    for shift, width in zip(shifts, widths):
+        d = extract_digit(words, shift, width).astype(jnp.int32)
+        rows.append(jnp.zeros((HIST_BUCKETS,), jnp.int32).at[d].add(1))
+    return jnp.stack(rows)
+
+
+def radix_rank_ref(digits: jnp.ndarray, starts: jnp.ndarray) -> jnp.ndarray:
+    """Stable LSD-pass ranks: rank[i] = starts[d_i] + #{j<i : d_j==d_i}.
+
+    digits: (T,) uint32 in [0, 256); starts: (256,) int32 exclusive
+    bucket starts. Returns (T,) int32 destination positions.
+    """
+    from ..core.radix import HIST_BUCKETS
+    oh = (digits[:, None] ==
+          jnp.arange(HIST_BUCKETS, dtype=jnp.uint32)[None, :])
+    oh = oh.astype(jnp.int32)
+    occ = jnp.cumsum(oh, axis=0, dtype=jnp.int32) - oh
+    return (oh * (occ + starts[None, :])).sum(axis=1)
+
+
 def _attn_mask(sq: int, skv: int, q_offset: int, causal: bool,
                window: Optional[int]) -> jnp.ndarray:
     qpos = jnp.arange(sq)[:, None] + q_offset

@@ -61,6 +61,16 @@ def main(argv=None):
                     help="Stage-1/3 sort: packed single-word keys "
                          "(core.keys), the lexsort baseline, or auto "
                          "(packed whenever the key fits 64 bits)")
+    ap.add_argument("--sort-backend", default="auto",
+                    choices=["auto", "radix", "lax", "lexsort"],
+                    help="packed word-sort algorithm: the bit-plan-"
+                         "pruned LSD radix (core.radix; the auto "
+                         "default for fitting keys), the lax.sort "
+                         "comparison baseline, or lexsort to force "
+                         "the column path")
+    ap.add_argument("--no-prune-values", action="store_true",
+                    help="disable value-lane cardinality pruning (keep "
+                         "the 32-bit float lane in many-valued keys)")
     ap.add_argument("--print-top", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeat", type=int, default=1,
@@ -82,6 +92,9 @@ def main(argv=None):
                    rho_min=args.rho_min, minsup=args.minsup,
                    strategy=args.strategy, chunks=args.chunks,
                    packed=packed[args.sort_path],
+                   sort_backend=(None if args.sort_backend == "auto"
+                                 else args.sort_backend),
+                   prune_values=not args.no_prune_values,
                    seed=args.seed or 0x5EED)
         # warm repeats reuse the compiled engine (paper best-of-N protocol)
         best = run.elapsed_s
