@@ -1,6 +1,10 @@
 """Sort-backend comparison on the packed-key hot path: lexsort vs
 packed-lax vs packed-radix, end-to-end, per-stage, per-engine, per
-radix pass.
+radix pass — plus the run-store section (``core.runs``): out-of-core
+chunked Stage 1 vs in-core at equal T, and incremental distributed
+snapshots vs full re-sorts under a trickle, and a fixed scale-
+independent calibration probe so cross-PR ratios can be normalised on
+a noisy machine.
 
 The tentpole comparison of the radix subsystem (``core.radix``): the
 same pipeline run three ways on the MovieLens-like dataset — the
@@ -24,11 +28,14 @@ from __future__ import annotations
 import functools
 import time
 
-from repro.core import StreamingMiner
+import numpy as np
+
+from repro.core import BatchMiner, DistributedMiner, NOACMiner, StreamingMiner
 from repro.core import keys as KY
 from repro.core import pipeline as P
 from repro.core import radix as RX
 from repro.data import synthetic
+from repro.launch.mesh import make_local_mesh
 
 from .common import print_table, save_json
 
@@ -174,8 +181,85 @@ def _radix_pass_probes(sizes, tuples, values, use_pallas):
              for p, fn in probes.items()}, rplan)
 
 
+def calibration_probe(repeat: int = 5) -> dict:
+    """Fixed machine-speed probe (ROADMAP "benchmark hygiene"): one
+    device radix sort of the SAME 100k uint32 words every PR (fixed
+    Philox seed, independent of ``--scale``), best-of-``repeat``.
+    Cross-PR ratios divide by this to normalise a ±30%-noisy machine."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.Generator(np.random.Philox(0xCA11B))
+    words = jnp.asarray(rng.integers(0, 2**32, 100_000, dtype=np.uint32))
+    fn = jax.jit(lambda w: RX.radix_sort_perm((w,), 32))
+    best = _interleaved_best({"probe": lambda: fn(words)}, repeat)
+    return {"probe": "radix_sort_perm_100k_u32", "n": 100_000,
+            "ms": best["probe"]}
+
+
+def _runs_section(sizes, tuples, values, delta, variant, repeat,
+                  use_pallas, rows_out, rows_disp):
+    """Run-store section (``core.runs``): out-of-core chunked Stage 1
+    vs in-core end-to-end at equal T, and incremental distributed
+    snapshots (per-shard run merges) vs full re-sort snapshots under a
+    trickle of new tuples.  Probes of one pair are interleaved like the
+    sort-path probes."""
+    n = tuples.shape[0]
+    kw = {} if delta is None else {"delta": delta}
+    # -- out-of-core vs in-core, equal T ------------------------------------
+    bm = (BatchMiner(sizes, use_pallas=use_pallas) if delta is None
+          else NOACMiner(sizes, delta=delta, use_pallas=use_pallas))
+    budget = -(-n // 6)     # 6 host-sorted chunks
+    probes = {
+        "in_core": (lambda: bm(tuples) if values is None
+                    else bm(tuples, values)),
+        "out_of_core": lambda: bm.mine_chunked(
+            tuples, values=values, chunk_budget=budget),
+    }
+    best = _interleaved_best(probes, repeat)
+    for mode in ("in_core", "out_of_core"):
+        rows_out.append({"backend": "batch", "variant": variant,
+                         "dataset": DATASET, "mode": mode,
+                         "n_tuples": int(n), "ms": best[mode]})
+        rows_disp.append([variant, "batch", mode, f"{n:,}",
+                          f"{best[mode]:,.1f}", ""])
+    ooc = {"out_of_core": best["in_core"] / max(best["out_of_core"], 1e-9)}
+    # -- incremental distributed snapshots vs full re-sorts -----------------
+    mesh = make_local_mesh()
+    miners = {m: DistributedMiner(sizes, mesh, use_pallas=use_pallas, **kw)
+              for m in ("incremental", "full_resort")}
+    # the baseline must not pay run maintenance it then discards:
+    # log-only stores, every snapshot a device re-sort
+    miners["full_resort"].stream_incremental = False
+    chunk = -(-n // 8)
+    trickle = max(1, n // 200)       # the "new tuples" between snapshots
+    for m, dm in miners.items():
+        for lo in range(0, n, chunk):   # preload the stream
+            dm.ingest(tuples[lo:lo + chunk],
+                      None if values is None else values[lo:lo + chunk])
+        dm.snapshot(full_remine=(m == "full_resort"))   # warm compile
+
+    def snap(m):
+        dm = miners[m]
+        dm.ingest(tuples[:trickle],
+                  None if values is None else values[:trickle])
+        return dm.snapshot(full_remine=(m == "full_resort"))
+
+    best = _interleaved_best(
+        {m: functools.partial(snap, m) for m in miners}, repeat)
+    for m in miners:
+        rows_out.append({"backend": "distributed", "variant": variant,
+                         "dataset": DATASET, "mode": m,
+                         "n_tuples": int(n), "ms": best[m]})
+        rows_disp.append([variant, "distributed", m, f"{n:,}",
+                          f"{best[m]:,.1f}", ""])
+    ooc["incremental_snapshot"] = (best["full_resort"]
+                                   / max(best["incremental"], 1e-9))
+    return ooc
+
+
 def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
-    raw = {"rows": [], "speedup": {}, "radix_speedup": {}}
+    raw = {"rows": [], "speedup": {}, "radix_speedup": {},
+           "runs_speedup": {}, "calibration": calibration_probe()}
     full_ctx = synthetic.movielens_like(n_tuples=int(1_000_000 * scale),
                                         seed=0)
     noac_ctx = full_ctx.deduplicated()
@@ -184,6 +268,7 @@ def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
         ("noac", noac_ctx.tuples, noac_ctx.values, DELTA),
     ]
     rows_disp = []
+    runs_disp = []
     for variant, tuples, values, delta in jobs:
         n = tuples.shape[0]
         probes = {}
@@ -242,13 +327,18 @@ def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
                 "n_tuples": int(n), "ms": ms})
             rows_disp.append([variant, "streaming", path, f"{n:,}",
                               f"{ms:,.1f}", ""])
+        # run-store section: out-of-core + incremental distributed
+        raw["runs_speedup"][variant] = _runs_section(
+            full_ctx.sizes, tuples, values, delta, variant, repeat,
+            use_pallas, raw["rows"], runs_disp)
     # headline ratios: the Stage-1 sort path (the subsystem this PR
     # swaps) and the full pipeline — lexsort vs the packed default
     # (packed_speedup, the PR-2 metric) and packed-lax vs packed-radix
     # (radix_speedup, the comparison-sort replacement itself)
     for variant in ("prime", "noac"):
         by = {r["sort_path"]: r for r in raw["rows"]
-              if r["variant"] == variant and r["backend"] == "batch"}
+              if r["variant"] == variant and r["backend"] == "batch"
+              and "sort_path" in r}
 
         def ratio(a, b, key):
             if key == "ms":
@@ -267,12 +357,20 @@ def run(scale: float = 0.12, repeat: int = 3, use_pallas: bool = False):
                 "(movielens-like)",
                 ["variant", "backend", "path", "|I|", "ms", "s1 ms"],
                 rows_disp)
+    print_table("Run store: out-of-core vs in-core, incremental vs "
+                "full-re-sort snapshots",
+                ["variant", "backend", "mode", "|I|", "ms", ""],
+                runs_disp)
     print("packed_speedup (lexsort/packed-radix):",
           {v: {k: round(x, 2) for k, x in d.items()}
            for v, d in raw["speedup"].items()})
     print("radix_speedup (packed-lax/packed-radix):",
           {v: {k: round(x, 2) for k, x in d.items()}
            for v, d in raw["radix_speedup"].items()})
+    print("runs_speedup (in-core/out-of-core, full/incremental):",
+          {v: {k: round(x, 2) for k, x in d.items()}
+           for v, d in raw["runs_speedup"].items()})
+    print("calibration probe:", raw["calibration"])
     save_json("packed.json", raw)
     return raw
 

@@ -47,8 +47,9 @@ def _mining_summary(results: dict, scale: float) -> dict:
         row("reference", "noac", "frames-like", r["n"], r["seq_ms"])
     for r in (results.get("packed") or {}).get("rows", []):
         row(r["backend"], r["variant"], r["dataset"], r["n_tuples"],
-            r["ms"], sort_path=r["sort_path"],
-            **{k: r[k] for k in ("stages", "radix") if k in r})
+            r["ms"],
+            **{k: r[k] for k in ("sort_path", "stages", "radix", "mode")
+               if k in r})
     dist = results.get("distributed") or {}
     for strategy in ("replicate", "shuffle"):
         for variant, key in (("prime", strategy), ("noac",
@@ -66,6 +67,11 @@ def _mining_summary(results: dict, scale: float) -> dict:
         # and packed-lax vs packed-radix (the comparison-sort swap)
         out["packed_speedup"] = results["packed"]["speedup"]
         out["radix_speedup"] = results["packed"]["radix_speedup"]
+        # run-store ratios (out-of-core overhead, incremental snapshot
+        # gain) + the fixed machine-speed probe for cross-PR
+        # normalisation (ROADMAP benchmark hygiene)
+        out["runs_speedup"] = results["packed"]["runs_speedup"]
+        out["calibration"] = results["packed"]["calibration"]
     return out
 
 

@@ -22,6 +22,12 @@ ROW_REQUIRED = {"backend": str, "variant": str, "dataset": str,
 STAGE_KEYS = {"stage1_sort_ms", "stage1_segment_ms",
               "stage2_components_ms", "stage3_dedup_ms", "total_ms"}
 RADIX_KEYS = {"passes", "digit_widths", "live_bits", "per_pass_ms"}
+#: run-store comparison pairs (``core.runs``): each benchmarked variant
+#: must carry both sides of each pair, plus the runs_speedup summary.
+RUNS_MODES = {"batch": ("in_core", "out_of_core"),
+              "distributed": ("incremental", "full_resort")}
+RUNS_SPEEDUP_KEYS = ("out_of_core", "incremental_snapshot")
+CALIBRATION_KEYS = {"probe": str, "n": int, "ms": (int, float)}
 
 
 def validate(doc: dict) -> list[str]:
@@ -60,6 +66,44 @@ def validate(doc: dict) -> list[str]:
                   or sum(r["radix"]["digit_widths"])
                   != r["radix"]["live_bits"]):
                 errs.append(f"{where}: radix pass schedule inconsistent")
+    # run-store section: both sides of every comparison pair + summary
+    runs_rows = [r for r in rows
+                 if r.get("mode") in {m for pair in RUNS_MODES.values()
+                                      for m in pair}]
+    if runs_rows:
+        variants = {r["variant"] for r in runs_rows
+                    if isinstance(r.get("variant"), str)}
+        for v in variants:
+            for backend, pair in RUNS_MODES.items():
+                got = {r["mode"] for r in runs_rows
+                       if r["variant"] == v and r.get("backend") == backend}
+                missing = set(pair) - got
+                if missing:
+                    errs.append(f"runs section [{v}/{backend}]: missing "
+                                f"mode rows {sorted(missing)}")
+        sp = doc.get("runs_speedup")
+        if not isinstance(sp, dict) or not variants <= set(sp):
+            errs.append("missing 'runs_speedup' summary for benchmarked "
+                        "variants")
+        else:
+            for v in variants:
+                if not isinstance(sp.get(v), dict):
+                    errs.append(f"runs_speedup[{v}] is not a dict")
+                    continue
+                for k in RUNS_SPEEDUP_KEYS:
+                    if not isinstance(sp[v].get(k), (int, float)):
+                        errs.append(f"runs_speedup[{v}][{k}] missing")
+        cal = doc.get("calibration")
+        if not isinstance(cal, dict):
+            errs.append("missing 'calibration' probe (fixed cross-PR "
+                        "normalisation row)")
+        else:
+            for k, typ in CALIBRATION_KEYS.items():
+                if not isinstance(cal.get(k), typ) or isinstance(
+                        cal.get(k), bool):
+                    errs.append(f"calibration: bad '{k}' ({cal.get(k)!r})")
+            if isinstance(cal.get("ms"), (int, float)) and cal["ms"] <= 0:
+                errs.append("calibration: non-positive ms")
     paths = {r.get("sort_path") for r in rows}
     if SORT_PATHS & paths:
         if not SORT_PATHS <= paths:
@@ -100,7 +144,9 @@ def main(argv=None):
     n = len(doc["rows"])
     print(f"[validate] OK: {n} rows, scale={doc['scale']}"
           + (f", packed_speedup={doc['packed_speedup']}"
-             if "packed_speedup" in doc else ""))
+             if "packed_speedup" in doc else "")
+          + (f", calibration={doc['calibration']['ms']:.2f}ms"
+             if "calibration" in doc else ""))
     return 0
 
 

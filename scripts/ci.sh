@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI entry point: install dev deps, run the tier-1 suite (ROADMAP.md),
-# then the bench-smoke step: a tiny-scale packed-vs-lexsort benchmark
-# run whose results/BENCH_mining.json must pass the schema gate
+# then the bench-smoke step: a tiny-scale benchmark run — sort-path
+# comparison, run-store section (out-of-core + incremental-distributed
+# snapshots) and the fixed calibration probe — whose
+# results/BENCH_smoke.json must pass the schema gate
 # (benchmarks/validate.py).
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail

@@ -18,8 +18,9 @@ semantics of the paper's online Algorithm 1).  Without this, duplicate
 rows carrying conflicting values make every NOAC engine's output
 depend on which copy it happens to see first — the historical
 seq-vs-par MISMATCH of ``benchmarks/table5.py``.  (The streaming
-engine ingests raw arrays, bypassing this constructor: its streams
-must be value-consistent themselves — see ``core/streaming.py``.)
+engine ingests raw arrays, bypassing this constructor, but applies the
+*same* last-write-wins rule through the run store's tombstones — a
+valued ``add`` is an upsert; see ``core/runs.py``.)
 """
 from __future__ import annotations
 

@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 from . import keys as K
 from . import pipeline as PL
 from . import radix as RX
+from . import runs as RS
 
 Axis = tuple[str, ...]
 
@@ -374,23 +375,25 @@ class DistributedMiner:
             raise ValueError(strategy)
         self._fn = None
         self._t_global = None
+        # incremental snapshot state (per-shard run stores, DESIGN.md §4)
+        self._stores = None
+        self._fn_perms = None
+        self._t_perms = None
+        #: None = auto (runs maintained whenever the key fits); False =
+        #: log-only stores, every snapshot re-sorts on device (the
+        #: benchmark baseline / memory-lean ingestion)
+        self.stream_incremental: Optional[bool] = None
+        self.stream_stats = {"snapshots": 0, "full_resorts": 0,
+                             "merged_rows": 0, "chunk_sorted_rows": 0,
+                             "tombstoned_rows": 0,
+                             "incremental": self.key_plans[0].fits}
 
     # -- shard bodies -------------------------------------------------------
 
-    def _body_replicate(self, tuples, values, vdom, lo, hi):
-        axes = self.axes
-        full = jax.lax.all_gather(tuples, axes, tiled=True)
-        vfull = (jax.lax.all_gather(values, axes, tiled=True)
-                 if self.delta is not None else None)
-        res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
-                             theta=self.theta, minsup=self.minsup,
-                             packed=self.packed,
-                             sort_backend=self.sort_backend,
-                             use_pallas=self.use_pallas,
-                             value_domain=vdom if vdom.shape[0] else None)
-        # keep this shard's block
-        shard_id = jax.lax.axis_index(axes)
-        tl = tuples.shape[0]
+    def _slice_block(self, res, tl):
+        """This shard's block of a full-table ``PipelineResult`` as the
+        ``DistributedResult`` both replicate bodies return."""
+        shard_id = jax.lax.axis_index(self.axes)
         sl = jax.lax.dynamic_slice_in_dim
         start = shard_id * tl
         return DistributedResult(
@@ -404,6 +407,19 @@ class DistributedMiner:
             cardinalities=sl(res.cardinalities, start, tl, axis=1),
             n_clusters=res.is_unique.sum(),
             overflow=jnp.int32(0))
+
+    def _body_replicate(self, tuples, values, vdom, lo, hi):
+        axes = self.axes
+        full = jax.lax.all_gather(tuples, axes, tiled=True)
+        vfull = (jax.lax.all_gather(values, axes, tiled=True)
+                 if self.delta is not None else None)
+        res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
+                             theta=self.theta, minsup=self.minsup,
+                             packed=self.packed,
+                             sort_backend=self.sort_backend,
+                             use_pallas=self.use_pallas,
+                             value_domain=vdom if vdom.shape[0] else None)
+        return self._slice_block(res, tuples.shape[0])
 
     def _body_shuffle(self, tuples, values, vdom, lo, hi):
         axes, nsh = self.axes, self.n_shards
@@ -471,22 +487,47 @@ class DistributedMiner:
             cardinalities=jnp.stack(cards), n_clusters=is_unique.sum(),
             overflow=overflow)
 
+    def _body_replicate_perms(self, tuples, values, perms, lo, hi):
+        """Replicate-strategy body with *precomputed* global per-mode
+        permutations (replicated input): the incremental snapshot path —
+        Stage 1's sorts are skipped entirely, everything downstream is
+        the stock pipeline."""
+        axes = self.axes
+        full = jax.lax.all_gather(tuples, axes, tiled=True)
+        vfull = (jax.lax.all_gather(values, axes, tiled=True)
+                 if self.delta is not None else None)
+        res = PL.mine_tuples(full, lo, hi, values=vfull, delta=self.delta,
+                             theta=self.theta, minsup=self.minsup,
+                             perms=perms, packed=self.packed,
+                             sort_backend=self.sort_backend,
+                             use_pallas=self.use_pallas)
+        return self._slice_block(res, tuples.shape[0])
+
     # -- public -------------------------------------------------------------
 
-    def _build(self, t_global: int):
-        body = (self._body_replicate if self.strategy == "replicate"
-                else self._body_shuffle)
+    def _out_specs(self):
         data_spec = P(self.axes)
         card_spec = P(None, self.axes)
-        out_specs = DistributedResult(
+        return DistributedResult(
             sig_lo=data_spec, sig_hi=data_spec, is_unique=data_spec,
             gen_count=data_spec, volume=data_spec, density=data_spec,
             keep=data_spec, cardinalities=card_spec, n_clusters=P(),
             overflow=P())
+
+    def _build(self, t_global: int):
+        body = (self._body_replicate if self.strategy == "replicate"
+                else self._body_shuffle)
         fn = PL.shard_map(body, mesh=self.mesh,
                           in_specs=(P(self.axes, None), P(self.axes),
                                     P(), P(), P()),
-                          out_specs=out_specs)
+                          out_specs=self._out_specs())
+        return jax.jit(fn)
+
+    def _build_perms(self):
+        fn = PL.shard_map(self._body_replicate_perms, mesh=self.mesh,
+                          in_specs=(P(self.axes, None), P(self.axes),
+                                    P(), P(), P()),
+                          out_specs=self._out_specs())
         return jax.jit(fn)
 
     def _coerce(self, tuples, values):
@@ -549,6 +590,139 @@ class DistributedMiner:
                 f"{self.capacity_factor}); the partition is too skewed "
                 f"for n_shards={self.n_shards}")
         return res
+
+    # -- incremental snapshots (per-shard run stores, DESIGN.md §4) ---------
+
+    def reset_stream(self) -> None:
+        """Drop all ingested stream state (per-shard stores)."""
+        self._stores = None
+        for k in ("snapshots", "full_resorts", "merged_rows",
+                  "chunk_sorted_rows", "tombstoned_rows"):
+            self.stream_stats[k] = 0
+
+    def _ensure_stores(self):
+        if self._stores is None:
+            inc = self.key_plans[0].fits and self.stream_incremental \
+                is not False
+            radix = self.resolved_sort_backend == "radix"
+            n = self.n_shards if inc else 1
+            self._stores = [RS.RunStore(self.key_plans, radix=radix,
+                                        incremental=inc,
+                                        stats=self.stream_stats)
+                            for _ in range(n)]
+        return self._stores
+
+    def _route(self, rows: np.ndarray) -> np.ndarray:
+        stores = self._ensure_stores()
+        if len(stores) == 1:
+            return np.zeros(rows.shape[0], np.int64)
+        return RS.shard_of_rows(rows, stores[0]._identity_plan(),
+                                len(stores))
+
+    def _scatter(self, op: str, rows, values=None) -> None:
+        """Route rows to their owner shard's store by the fixed
+        radix-range partition of the entity-only identity key — the
+        host-side analogue of the shuffle's range partitioner — and
+        apply ``op`` per shard."""
+        rows = np.atleast_2d(np.asarray(rows, np.int32))
+        if rows.shape[0] == 0:
+            return
+        vals = None
+        if self.delta is not None and op != "delete":
+            vals = (np.zeros(rows.shape[0], np.float32) if values is None
+                    else np.asarray(values, np.float32))
+        stores = self._ensure_stores()
+        owner = self._route(rows)
+        for s, store in enumerate(stores):
+            sel = np.nonzero(owner == s)[0]
+            if sel.size == 0:
+                continue
+            sub_vals = None if vals is None else vals[sel]
+            if op == "delete":
+                store.delete(rows[sel])
+            else:
+                getattr(store, op)(rows[sel], sub_vals)
+
+    def ingest(self, rows, values=None) -> None:
+        """Stream a chunk into the per-shard run stores (valued streams
+        upsert — last write wins, like the batch constructor)."""
+        self._scatter("add", rows, values)
+
+    def upsert(self, rows, values=None) -> None:
+        self._scatter("upsert", rows, values)
+
+    def delete(self, rows) -> None:
+        self._scatter("delete", rows)
+
+    @property
+    def stream_count(self) -> int:
+        """Live (non-tombstoned) rows across all shard stores."""
+        if not self._stores:
+            return 0
+        return sum(s.count - s.dead for s in self._stores)
+
+    def _gathered(self, with_run: bool):
+        """Concatenated survivor tables + (incremental path) the
+        globally merged run: shard runs offset into the concatenated
+        table and merged linearly — mode 0 concatenates outright, its
+        shard key ranges are disjoint by the range routing."""
+        stores = [s for s in self._stores if s.count]
+        rows = np.concatenate([s.table()[0] for s in stores])
+        vals = (np.concatenate([s.table()[1] for s in stores])
+                if self.delta is not None else None)
+        run, off = None, 0
+        if with_run:
+            for s in stores:
+                r = RS.offset_run(s.runs[0], off)
+                if run is None:
+                    run = r
+                else:
+                    run = RS.merge_runs(run, r)
+                    self.stream_stats["merged_rows"] += run.size
+                off += s.count
+        return rows, vals, run
+
+    def snapshot(self, full_remine: bool = False) -> DistributedResult:
+        """Mine the current stream exactly.  The incremental path folds
+        each shard's runs (linear merges of only what changed), merges
+        the per-shard runs into global permutations, and runs the
+        replicate body with Stage 1's sorts skipped; ``full_remine=True``
+        (or a non-fitting key) is the re-sort-every-shard baseline —
+        the padded table through the one-shot ``__call__`` path."""
+        if self._stores is None:
+            raise ValueError("no data ingested")
+        incremental = (not full_remine
+                       and all(s.incremental for s in self._stores))
+        if incremental and self.strategy == "shuffle":
+            # the merged-perms body replicates the full table per shard
+            # (all_gather) — running it would silently break the memory
+            # bound the shuffle strategy was chosen for
+            raise ValueError(
+                "incremental snapshots run the replicate-with-perms "
+                "body; strategy='shuffle' mining is one-shot only — "
+                "use snapshot(full_remine=True) or strategy='replicate'")
+        self.stream_stats["snapshots"] += 1
+        for s in self._stores:
+            s.prepare() if incremental else s.compact()
+        if self.stream_count == 0:
+            raise ValueError("no live rows (everything deleted)")
+        rows, vals, run = self._gathered(with_run=incremental)
+        count = rows.shape[0]
+        cap = RS.snapshot_cap(count, self.n_shards)
+        rows, vals = RS.padded_table(rows, vals, cap)
+        if not incremental or run is None:
+            self.stream_stats["full_resorts"] += 1
+            return self(rows, vals)
+        perms = RS.padded_perms(run, self.key_plans, rows[:1],
+                                None if vals is None else vals[:1],
+                                count, cap)
+        tuples, values = self._coerce(rows, vals)
+        if self._fn_perms is None or self._t_perms != cap:
+            self._fn_perms = self._build_perms()
+            self._t_perms = cap
+        return self._fn_perms(tuples, values,
+                              jnp.asarray(perms, jnp.int32),
+                              self._lo, self._hi)
 
 
 def pad_tuples(tuples: np.ndarray, multiple: int) -> np.ndarray:

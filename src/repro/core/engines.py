@@ -87,7 +87,13 @@ def mine(ctx: PolyadicContext, backend: str = "batch",
     bit-plan-pruned LSD default — | 'lax' | 'lexsort'), ``use_pallas``
     (fused Pallas kernels; None = on TPU only).  Backend-specific:
     ``mesh``/``axes``/``strategy``/``capacity_factor`` (distributed),
-    ``chunks`` (streaming).  ``variant='noac'`` requires ``delta``.
+    ``chunks``/``incremental`` (streaming; ``incremental=True`` on the
+    distributed backend switches it to chunked ingestion + merged
+    per-shard-run snapshots), ``chunk_budget`` (batch: out-of-core
+    chunked Stage 1 via ``mine_chunked`` — host-sorted runs, the device
+    never sorts).  All incremental/chunked paths run on the shared
+    ``core.runs`` storage layer (DESIGN.md §4).  ``variant='noac'``
+    requires ``delta``.
     """
     if variant == "noac" and params.get("delta") is None:
         raise ValueError("variant='noac' requires delta=<float>")
@@ -137,11 +143,23 @@ def _timed(step, block=True):
     return go
 
 
+def _batch_step(miner, p, tuples, values=None):
+    """One-shot in-core mining, or out-of-core chunked Stage 1 when the
+    ``chunk_budget`` knob is set (``PipelineMiner.mine_chunked``)."""
+    budget = p.get("chunk_budget")
+    if budget:
+        return lambda: miner.mine_chunked(tuples, values=values,
+                                          chunk_budget=int(budget))
+    if values is not None:
+        return lambda: miner(tuples, values)
+    return lambda: miner(tuples)
+
+
 @register_engine("batch", "prime")
 def _batch_prime(ctx, p):
     miner = BatchMiner(ctx.sizes, theta=p.get("theta", 0.0),
                        seed=p.get("seed", 0x5EED), **_pipe_kw(p))
-    rerun = _timed(lambda: miner(ctx.tuples))
+    rerun = _timed(_batch_step(miner, p, ctx.tuples))
     res = rerun()
     clusters = miner.materialise(res)
     return len(clusters), clusters, res, miner, rerun
@@ -154,7 +172,7 @@ def _batch_noac(ctx, p):
                       rho_min=p.get("rho_min", 0.0),
                       minsup=p.get("minsup", 0), seed=p.get("seed", 0x5EED),
                       **_pipe_kw(p))
-    rerun = _timed(lambda: miner(ctx.tuples, ctx.values))
+    rerun = _timed(_batch_step(miner, p, ctx.tuples, ctx.values))
     res = rerun()
     clusters = miner.materialise(res)
     return len(clusters), clusters, res, miner, rerun
@@ -172,10 +190,24 @@ def _run_distributed(ctx, p, values, **variant_kw):
         strategy=p.get("strategy", "replicate"),
         capacity_factor=p.get("capacity_factor", 2.0),
         seed=p.get("seed", 0x5EED), **_pipe_kw(p), **variant_kw)
-    tuples = pad_tuples(ctx.tuples, miner.n_shards)
-    values = (pad_values(values, miner.n_shards)
-              if values is not None else None)
-    rerun = _timed(lambda: miner(tuples, values))
+    if p.get("incremental"):
+        # chunked ingestion + merged per-shard-run snapshot (core.runs)
+        step = -(-ctx.num_tuples // max(1, int(p.get("chunks", 8))))
+
+        def ingest_and_snapshot():
+            miner.reset_stream()
+            for lo in range(0, ctx.num_tuples, step):
+                hi = lo + step
+                miner.ingest(ctx.tuples[lo:hi],
+                             values[lo:hi] if values is not None else None)
+            return miner.snapshot()
+
+        rerun = _timed(ingest_and_snapshot)
+    else:
+        tuples = pad_tuples(ctx.tuples, miner.n_shards)
+        values = (pad_values(values, miner.n_shards)
+                  if values is not None else None)
+        rerun = _timed(lambda: miner(tuples, values))
     res = rerun()
     return int(np.asarray(res.keep).sum()), None, res, miner, rerun
 

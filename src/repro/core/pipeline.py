@@ -627,3 +627,46 @@ class PipelineMiner:
         """``tuples`` is accepted for API compatibility and unused — the
         result carries its own component windows."""
         return materialise(result, only_kept)
+
+    def mine_chunked(self, chunks, values=None,
+                     chunk_budget: Optional[int] = None,
+                     stats: Optional[dict] = None) -> PipelineResult:
+        """Out-of-core chunked Stage 1 (DESIGN.md §4): build a host-side
+        ``core.runs.RunStore`` chunk-by-chunk — each chunk sorted with
+        O(chunk) working set, runs merged linearly — and feed the merged
+        per-mode permutations to the jitted pipeline via ``perms``, so
+        the device never sorts and the host never holds more than the
+        row log plus one chunk's sort scratch.  Bit-identical to the
+        in-core ``__call__`` on the same table (the store's host packers
+        are the device packers, and stable merges preserve sort order).
+
+        ``chunks`` is a single (T, N) table or an iterable of row
+        chunks (``values`` aligned likewise for the δ variant);
+        ``chunk_budget`` bounds rows-per-chunk, re-splitting anything
+        larger.  Valued tables get the constructor's last-write-wins
+        canonicalisation (``core.runs``) — already-canonical contexts
+        pass through unchanged.  Contexts whose key exceeds 64 bits
+        fall back to one device sort of the assembled table."""
+        from . import runs as RS
+        store = RS.RunStore(self.key_plans,
+                            radix=self.resolved_sort_backend == "radix",
+                            incremental=self.key_plans[0].fits,
+                            stats=stats if stats is not None else {})
+        for rows, vals in RS.iter_chunks(chunks, values, chunk_budget,
+                                         with_values=self.delta is not None):
+            store.add(rows, vals)
+        store.prepare()
+        if store.count == 0:
+            raise ValueError("no data ingested")
+        rows, vals = store.table()
+        targs = jnp.asarray(rows, jnp.int32)
+        vargs = None if vals is None else jnp.asarray(vals, jnp.float32)
+        perms = store.perms()
+        if perms is None:      # key exceeds 64 bits: no host runs
+            # one device sort of the assembled table — with the same
+            # value-lane pruning __call__ applies, so a key rescued by
+            # the rank-coded lane still takes the packed path
+            return self._fn(targs, self._lo, self._hi, values=vargs,
+                            value_domain=self.value_domain(vals))
+        return self._fn(targs, self._lo, self._hi, values=vargs,
+                        perms=jnp.asarray(perms, jnp.int32))

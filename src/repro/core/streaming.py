@@ -1,119 +1,73 @@
 """Online / streaming clustering (paper §2 online setting) with
-merge-based incremental snapshots.
+merge-based incremental snapshots and upsert (tombstone) streams.
 
 The paper's online Algorithm 1 keeps dictionaries and appends pointers
-per incoming triple.  The accelerator analogue here keeps, per mode, the
-tuple table's *sorted order* as a set of sorted runs (an LSM-style
-structure over the shared pipeline of ``core.pipeline``):
+per incoming triple.  The accelerator analogue keeps, per mode, the
+tuple table's *sorted order* as a set of sorted runs — the shared
+``core.runs.RunStore`` storage layer (DESIGN.md §4), which this engine
+drives against the shared pipeline of ``core.pipeline``:
 
-* ``add(chunk)`` sorts **only the chunk** (O(c log c) per mode) into a new
-  run, then compacts geometrically-sized runs by linear two-run merges —
-  every tuple is merged O(log T) times over the stream's lifetime.
-* ``snapshot()`` k-way-merges the surviving runs into full per-mode
-  permutations (linear in T, no re-sort) and hands them to the jitted
-  pipeline via its ``perms`` argument, which skips Stage 1's lexsorts and
-  recomputes segments/signatures/dedup from the pre-sorted order.
+* ``add(chunk)`` sorts **only the chunk** (O(c log c) per mode) into a
+  new run; geometric compaction merges runs linearly, so every tuple is
+  merged O(log T) times over the stream's lifetime.
+* ``upsert(rows, values)`` / ``delete(rows)`` tombstone superseded
+  versions in the store — last-write-wins, exactly the batch
+  constructor's canonicalisation (``core.context``) — which lifts the
+  historical precondition that valued streams be per-tuple
+  value-consistent: a valued ``add`` *is* an upsert.
+* ``snapshot()`` compacts tombstones away, k-way-merges the surviving
+  runs into full per-mode permutations (linear in T, no re-sort) and
+  hands them to the jitted pipeline via its ``perms`` argument, which
+  skips Stage 1's sorts and recomputes segments/signatures/dedup from
+  the pre-sorted order.
 
-This cuts the amortised per-snapshot cost of Stage 1 — the dominant term
-of the one-pass pipeline — from O(T log T) re-sorting to O(chunk log T)
-merging; Stage 3's signature dedup still sorts the (8-byte) signature
-array on device.  Snapshots are *exact*: identical cluster sets (and
-bit-identical signatures) to a full re-mine of the buffer, which is what
-the tests assert.  Both variants stream: prime/multimodal (θ) and NOAC
-(δ/ρ_min/minsup) — the value column simply joins each mode's sort key.
+This cuts the amortised per-snapshot cost of Stage 1 — the dominant
+term of the one-pass pipeline — from O(T log T) re-sorting to
+O(chunk log T) merging; Stage 3's signature dedup still sorts the
+(8-byte) signature array on device.  Snapshots are *exact*: identical
+cluster sets (and bit-identical signatures) to a full re-mine of the
+survivor table, which is what the tests assert.  Both variants stream:
+prime/multimodal (θ) and NOAC (δ/ρ_min/minsup).
 
-Mechanics: run merging works on per-mode uint64-packed sort keys from
-``core.keys`` (entity-id bit-fields, plus an order-preserving float32
-encoding for the value column) — the *same* bit-width plans the device
-pipeline sorts by, so host-merged permutations and device sorts order
-identically by construction.  If a context's key does not fit in 64
-bits, the engine transparently falls back to exact full re-sorting per
-snapshot and reports it in ``stats['incremental']``.
+The store merges host-packed uint64 keys from the *same* ``core.keys``
+bit-width plans the device pipeline sorts by, so host-merged
+permutations and device sorts order identically by construction.  The
+streaming plans keep the un-pruned float value lane (runs must stay
+mergeable when later chunks introduce unseen values).  If a context's
+key does not fit in 64 bits, the engine transparently falls back to
+exact full re-sorting per snapshot and reports it in
+``stats['incremental']``; upsert/delete still work (tombstones live in
+the log, not the runs).
 
 Properties kept from the paper's online algorithm:
-* one pass over the data (each tuple enters the buffer once),
+* one pass over the data (each tuple enters the log once),
 * per-chunk latency O(c log c + merge debt) with O(log T) total
   recompilations (power-of-two padding),
-* checkpointable: the state is numpy-convertible arrays (runs are
-  rebuilt lazily after a restore).
+* checkpointable: ``state.checkpoint()`` serialises the run arrays and
+  tombstones themselves, so restore is O(T) array loads — no re-sort
+  (legacy buffer-only blobs still restore via one lazy rebuild sort).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 
-from . import keys as K
 from . import pipeline as P
-from . import radix as RX
+from . import runs as RS
 
-
-@dataclasses.dataclass
-class _Run:
-    """One sorted run: per-mode sorted keys + buffer-row indices."""
-    keys: List[np.ndarray]   # per mode, (L,) uint64, ascending
-    idx: List[np.ndarray]    # per mode, (L,) int32 indices into the buffer
-
-    @property
-    def size(self) -> int:
-        return int(self.idx[0].shape[0])
-
-
-def _merge_two(a: _Run, b: _Run) -> _Run:
-    """Linear stable merge of two sorted runs (a's elements win ties)."""
-    keys, idx = [], []
-    for ka, ia, kb, ib in zip(a.keys, a.idx, b.keys, b.idx):
-        pa = np.searchsorted(kb, ka, side="left") + np.arange(ka.size)
-        pb = np.searchsorted(ka, kb, side="right") + np.arange(kb.size)
-        mk = np.empty(ka.size + kb.size, np.uint64)
-        mi = np.empty(ka.size + kb.size, np.int32)
-        mk[pa], mk[pb] = ka, kb
-        mi[pa], mi[pb] = ia, ib
-        keys.append(mk)
-        idx.append(mi)
-    return _Run(keys, idx)
-
-
-# ---------------------------------------------------------------------------
-# Stream state
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class StreamState:
-    buffer: np.ndarray                    # (count, N) int32
-    count: int
-    values: Optional[np.ndarray] = None   # (count,) float32, NOAC streams
-    runs: List[_Run] = dataclasses.field(default_factory=list)
-    covered: int = 0                      # rows already inside ``runs``
-
-    def checkpoint(self) -> dict:
-        blob = {"buffer": self.buffer[:self.count].copy(),
-                "count": self.count}
-        if self.values is not None:
-            blob["values"] = self.values[:self.count].copy()
-        return blob
-
-    @staticmethod
-    def restore(blob: dict) -> "StreamState":
-        buf = np.asarray(blob["buffer"], np.int32)
-        vals = (np.asarray(blob["values"], np.float32)
-                if blob.get("values") is not None else None)
-        # runs are rebuilt lazily (covered=0): one O(T log T) sort at resume
-        return StreamState(buf, int(blob["count"]), vals)
+#: Checkpoint/restore entry point (kept under its historical name; the
+#: state object *is* the shared run store).
+StreamState = RS.RunStore
 
 
 class StreamingMiner(P.PipelineMiner):
     """Online one-pass mining with exact snapshot-on-demand semantics.
 
-    Many-valued streams: ingestion is append-only (duplicate rows are
-    idempotent under the mining algebra), so a duplicate tuple arriving
-    with a *conflicting* value is a precondition violation — V must be
-    a function of the tuple (§3.2).  Batch/distributed inputs get this
-    canonicalised at ``PolyadicContext`` construction (last value
-    wins); a raw-array stream must be value-consistent itself.  True
-    upsert streaming (replacing a row inside already-sorted runs) needs
-    LSM tombstones — a ROADMAP item, not a property of this engine."""
+    Ingestion: ``add`` (append; valued streams upsert — see module
+    docstring), ``upsert`` (insert-or-replace by tuple, last write
+    wins), ``delete`` (tombstone).  ``snapshot()`` mines the current
+    survivor set exactly."""
 
     def __init__(self, sizes, theta: float = 0.0, seed: int = 0x5EED,
                  delta: Optional[float] = None, rho_min: float = 0.0,
@@ -124,7 +78,7 @@ class StreamingMiner(P.PipelineMiner):
                  prune_values: bool = True):
         # prune_values is accepted for registry-kwarg uniformity but has
         # no effect on snapshots: the streaming device pipeline shares
-        # the host codecs' un-pruned float value lane (see module
+        # the host store's un-pruned float value lane (see module
         # docstring) — only a direct PipelineMiner.__call__ would prune.
         super().__init__(sizes, theta=(rho_min if delta is not None
                                        else theta),
@@ -136,119 +90,76 @@ class StreamingMiner(P.PipelineMiner):
         self._codecs = self.key_plans
         self.incremental = bool(incremental) and all(c.fits
                                                      for c in self._codecs)
-        self.state: Optional[StreamState] = None
+        self.state: Optional[RS.RunStore] = None
         self.stats = {"snapshots": 0, "full_resorts": 0, "merged_rows": 0,
-                      "chunk_sorted_rows": 0,
+                      "chunk_sorted_rows": 0, "tombstoned_rows": 0,
                       "incremental": self.incremental}
         # kept for API compatibility: the snapshot materialiser
         self.miner = self
 
     # -- ingestion ----------------------------------------------------------
 
-    def add(self, chunk: np.ndarray, values=None) -> None:
-        chunk = np.atleast_2d(np.asarray(chunk, np.int32))
-        vals = None
-        if self.delta is not None:
-            vals = (np.zeros(chunk.shape[0], np.float32) if values is None
-                    else np.asarray(values, np.float32))
+    def _store(self) -> RS.RunStore:
+        """The run store, created on first use and re-adopted after a
+        checkpoint restore (a restored store may lack plans — legacy
+        blobs — or carry its own stats dict)."""
         if self.state is None:
-            self.state = StreamState(chunk.copy(), chunk.shape[0],
-                                     vals.copy() if vals is not None
-                                     else None)
-        else:
-            s = self.state
-            buf = np.concatenate([s.buffer[:s.count], chunk])
-            v = (np.concatenate([s.values[:s.count], vals])
-                 if vals is not None else None)
-            self.state = StreamState(buf, buf.shape[0], v, s.runs, s.covered)
-        if self.incremental:
-            self._absorb_tail()
-
-    def _absorb_tail(self) -> None:
-        """Sort any rows not yet covered by runs (normally just the new
-        chunk; the whole buffer after a checkpoint restore) into a fresh
-        run, then compact geometrically."""
+            self.state = RS.RunStore(
+                self._codecs, radix=self.resolved_sort_backend == "radix",
+                incremental=self.incremental, stats=self.stats)
         s = self.state
-        lo, hi = s.covered, s.count
-        if lo >= hi:
-            return
-        rows = s.buffer[lo:hi]
-        vals = s.values[lo:hi] if s.values is not None else None
-        # the chunk sort mirrors the device's sort backend: host LSD
-        # radix over the same bit plans, or numpy's comparison sort
-        radix = self.resolved_sort_backend == "radix"
-        keys, idx = [], []
-        for codec in self._codecs:
-            k = codec.pack_host(rows, vals)
-            order = (RX.radix_argsort_host(k, codec.total_bits) if radix
-                     else np.argsort(k, kind="stable"))
-            keys.append(k[order])
-            idx.append((order + lo).astype(np.int32))
-        s.runs.append(_Run(keys, idx))
-        s.covered = hi
-        self.stats["chunk_sorted_rows"] += hi - lo
-        while len(s.runs) >= 2 and s.runs[-2].size <= 2 * s.runs[-1].size:
-            merged = _merge_two(s.runs[-2], s.runs[-1])
-            self.stats["merged_rows"] += merged.size
-            s.runs[-2:] = [merged]
+        if s.plans is None:
+            s.plans = self._codecs
+        s.radix = self.resolved_sort_backend == "radix"
+        s.incremental = s.incremental and self.incremental
+        s.stats = self.stats
+        return s
+
+    def add(self, chunk: np.ndarray, values=None) -> None:
+        self._store().add(chunk, values if self.delta is not None else None)
+
+    def upsert(self, rows: np.ndarray, values=None) -> None:
+        self._store().upsert(rows,
+                             values if self.delta is not None else None)
+
+    def delete(self, rows: np.ndarray) -> None:
+        self._store().delete(rows)
 
     # -- snapshots ----------------------------------------------------------
 
     def _padded(self):
         s = self.state
-        buf, count = s.buffer[:s.count], s.count
-        cap = 1 << max(0, int(np.ceil(np.log2(max(count, 1)))))
-        if cap < count:
-            cap *= 2
-        pad = cap - count
-        if pad:
-            buf = np.concatenate([buf, np.repeat(buf[:1], pad, 0)])
-        vals = None
-        if self.delta is not None:
-            vals = s.values[:count]
-            if pad:
-                vals = np.concatenate([vals, np.repeat(vals[:1], pad)])
+        buf, vals = s.table()
+        count = s.count
+        cap = RS.snapshot_cap(count)
+        buf, vals = RS.padded_table(buf, vals, cap)
         return buf, vals, count, cap
 
-    def _merged_perms(self, count: int, cap: int) -> np.ndarray:
-        """Collapse all runs into one and extend it with the pad rows
-        (duplicates of row 0 — idempotent), giving (N, cap) permutations."""
-        s = self.state
-        run = s.runs[0]
-        for other in s.runs[1:]:
-            run = _merge_two(run, other)
-            self.stats["merged_rows"] += run.size
-        s.runs = [run]
-        if cap == count:
-            return np.stack(run.idx)
-        row0 = s.buffer[:1]
-        val0 = s.values[:1] if s.values is not None else None
-        pad_idx = np.arange(count, cap, dtype=np.int32)
-        perms = []
-        for codec, keys, idx in zip(self._codecs, run.keys, run.idx):
-            key0 = codec.pack_host(row0, val0)[0]
-            pos = int(np.searchsorted(keys, key0, side="right"))
-            perms.append(np.insert(idx, pos, pad_idx))
-        return np.stack(perms)
-
     def snapshot(self, full_remine: bool = False) -> P.PipelineResult:
-        """Current cluster set (exact; padding is idempotent).
+        """Current cluster set of the survivor table (exact; padding is
+        idempotent).
 
         ``full_remine=True`` forces the one-shot batch path (device
-        lexsorts) — the baseline the incremental path is verified and
+        sorts) — the baseline the incremental path is verified and
         benchmarked against."""
         if self.state is None or self.state.count == 0:
             raise ValueError("no data ingested")
+        s = self._store()
+        if full_remine or not s.incremental:
+            s.compact()          # survivor set only; leave runs unmerged
+        else:
+            s.prepare()
+        if s.count == 0:
+            raise ValueError("no live rows (everything deleted)")
         buf, vals, count, cap = self._padded()
         self.stats["snapshots"] += 1
         import jax.numpy as jnp
         targs = jnp.asarray(buf, jnp.int32)
         vargs = None if vals is None else jnp.asarray(vals, jnp.float32)
-        if full_remine or not self.incremental:
+        if full_remine or not s.incremental:
             self.stats["full_resorts"] += 1
             return self._fn(targs, self._lo, self._hi, values=vargs)
-        self._absorb_tail()
-        perms = self._merged_perms(count, cap)
+        perms = s.perms(cap)
         return self._fn(targs, self._lo, self._hi, values=vargs,
                         perms=jnp.asarray(perms, jnp.int32))
 

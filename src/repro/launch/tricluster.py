@@ -55,7 +55,19 @@ def main(argv=None):
     ap.add_argument("--rho-min", type=float, default=0.0)
     ap.add_argument("--minsup", type=int, default=0)
     ap.add_argument("--chunks", type=int, default=8,
-                    help="streaming: number of ingestion chunks")
+                    help="streaming / incremental-distributed: number of "
+                         "ingestion chunks")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="batch: out-of-core chunked Stage 1 — sort at "
+                         "most this many rows per host chunk "
+                         "(core.runs store; 0 = in-core)")
+    ap.add_argument("--incremental", action="store_true",
+                    help="distributed: chunked ingestion into per-shard "
+                         "run stores + merged-run snapshots instead of "
+                         "one-shot mining")
+    ap.add_argument("--no-incremental", action="store_true",
+                    help="streaming: full device re-sort per snapshot "
+                         "(disable the sorted-run merge path)")
     ap.add_argument("--sort-path", default="auto",
                     choices=["auto", "packed", "lexsort"],
                     help="Stage-1/3 sort: packed single-word keys "
@@ -87,10 +99,16 @@ def main(argv=None):
 
     try:
         packed = {"auto": None, "packed": True, "lexsort": False}
+        incremental = (False if args.no_incremental
+                       else True if args.incremental
+                       else None)
         run = mine(ctx, backend=args.backend, variant=variant,
                    theta=args.theta, delta=args.delta,
                    rho_min=args.rho_min, minsup=args.minsup,
                    strategy=args.strategy, chunks=args.chunks,
+                   chunk_budget=args.chunk_budget or None,
+                   **({} if incremental is None
+                      else {"incremental": incremental}),
                    packed=packed[args.sort_path],
                    sort_backend=(None if args.sort_backend == "auto"
                                  else args.sort_backend),

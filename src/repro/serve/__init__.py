@@ -1,4 +1,7 @@
-"""Serving substrate: batched prefill+decode engine over the model API."""
+"""Serving substrate: batched prefill+decode engine over the model API,
+plus the cluster-query surface over mined results (``serve.clusters``)."""
+from .clusters import ClusterIndex, ClusterView, cluster_query
 from .engine import GenerationResult, ServeEngine
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["ServeEngine", "GenerationResult", "ClusterIndex",
+           "ClusterView", "cluster_query"]

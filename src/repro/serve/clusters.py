@@ -1,0 +1,162 @@
+"""Cluster-query serving surface: mined clusters as a queryable index
+(DESIGN.md §8; ROADMAP "serving surface for mined clusters").
+
+``postprocess`` ranks and exports clusters; this module makes them
+*servable*: a :class:`ClusterIndex` built once from any engine's
+``PipelineResult`` answers point lookups —
+
+* ``entity → clusters``: every kept cluster whose mode-``mode``
+  component (any mode when unspecified) contains the entity,
+* ``signature → cluster``: exact lookup by the 2×32-bit cluster
+  signature, the stable cross-engine cluster identity (all engines with
+  the same seed emit bit-identical signatures, so a signature handed
+  out by a batch job resolves against a streaming snapshot's index).
+
+Index construction is one host pass over the kept tuples' component
+windows (the O(|I|) post-processing cost the paper's §2 budgets);
+queries are dictionary lookups.  ``cluster_query`` is the one-shot
+convenience wrapper; long-lived serving should build the index once per
+snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import postprocess as PP
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterView:
+    """One mined cluster, host-side: per-mode component sets + stats."""
+    signature: Tuple[int, int]            # (sig_lo, sig_hi) cluster id
+    components: Tuple[frozenset, ...]     # per-mode entity-id sets
+    density: float
+    gen_count: int
+    volume: float
+
+    @property
+    def arity(self) -> int:
+        return len(self.components)
+
+    def contains(self, entity: int, mode: Optional[int] = None) -> bool:
+        if mode is not None:
+            return entity in self.components[mode]
+        return any(entity in c for c in self.components)
+
+    def format(self, names=None) -> str:
+        return PP.format_cluster(self.components, names=names,
+                                 density=self.density)
+
+
+class ClusterIndex:
+    """Inverted index over kept clusters of one mining result."""
+
+    def __init__(self, clusters: List[ClusterView]):
+        self.clusters = list(clusters)
+        self._by_sig = {c.signature: c for c in self.clusters}
+        arity = self.clusters[0].arity if self.clusters else 0
+        self._by_entity: list[dict] = [{} for _ in range(arity)]
+        for c in self.clusters:
+            for k, comp in enumerate(c.components):
+                for e in comp:
+                    self._by_entity[k].setdefault(int(e), []).append(c)
+
+    @classmethod
+    def from_result(cls, result, only_kept: bool = True,
+                    min_density: float = 0.0) -> "ClusterIndex":
+        """Build from a ``PipelineResult`` (batch / NOAC / streaming —
+        any result carrying component windows).  ``DistributedResult``
+        ships per-shard aggregates without the windows; serve those by
+        mining the snapshot through the streaming/batch engine, or
+        resolve its signatures against an index built from one (the
+        signatures are bit-identical across engines)."""
+        for field in ("range_lo", "range_hi", "sorted_e"):
+            if not hasattr(result, field):
+                raise ValueError(
+                    f"result has no '{field}' — component windows are "
+                    "needed to build a ClusterIndex (DistributedResult "
+                    "does not carry them; build the index from a "
+                    "batch/streaming PipelineResult of the same context "
+                    "and resolve signatures against it)")
+        flag = np.asarray(result.keep if only_kept else result.is_unique)
+        dens = np.asarray(result.density)
+        if min_density:
+            flag = flag & (dens >= min_density)
+        rlo, rhi = np.asarray(result.range_lo), np.asarray(result.range_hi)
+        sorted_e = np.asarray(result.sorted_e)
+        slo = np.asarray(result.sig_lo)
+        shi = np.asarray(result.sig_hi)
+        gen = np.asarray(result.gen_count)
+        vol = np.asarray(result.volume)
+        n = sorted_e.shape[0]
+        views = []
+        for i in np.nonzero(flag)[0]:
+            comps = tuple(
+                frozenset(np.unique(sorted_e[k][rlo[k, i]:rhi[k, i]])
+                          .tolist())
+                for k in range(n))
+            views.append(ClusterView(
+                signature=(int(slo[i]), int(shi[i])), components=comps,
+                density=float(dens[i]), gen_count=int(gen[i]),
+                volume=float(vol[i])))
+        return cls(views)
+
+    def __len__(self) -> int:
+        return len(self.clusters)
+
+    def __iter__(self) -> Iterator[ClusterView]:
+        return iter(self.clusters)
+
+    def query(self, entity: Optional[int] = None,
+              mode: Optional[int] = None,
+              signature: Optional[Tuple[int, int]] = None,
+              min_density: float = 0.0) -> List[ClusterView]:
+        """Kept clusters matching the given constraints.
+
+        ``signature=(lo, hi)``: exact cluster lookup (≤ 1 hit).
+        ``entity=e [, mode=k]``: membership in mode ``k``'s component
+        (any mode when ``mode`` is None; ``mode`` without ``entity`` is
+        rejected).  Constraints combine with AND.
+        """
+        if mode is not None:
+            if entity is None:
+                raise ValueError("mode=... requires entity=...")
+            if self._by_entity and not 0 <= mode < len(self._by_entity):
+                raise ValueError(f"mode {mode} out of range")
+            if not self._by_entity:         # empty index: no hits
+                return []
+        if signature is not None:
+            hit = self._by_sig.get((int(signature[0]), int(signature[1])))
+            out = [] if hit is None else [hit]
+            if entity is not None:
+                out = [c for c in out if c.contains(int(entity), mode)]
+        elif entity is not None:
+            if mode is not None:
+                out = list(self._by_entity[mode].get(int(entity), []))
+            else:       # any-mode: union of the per-mode inverted maps
+                seen, out = set(), []
+                for by in self._by_entity:
+                    for c in by.get(int(entity), []):
+                        if id(c) not in seen:
+                            seen.add(id(c))
+                            out.append(c)
+        else:
+            out = list(self.clusters)
+        if min_density:
+            out = [c for c in out if c.density >= min_density]
+        return out
+
+
+def cluster_query(result, entity: Optional[int] = None,
+                  mode: Optional[int] = None,
+                  signature: Optional[Tuple[int, int]] = None,
+                  min_density: float = 0.0,
+                  only_kept: bool = True) -> List[ClusterView]:
+    """One-shot query over a mining result: build the index and look up
+    (``ClusterIndex.from_result(...).query(...)``)."""
+    return ClusterIndex.from_result(result, only_kept=only_kept).query(
+        entity=entity, mode=mode, signature=signature,
+        min_density=min_density)

@@ -110,6 +110,91 @@ def test_prime_streaming_incremental_bit_identical():
     assert sm.stats["full_resorts"] == 4  # only the explicit baselines
 
 
+def _kept_sigs(res):
+    keep = np.asarray(res.keep)
+    return set(zip(np.asarray(res.sig_lo)[keep].tolist(),
+                   np.asarray(res.sig_hi)[keep].tolist()))
+
+
+@pytest.mark.parametrize("variant", ["prime", "noac"])
+def test_mine_chunked_bit_identical_to_in_core(variant):
+    """Out-of-core chunked Stage 1 (host run store + merged perms) is
+    leaf-for-leaf bit-identical to one-shot in-core mining — ≥4 chunks,
+    both variants."""
+    import dataclasses
+    if variant == "prime":
+        ctx = synthetic.random_context((9, 8, 7), 200, seed=6)
+        miner = BatchMiner(ctx.sizes)
+        vals = None
+    else:
+        ctx = synthetic.random_context((8, 7, 6), 160, seed=7,
+                                       values=True).deduplicated()
+        miner = NOACMiner(ctx.sizes, delta=60.0, rho_min=0.2, minsup=1)
+        vals = ctx.values
+    in_core = miner(ctx.tuples) if vals is None \
+        else miner(ctx.tuples, vals)
+    budget = -(-ctx.num_tuples // 5)          # 5 chunks
+    stats = {}
+    chunked = miner.mine_chunked(ctx.tuples, values=vals,
+                                 chunk_budget=budget, stats=stats)
+    for f in dataclasses.fields(in_core):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(in_core, f.name)),
+            np.asarray(getattr(chunked, f.name)), err_msg=f.name)
+    assert stats["chunk_sorted_rows"] == ctx.num_tuples
+
+
+@pytest.mark.parametrize("variant", ["prime", "noac"])
+def test_incremental_distributed_snapshots(variant):
+    """Trickle ingestion into per-shard run stores: every snapshot's
+    kept clusters/signatures are bit-identical to one-shot batch mining
+    of the seen context AND to the streaming engine's snapshot; repeated
+    snapshots merge runs instead of re-sorting every shard."""
+    mesh = make_mesh((1,), ("data",))
+    if variant == "prime":
+        ctx = synthetic.random_context((9, 8, 7), 160, seed=8)
+        dm = DistributedMiner(ctx.sizes, mesh)
+        sm = StreamingMiner(ctx.sizes)
+        bm = BatchMiner(ctx.sizes)
+        vals = None
+    else:
+        ctx = synthetic.random_context((8, 7, 6), 120, seed=9,
+                                       values=True).deduplicated()
+        kw = dict(delta=60.0, rho_min=0.2, minsup=1)
+        dm = DistributedMiner(ctx.sizes, mesh, **kw)
+        sm = StreamingMiner(ctx.sizes, **kw)
+        bm = NOACMiner(ctx.sizes, **kw)
+        vals = ctx.values
+    chunk = -(-ctx.num_tuples // 4)
+    for lo in range(0, ctx.num_tuples, chunk):
+        hi = lo + chunk
+        v = None if vals is None else vals[lo:hi]
+        dm.ingest(ctx.tuples[lo:hi], v)
+        sm.add(ctx.tuples[lo:hi], v)
+        seen_v = None if vals is None else vals[:hi]
+        want = _kept_sigs(bm(ctx.tuples[:hi]) if seen_v is None
+                          else bm(ctx.tuples[:hi], seen_v))
+        inc = dm.snapshot()
+        assert _kept_sigs(inc) == want
+        assert _kept_sigs(sm.snapshot()) == want       # streaming parity
+        assert _kept_sigs(dm.snapshot(full_remine=True)) == want
+    st = dm.stream_stats
+    assert st["chunk_sorted_rows"] == ctx.num_tuples   # chunks only
+    assert st["merged_rows"] > 0 and st["full_resorts"] == 4
+    assert st["incremental"]
+
+
+def test_registry_chunk_budget_and_incremental_knobs():
+    ctx = synthetic.random_context((6, 5, 4), 64, seed=10, values=True)
+    base = mine(ctx, backend="batch", variant="noac", delta=40.0)
+    ooc = mine(ctx, backend="batch", variant="noac", delta=40.0,
+               chunk_budget=16)
+    incd = mine(ctx, backend="distributed", variant="noac", delta=40.0,
+                incremental=True, chunks=4)
+    assert base.n_clusters == ooc.n_clusters == incd.n_clusters
+    assert incd.miner.stream_stats["snapshots"] >= 1
+
+
 def test_registry_backends_agree():
     ctx = synthetic.random_context((6, 5, 4), 64, seed=4, values=True)
     runs = {b: mine(ctx, backend=b, variant="noac", delta=40.0)

@@ -1,0 +1,171 @@
+"""Properties of the sorted-run storage layer (``core.runs``):
+
+* random interleavings of add / upsert / delete chunks mine exactly the
+  batch re-mine of the canonicalised survivor set (last write wins,
+  deletes tombstone every version) — kept clusters equal and kept
+  cluster signatures bit-identical (same hash vectors), for the prime
+  and NOAC variants alike,
+* incremental snapshots are leaf-for-leaf bit-identical to the full
+  device re-sort of the same survivor table at every interleaving,
+* checkpoint → restore resumes a stream bit-identically to an
+  uninterrupted one, restoring the run arrays themselves (only rows
+  ingested *after* the restore are chunk-sorted — no O(T log T)
+  rebuild), while legacy buffer-only blobs still restore via the lazy
+  one-sort rebuild path.
+
+The seeded drivers below always run; the hypothesis classes widen the
+search in CI (the container has no hypothesis — same pattern as
+``tests/test_keys_property.py``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import BatchMiner, NOACMiner, StreamingMiner
+from repro.core.postprocess import cluster_set
+from repro.core.streaming import StreamState
+from repro.data import synthetic  # noqa: F401  (kept for parity helpers)
+
+DELTA = 50.0
+SIZES = (7, 6, 5)
+
+
+def _gen_ops(rng, sizes, n_ops, valued, universe=28, max_chunk=7):
+    rows_u = np.stack([rng.integers(0, s, universe) for s in sizes],
+                      1).astype(np.int32)
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(["add", "add", "upsert", "delete"])
+        m = int(rng.integers(1, max_chunk))
+        rows = rows_u[rng.integers(0, universe, m)]
+        vals = (rng.uniform(0.0, 100.0, m).astype(np.float32)
+                if valued and kind != "delete" else None)
+        ops.append((kind, rows, vals))
+    return ops
+
+
+def _survivors(ops, valued):
+    """Python oracle of the canonicalised survivor set: one row per
+    distinct tuple, last value winning (``core.context`` semantics);
+    delete drops every version."""
+    state = {}
+    for kind, rows, vals in ops:
+        for j in range(rows.shape[0]):
+            key = tuple(int(x) for x in rows[j])
+            if kind == "delete":
+                state.pop(key, None)
+            else:
+                state[key] = float(vals[j]) if valued else 0.0
+    if not state:
+        return None, None
+    rows = np.asarray(list(state.keys()), np.int32)
+    vals = np.asarray(list(state.values()), np.float32) if valued else None
+    return rows, vals
+
+
+def _kept_sigs(res):
+    keep = np.asarray(res.keep)
+    return set(zip(np.asarray(res.sig_lo)[keep].tolist(),
+                   np.asarray(res.sig_hi)[keep].tolist()))
+
+
+def _assert_leaves_equal(a, b):
+    for f in dataclasses.fields(a):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
+            err_msg=f.name)
+
+
+def _run_ops(miner, ops):
+    for kind, rows, vals in ops:
+        getattr(miner, kind)(rows, vals) if kind != "delete" \
+            else miner.delete(rows)
+    return miner
+
+
+def _check_interleaving(seed, n_ops, valued):
+    rng = np.random.default_rng(seed)
+    ops = _gen_ops(rng, SIZES, n_ops, valued)
+    surv_rows, surv_vals = _survivors(ops, valued)
+    sm = (StreamingMiner(SIZES, delta=DELTA) if valued
+          else StreamingMiner(SIZES))
+    _run_ops(sm, ops)
+    if surv_rows is None:
+        with pytest.raises(ValueError):
+            sm.snapshot()
+        return
+    inc = sm.snapshot()
+    full = sm.snapshot(full_remine=True)
+    _assert_leaves_equal(inc, full)       # merge path ≡ device re-sort
+    batch = (NOACMiner(SIZES, delta=DELTA)(surv_rows, surv_vals) if valued
+             else BatchMiner(SIZES)(surv_rows))
+    assert _kept_sigs(inc) == _kept_sigs(batch)
+    assert (cluster_set(sm.materialise(inc))
+            == cluster_set(sm.materialise(batch)))
+
+
+def _check_checkpoint(seed, n_ops, valued, legacy=False):
+    rng = np.random.default_rng(seed)
+    ops = _gen_ops(rng, SIZES, n_ops, valued)
+    cut = int(rng.integers(1, max(2, n_ops)))
+    mk = (lambda: StreamingMiner(SIZES, delta=DELTA)) if valued \
+        else (lambda: StreamingMiner(SIZES))
+    whole = _run_ops(mk(), ops)
+    first = _run_ops(mk(), ops[:cut])
+    if first.state is None or first.state.count == 0:
+        return
+    blob = first.state.checkpoint()
+    if legacy:    # pre-run-checkpoint blobs: buffer/count/values only
+        blob = {k: blob[k] for k in ("buffer", "count", "values")
+                if k in blob}
+    resumed = mk()
+    resumed.state = StreamState.restore(blob)
+    _run_ops(resumed, ops[cut:])
+    if _survivors(ops, valued)[0] is None:
+        return
+    _assert_leaves_equal(resumed.snapshot(), whole.snapshot())
+    post = sum(r.shape[0] for k, r, _ in ops[cut:] if k != "delete")
+    if not legacy and resumed.incremental:
+        # the run arrays were restored: only post-restore arrivals were
+        # chunk-sorted — resume is array loads, not a re-sort
+        assert resumed.stats["chunk_sorted_rows"] <= post
+
+
+@pytest.mark.parametrize("valued", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_interleavings_match_batch_survivors(seed, valued):
+    _check_interleaving(seed, n_ops=12, valued=valued)
+
+
+@pytest.mark.parametrize("valued", [False, True])
+@pytest.mark.parametrize("seed", [10, 11])
+def test_checkpoint_restore_equals_uninterrupted(seed, valued):
+    _check_checkpoint(seed, n_ops=10, valued=valued)
+
+
+@pytest.mark.parametrize("seed", [21])
+def test_legacy_blob_lazy_rebuild(seed):
+    _check_checkpoint(seed, n_ops=8, valued=True, legacy=True)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis widening (CI only; mirrors tests/test_keys_property.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # pragma: no cover - CI installs it
+    st = None
+
+if st is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**16), st.integers(1, 20), st.booleans())
+    def test_hypothesis_interleavings(seed, n_ops, valued):
+        _check_interleaving(seed, n_ops, valued)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**16), st.integers(2, 14), st.booleans(),
+           st.booleans())
+    def test_hypothesis_checkpoint_restore(seed, n_ops, valued, legacy):
+        _check_checkpoint(seed, n_ops, valued, legacy=legacy)

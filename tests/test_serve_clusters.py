@@ -1,0 +1,71 @@
+"""Cluster-query serving surface (serve/clusters.py): entity → clusters
+and signature → cluster lookups over the unified ``PipelineResult``,
+cross-checked against the materialiser."""
+import numpy as np
+import pytest
+
+from repro.core import BatchMiner, StreamingMiner
+from repro.core.postprocess import cluster_set
+from repro.data import synthetic
+from repro.serve.clusters import ClusterIndex, cluster_query
+
+
+@pytest.fixture(scope="module")
+def mined():
+    ctx = synthetic.random_context((8, 7, 6), 96, seed=7)
+    bm = BatchMiner(ctx.sizes)
+    res = bm(ctx.tuples)
+    return ctx, bm, res
+
+
+def test_index_matches_materialise(mined):
+    ctx, bm, res = mined
+    idx = ClusterIndex.from_result(res)
+    want = cluster_set(bm.materialise(res))
+    got = {tuple(tuple(sorted(c)) for c in cv.components) for cv in idx}
+    assert got == want and len(idx) == len(want)
+
+
+def test_entity_query_modes(mined):
+    ctx, bm, res = mined
+    idx = ClusterIndex.from_result(res)
+    entity = int(ctx.tuples[0, 1])
+    hits = idx.query(entity=entity, mode=1)
+    assert hits and all(entity in c.components[1] for c in hits)
+    # exactly the clusters whose mode-1 component holds the entity
+    assert (sorted(c.signature for c in hits)
+            == sorted(c.signature for c in idx
+                      if entity in c.components[1]))
+    # any-mode query is a superset of every per-mode query
+    any_hits = {c.signature for c in idx.query(entity=entity)}
+    for k in range(3):
+        assert {c.signature
+                for c in idx.query(entity=entity, mode=k)} <= any_hits
+    with pytest.raises(ValueError):
+        idx.query(entity=entity, mode=5)
+
+
+def test_signature_query_and_density_filter(mined):
+    ctx, bm, res = mined
+    idx = ClusterIndex.from_result(res)
+    some = idx.clusters[0]
+    assert idx.query(signature=some.signature) == [some]
+    assert idx.query(signature=(0, 0)) == []
+    dense = idx.query(min_density=0.5)
+    assert all(c.density >= 0.5 for c in dense)
+    # one-shot wrapper agrees with the prebuilt index
+    assert (cluster_query(res, signature=some.signature)[0].components
+            == some.components)
+
+
+def test_signature_resolves_across_engines(mined):
+    """A signature handed out by the batch engine resolves against a
+    streaming snapshot's index (same seed ⇒ bit-identical signatures)."""
+    ctx, bm, res = mined
+    sm = StreamingMiner(ctx.sizes)
+    sm.add(ctx.tuples[:48])
+    sm.add(ctx.tuples[48:])
+    sidx = ClusterIndex.from_result(sm.snapshot())
+    some = ClusterIndex.from_result(res).clusters[0]
+    hit = sidx.query(signature=some.signature)
+    assert hit and hit[0].components == some.components

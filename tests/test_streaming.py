@@ -1,7 +1,8 @@
-"""Streaming/online engine: snapshot exactness + checkpoint/restore."""
+"""Streaming/online engine: snapshot exactness, upsert/delete streams
+and checkpoint/restore (runs restored, not rebuilt)."""
 import numpy as np
 
-from repro.core import BatchMiner, StreamingMiner
+from repro.core import BatchMiner, NOACMiner, StreamingMiner
 from repro.core.postprocess import cluster_set
 from repro.core.streaming import StreamState
 from repro.data import synthetic
@@ -25,10 +26,58 @@ def test_checkpoint_restore_resumes_stream():
     sm = StreamingMiner(ctx.sizes)
     sm.add(ctx.tuples[:32])
     blob = sm.state.checkpoint()
-    # restart
+    # restart: the run arrays come back from the blob — only the rows
+    # ingested after the restore are chunk-sorted (O(T) array loads,
+    # not an O(T log T) rebuild)
     sm2 = StreamingMiner(ctx.sizes)
     sm2.state = StreamState.restore(blob)
     sm2.add(ctx.tuples[32:])
+    assert sm2.stats["chunk_sorted_rows"] == 32
     bm = BatchMiner(ctx.sizes)
     assert (cluster_set(sm2.snapshot_clusters())
             == cluster_set(bm.mine_context(ctx)))
+
+
+def test_legacy_buffer_blob_still_restores():
+    """Old (pre-run-checkpoint) blobs carry only the buffer: restore
+    takes the lazy path — one full chunk sort on resume — and mines
+    identically."""
+    ctx = synthetic.random_context((6, 6, 6), 64, seed=2)
+    sm = StreamingMiner(ctx.sizes)
+    sm.add(ctx.tuples[:32])
+    blob = {"buffer": ctx.tuples[:32].copy(), "count": 32}
+    sm2 = StreamingMiner(ctx.sizes)
+    sm2.state = StreamState.restore(blob)
+    sm2.add(ctx.tuples[32:])
+    assert sm2.stats["chunk_sorted_rows"] == 64     # full lazy rebuild
+    bm = BatchMiner(ctx.sizes)
+    assert (cluster_set(sm2.snapshot_clusters())
+            == cluster_set(bm.mine_context(ctx)))
+
+
+def test_upsert_delete_stream_matches_batch_survivors():
+    """Tombstone streaming (NOAC): upserts replace a row's value (last
+    write wins), deletes drop every version — snapshots equal batch
+    mining of the canonicalised survivor set, and the incremental path
+    stays bit-identical to the full device re-sort."""
+    ctx = synthetic.random_context((7, 6, 5), 80, seed=3,
+                                   values=True).deduplicated()
+    delta = 60.0
+    sm = StreamingMiner(ctx.sizes, delta=delta)
+    sm.add(ctx.tuples, ctx.values)
+    # conflicting re-arrival: add IS upsert on valued streams
+    sm.add(ctx.tuples[:7], ctx.values[:7] + 25.0)
+    sm.upsert(ctx.tuples[7:12], ctx.values[7:12] - 5.0)
+    sm.delete(ctx.tuples[12:20])
+    surv_rows = np.concatenate([ctx.tuples[:12], ctx.tuples[20:]])
+    surv_vals = np.concatenate([ctx.values[:7] + 25.0,
+                                ctx.values[7:12] - 5.0, ctx.values[20:]])
+    inc = sm.snapshot()
+    full = sm.snapshot(full_remine=True)
+    np.testing.assert_array_equal(np.asarray(inc.sig_lo),
+                                  np.asarray(full.sig_lo))
+    nm = NOACMiner(ctx.sizes, delta=delta)
+    assert (cluster_set(sm.materialise(inc))
+            == cluster_set(nm.materialise(nm(surv_rows, surv_vals))))
+    assert sm.stats["tombstoned_rows"] == 12 + 8
+    assert sm.state.dead == 0               # snapshots compact them away
