@@ -72,6 +72,10 @@ def _mining_summary(results: dict, scale: float) -> dict:
         # normalisation (ROADMAP benchmark hygiene)
         out["runs_speedup"] = results["packed"]["runs_speedup"]
         out["calibration"] = results["packed"]["calibration"]
+    if results.get("serving"):
+        # online query service: latency under a write trickle, swap
+        # staleness, batch-vs-scalar speedup (benchmarks/serving.py)
+        out["serving"] = results["serving"]
     return out
 
 
@@ -82,13 +86,14 @@ def main(argv=None):
     ap.add_argument("--repeat", type=int, default=3)
     ap.add_argument("--only", default="",
                     help="comma list: table3,table4,table5,scaling,"
-                    "distributed,packed")
+                    "distributed,packed,serving")
     ap.add_argument("--out", default="BENCH_mining.json",
                     help="summary filename under results/ (smoke runs "
                     "should not overwrite the tracked full-scale file)")
     args = ap.parse_args(argv)
 
-    from . import distributed, packed, scaling, table3, table4, table5
+    from . import distributed, packed, scaling, serving, table3, table4, \
+        table5
     from .common import save_json
     n_dist = int(320_000 * args.scale)
     jobs = {
@@ -101,6 +106,8 @@ def main(argv=None):
                                        repeat=args.repeat),
         "distributed": lambda: distributed.run(n_tuples=n_dist),
         "packed": lambda: packed.run(scale=args.scale, repeat=args.repeat),
+        "serving": lambda: serving.run(scale=args.scale,
+                                       repeat=args.repeat),
     }
     only = [s for s in args.only.split(",") if s] or list(jobs)
     rc = 0

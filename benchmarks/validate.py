@@ -28,6 +28,17 @@ RUNS_MODES = {"batch": ("in_core", "out_of_core"),
               "distributed": ("incremental", "full_resort")}
 RUNS_SPEEDUP_KEYS = ("out_of_core", "incremental_snapshot")
 CALIBRATION_KEYS = {"probe": str, "n": int, "ms": (int, float)}
+#: online serving section (``benchmarks/serving.py``): the load-phase
+#: measurements, the swap-consistency proof, and the batched-query
+#: comparison (acceptance: ≥ 2× scalar at ≥ 64 entities).
+SERVING_KEYS = {"n_tuples": int, "queries": int, "qps": (int, float),
+                "p50_ms": (int, float), "p99_ms": (int, float),
+                "writer_ops": int, "swaps": int,
+                "staleness_ms_mean": (int, float),
+                "batch_speedup_at_64": (int, float)}
+SERVING_BATCH_KEYS = {"entities": int, "scalar_ms": (int, float),
+                      "batch_ms": (int, float), "speedup": (int, float)}
+SERVING_MIN_BATCH_SPEEDUP = 2.0
 
 
 def validate(doc: dict) -> list[str]:
@@ -104,6 +115,9 @@ def validate(doc: dict) -> list[str]:
                     errs.append(f"calibration: bad '{k}' ({cal.get(k)!r})")
             if isinstance(cal.get("ms"), (int, float)) and cal["ms"] <= 0:
                 errs.append("calibration: non-positive ms")
+    srv = doc.get("serving")
+    if srv is not None:
+        errs.extend(_validate_serving(srv))
     paths = {r.get("sort_path") for r in rows}
     if SORT_PATHS & paths:
         if not SORT_PATHS <= paths:
@@ -122,6 +136,42 @@ def validate(doc: dict) -> list[str]:
                     for k in ("stage1_sort", "end_to_end"):
                         if not isinstance(sp[v].get(k), (int, float)):
                             errs.append(f"{name}[{v}][{k}] missing")
+    return errs
+
+
+def _validate_serving(srv) -> list[str]:
+    errs = []
+    if not isinstance(srv, dict):
+        return ["'serving' section is not a dict"]
+    for key, typ in SERVING_KEYS.items():
+        if not isinstance(srv.get(key), typ) or isinstance(srv.get(key),
+                                                           bool):
+            errs.append(f"serving: bad '{key}' ({srv.get(key)!r})")
+    if srv.get("consistent") is not True:
+        errs.append("serving: 'consistent' is not True — a query "
+                    "observed a torn/regressing snapshot")
+    p50, p99 = srv.get("p50_ms"), srv.get("p99_ms")
+    if isinstance(p50, (int, float)) and isinstance(p99, (int, float)) \
+            and p50 > p99:
+        errs.append("serving: p50_ms > p99_ms")
+    batch = srv.get("batch")
+    if not isinstance(batch, list) or not batch:
+        return errs + ["serving: 'batch' rows missing"]
+    for i, b in enumerate(batch):
+        for key, typ in SERVING_BATCH_KEYS.items():
+            if not isinstance(b.get(key), typ) or isinstance(b.get(key),
+                                                             bool):
+                errs.append(f"serving.batch[{i}]: bad '{key}' "
+                            f"({b.get(key)!r})")
+    at64 = [b.get("speedup") for b in batch
+            if isinstance(b.get("entities"), int) and b["entities"] >= 64
+            and isinstance(b.get("speedup"), (int, float))]
+    if not at64:
+        errs.append("serving: no batch row with >= 64 entities")
+    elif max(at64) < SERVING_MIN_BATCH_SPEEDUP:
+        errs.append(f"serving: batched queries only {max(at64):.2f}x "
+                    f"scalar at >= 64 entities "
+                    f"(need >= {SERVING_MIN_BATCH_SPEEDUP}x)")
     return errs
 
 
@@ -146,7 +196,10 @@ def main(argv=None):
           + (f", packed_speedup={doc['packed_speedup']}"
              if "packed_speedup" in doc else "")
           + (f", calibration={doc['calibration']['ms']:.2f}ms"
-             if "calibration" in doc else ""))
+             if "calibration" in doc else "")
+          + (f", serving p50={doc['serving']['p50_ms']:.3f}ms "
+             f"batch@64={doc['serving']['batch_speedup_at_64']:.2f}x"
+             if "serving" in doc else ""))
     return 0
 
 

@@ -1,10 +1,15 @@
 #!/usr/bin/env bash
 # CI entry point: install dev deps, run the tier-1 suite (ROADMAP.md),
-# then the bench-smoke step: a tiny-scale benchmark run — sort-path
-# comparison, run-store section (out-of-core + incremental-distributed
-# snapshots) and the fixed calibration probe — whose
-# results/BENCH_smoke.json must pass the schema gate
-# (benchmarks/validate.py).
+# then three smoke steps:
+#   * bench smoke — tiny-scale benchmark run (sort-path comparison,
+#     run-store section, calibration probe, serving load test) whose
+#     results/BENCH_smoke.json must pass the schema gate
+#     (benchmarks/validate.py, incl. the serving section);
+#   * serve smoke — boot launch/cluster_serve.py on an ephemeral port
+#     and drive it through scalar/batch/top-k/signature queries, an
+#     upsert, a version-advancing refresh and a clean shutdown;
+#   * trend smoke — render the calibration-normalised cross-PR trend
+#     report from the git history of results/BENCH_mining.json.
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,6 +22,22 @@ python -m pytest -x -q "$@"
 echo "== bench smoke (tiny scale) + BENCH_mining.json schema gate =="
 # smoke output goes to an untracked file so the committed full-scale
 # perf trajectory (results/BENCH_mining.json) is never clobbered
-python -m benchmarks.run --scale 0.004 --repeat 1 --only packed \
+python -m benchmarks.run --scale 0.004 --repeat 1 --only packed,serving \
     --out BENCH_smoke.json
 python -m benchmarks.validate results/BENCH_smoke.json
+
+echo "== serve smoke (cluster_serve endpoint round-trip) =="
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+python -m repro.launch.cluster_serve --dataset random --n-tuples 1024 \
+    --port 0 --port-file "$PORT_FILE" &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+python -m repro.launch.cluster_serve --smoke-client \
+    --port-file "$PORT_FILE" --timeout 120
+wait "$SERVE_PID"   # /shutdown from the smoke client stops the server
+trap - EXIT
+rm -f "$PORT_FILE"
+
+echo "== trend smoke (calibration-normalised cross-PR report) =="
+python scripts/render_trend.py --limit 8

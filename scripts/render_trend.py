@@ -1,0 +1,152 @@
+"""Cross-PR benchmark trend report (ROADMAP "benchmark hygiene, part 2").
+
+Every PR commits a regenerated ``results/BENCH_mining.json`` carrying a
+fixed machine-speed probe (``calibration``: one radix sort of the SAME
+100k uint32 words each time).  This script walks the file's git history,
+pulls each committed version, and renders one trend table in which
+wall-times are *normalised by that probe* — ``ms / calibration_ms`` is a
+machine-independent "calibration unit", so a PR run on a slow or noisy
+machine doesn't masquerade as a regression (speedup *ratios* within one
+run were already machine-independent and are reported as-is).
+
+Stdlib only (git + json): ``python scripts/render_trend.py
+[--limit N] [--out results/TREND.md]``.  Outside a git checkout it
+degrades to a single-row report of the working-tree file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git(*args: str) -> str:
+    return subprocess.check_output(("git", "-C", REPO) + args,
+                                   text=True, stderr=subprocess.DEVNULL)
+
+
+def history(path: str, limit: int) -> list:
+    """[(label, subject, doc)] newest-first: the working tree copy (when
+    it differs from HEAD) plus each committed version of ``path``."""
+    out = []
+    try:
+        with open(os.path.join(REPO, path)) as f:
+            wt = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        wt = None
+    revs = []
+    try:
+        log = _git("log", "--format=%h\x1f%s", "--", path)
+        revs = [ln.split("\x1f", 1) for ln in log.splitlines() if ln]
+    except (subprocess.SubprocessError, OSError):
+        pass
+    docs = []
+    for sha, subject in revs[:limit]:
+        try:
+            docs.append((sha, subject,
+                         json.loads(_git("show", f"{sha}:{path}"))))
+        except (subprocess.SubprocessError, OSError,
+                json.JSONDecodeError):
+            continue
+    if wt is not None and (not docs or wt != docs[0][2]):
+        out.append(("worktree", "(uncommitted)", wt))
+    return out + docs
+
+
+def _pick_e2e(doc: dict, variant: str):
+    """Representative end-to-end ms: the packed-radix (else packed-lax)
+    batch row of the sort-path comparison — present since the probes
+    were introduced; None for older documents."""
+    rows = [r for r in doc.get("rows", [])
+            if r.get("backend") == "batch" and r.get("variant") == variant]
+    for path in ("packed-radix", "packed-lax"):
+        for r in rows:
+            if r.get("sort_path") == path:
+                return float(r["ms"])
+    return None
+
+
+def _fmt(v, spec="{:.2f}", dash="-"):
+    return dash if v is None else spec.format(v)
+
+
+def trend_rows(hist: list) -> list:
+    rows = []
+    for label, subject, doc in hist:
+        cal = (doc.get("calibration") or {}).get("ms")
+        row = {"rev": label, "subject": subject, "cal_ms": cal}
+        for variant in ("prime", "noac"):
+            ms = _pick_e2e(doc, variant)
+            row[f"{variant}_ms"] = ms
+            row[f"{variant}_x_cal"] = (None if not cal or ms is None
+                                       else ms / cal)
+            sp = (doc.get("radix_speedup") or {}).get(variant) or {}
+            row[f"{variant}_radix_sp"] = sp.get("end_to_end")
+        runs = doc.get("runs_speedup") or {}
+        row["inc_snapshot_sp"] = (runs.get("prime") or {}).get(
+            "incremental_snapshot")
+        srv = doc.get("serving") or {}
+        row["serve_p50_ms"] = srv.get("p50_ms")
+        row["serve_p50_x_cal"] = (None if not cal or not srv.get("p50_ms")
+                                  else srv["p50_ms"] / cal)
+        row["serve_batch_sp"] = srv.get("batch_speedup_at_64")
+        rows.append(row)
+    return rows
+
+
+HEADERS = [("rev", "rev"), ("cal_ms", "cal ms"),
+           ("prime_ms", "prime ms"), ("prime_x_cal", "×cal"),
+           ("noac_ms", "noac ms"), ("noac_x_cal", "×cal"),
+           ("prime_radix_sp", "radix sp"),
+           ("inc_snapshot_sp", "inc-snap sp"),
+           ("serve_p50_x_cal", "serve p50 ×cal"),
+           ("serve_batch_sp", "batch sp")]
+
+
+def render(rows: list) -> str:
+    lines = ["# Benchmark trend (normalised by the calibration probe)",
+             "",
+             "`×cal` = wall ms ÷ calibration-probe ms "
+             "(`radix_sort_perm_100k_u32`): machine-independent "
+             "calibration units; speedup columns are within-run ratios. "
+             "Newest first.", ""]
+    head = [h for _, h in HEADERS]
+    lines.append("| " + " | ".join(head) + " | subject |")
+    lines.append("|" + "---|" * (len(head) + 1))
+    for r in rows:
+        cells = [_fmt(r.get(key)) if key != "rev" else r["rev"]
+                 for key, _ in HEADERS]
+        subject = r["subject"]
+        subject = subject if len(subject) <= 48 else subject[:45] + "..."
+        lines.append("| " + " | ".join(cells) + f" | {subject} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/BENCH_mining.json")
+    ap.add_argument("--limit", type=int, default=20,
+                    help="max commits to walk back")
+    ap.add_argument("--out", default="",
+                    help="also write the markdown report here")
+    args = ap.parse_args(argv)
+    hist = history(args.path, args.limit)
+    if not hist:
+        print(f"[trend] no readable versions of {args.path}")
+        return 1
+    text = render(trend_rows(hist))
+    print(text)
+    if args.out:
+        out = os.path.join(REPO, args.out)
+        with open(out, "w") as f:
+            f.write(text)
+        print(f"[trend] wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

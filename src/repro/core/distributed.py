@@ -43,6 +43,7 @@ what the tests assert.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -387,6 +388,13 @@ class DistributedMiner:
                              "merged_rows": 0, "chunk_sorted_rows": 0,
                              "tombstoned_rows": 0,
                              "incremental": self.key_plans[0].fits}
+        # snapshot versioning (serve/service.py): mutating stream calls
+        # bump ``stream_version``; snapshots record the version covered
+        self.stream_version = 0
+        self.snapshot_stream_version = 0
+        # single-device serving pipeline (full PipelineResult with
+        # component windows), compiled lazily per padded capacity
+        self._serve_fn = None
 
     # -- shard bodies -------------------------------------------------------
 
@@ -642,6 +650,7 @@ class DistributedMiner:
                 store.delete(rows[sel])
             else:
                 getattr(store, op)(rows[sel], sub_vals)
+        self.stream_version += 1
 
     def ingest(self, rows, values=None) -> None:
         """Stream a chunk into the per-shard run stores (valued streams
@@ -691,6 +700,7 @@ class DistributedMiner:
         the padded table through the one-shot ``__call__`` path."""
         if self._stores is None:
             raise ValueError("no data ingested")
+        self.snapshot_stream_version = self.stream_version
         incremental = (not full_remine
                        and all(s.incremental for s in self._stores))
         if incremental and self.strategy == "shuffle":
@@ -723,6 +733,56 @@ class DistributedMiner:
         return self._fn_perms(tuples, values,
                               jnp.asarray(perms, jnp.int32),
                               self._lo, self._hi)
+
+    def serving_snapshot(self,
+                         full_remine: bool = False) -> PL.PipelineResult:
+        """Serving twin of :meth:`snapshot`: a *full-table*
+        ``PipelineResult`` — component windows included, which
+        ``DistributedResult`` deliberately drops — so a
+        ``serve.clusters.ClusterIndex`` can be built straight from a
+        distributed stream.  Runs the single-device pipeline on the
+        gathered survivor table; on the incremental path the per-shard
+        runs are folded and merged into global permutations exactly as
+        :meth:`snapshot` does, so Stage 1 never re-sorts here either.
+        Signatures are bit-identical to :meth:`snapshot` / the batch
+        miner (same hash vectors)."""
+        if self._stores is None:
+            raise ValueError("no data ingested")
+        self.snapshot_stream_version = self.stream_version
+        incremental = (not full_remine
+                       and all(s.incremental for s in self._stores))
+        self.stream_stats["snapshots"] += 1
+        for s in self._stores:
+            s.prepare() if incremental else s.compact()
+        if self.stream_count == 0:
+            raise ValueError("no live rows (everything deleted)")
+        rows, vals, run = self._gathered(with_run=incremental)
+        count = rows.shape[0]
+        cap = RS.snapshot_cap(count)
+        rows, vals = RS.padded_table(rows, vals, cap)
+        targs = jnp.asarray(rows, jnp.int32)
+        vargs = None if vals is None else jnp.asarray(vals, jnp.float32)
+        if self._serve_fn is None:
+            self._serve_fn = jax.jit(functools.partial(
+                PL.mine_tuples, delta=self.delta, theta=self.theta,
+                minsup=self.minsup, packed=self.packed,
+                sort_backend=self.sort_backend,
+                use_pallas=self.use_pallas))
+        if not incremental or run is None:
+            self.stream_stats["full_resorts"] += 1
+            # same value-lane pruning the one-shot __call__ applies (the
+            # perms path below stays domain-free like snapshot()'s — the
+            # store's merged runs carry the unpruned float lane)
+            vdom = self._value_domain(vals) if vals is not None else None
+            if vdom is not None and not vdom.shape[0]:
+                vdom = None
+            return self._serve_fn(targs, self._lo, self._hi, values=vargs,
+                                  value_domain=vdom)
+        perms = RS.padded_perms(run, self.key_plans, rows[:1],
+                                None if vals is None else vals[:1],
+                                count, cap)
+        return self._serve_fn(targs, self._lo, self._hi, values=vargs,
+                              perms=jnp.asarray(perms, jnp.int32))
 
 
 def pad_tuples(tuples: np.ndarray, multiple: int) -> np.ndarray:

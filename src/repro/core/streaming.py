@@ -94,6 +94,12 @@ class StreamingMiner(P.PipelineMiner):
         self.stats = {"snapshots": 0, "full_resorts": 0, "merged_rows": 0,
                       "chunk_sorted_rows": 0, "tombstoned_rows": 0,
                       "incremental": self.incremental}
+        # snapshot versioning (serve/service.py): every mutating call
+        # bumps ``stream_version``; ``snapshot()`` records the version it
+        # covers, so a published snapshot can be tagged with exactly the
+        # writes it reflects
+        self.stream_version = 0
+        self.snapshot_stream_version = 0
         # kept for API compatibility: the snapshot materialiser
         self.miner = self
 
@@ -117,13 +123,16 @@ class StreamingMiner(P.PipelineMiner):
 
     def add(self, chunk: np.ndarray, values=None) -> None:
         self._store().add(chunk, values if self.delta is not None else None)
+        self.stream_version += 1
 
     def upsert(self, rows: np.ndarray, values=None) -> None:
         self._store().upsert(rows,
                              values if self.delta is not None else None)
+        self.stream_version += 1
 
     def delete(self, rows: np.ndarray) -> None:
         self._store().delete(rows)
+        self.stream_version += 1
 
     # -- snapshots ----------------------------------------------------------
 
@@ -144,6 +153,7 @@ class StreamingMiner(P.PipelineMiner):
         benchmarked against."""
         if self.state is None or self.state.count == 0:
             raise ValueError("no data ingested")
+        self.snapshot_stream_version = self.stream_version
         s = self._store()
         if full_remine or not s.incremental:
             s.compact()          # survivor set only; leave runs unmerged

@@ -1,0 +1,171 @@
+"""Cluster-serving driver: a long-lived HTTP query service over a live
+mining stream (DESIGN.md §8).
+
+Server:  ``python -m repro.launch.cluster_serve --dataset imdb
+--port 8787`` — preloads the dataset into a :class:`TriclusterService`
+(streaming by default, ``--backend distributed`` for per-shard run
+stores), publishes the first snapshot, and serves queries while the
+background thread re-mines on writes.
+
+Smoke client:  ``python -m repro.launch.cluster_serve --smoke-client
+--port-file /tmp/p`` — drives a running server through the whole
+surface (scalar, batch, top-k and signature queries; an upsert; a
+forced refresh asserting the version advanced; clean shutdown).  Exits
+non-zero on any violation — this is the CI serve-smoke step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _serve(args) -> int:
+    from ..serve.protocol import make_server
+    from ..serve.ranking import RankingPolicy
+    from ..serve.service import TriclusterService
+    from .tricluster import load_dataset
+
+    ctx = load_dataset(args.dataset, args.n_tuples, args.seed)
+    policy = RankingPolicy(w_density=args.w_density,
+                           w_volume=args.w_volume,
+                           w_recency=args.w_recency)
+    svc = TriclusterService(
+        ctx.sizes, backend=args.backend, theta=args.theta,
+        delta=args.delta, rho_min=args.rho_min, minsup=args.minsup,
+        refresh_interval=args.refresh_interval,
+        dirty_threshold=args.dirty_threshold, policy=policy,
+        seed=args.seed or 0x5EED)
+    n = ctx.tuples.shape[0]
+    step = -(-n // max(1, args.preload_chunks))
+    for lo in range(0, n, step):
+        svc.add(ctx.tuples[lo:lo + step],
+                None if ctx.values is None or args.delta is None
+                else ctx.values[lo:lo + step])
+    svc.start()
+    server = make_server(svc, host=args.host, port=args.port,
+                         allow_shutdown=not args.no_shutdown,
+                         verbose=args.verbose)
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            f.write(str(server.port))
+    print(f"[cluster-serve] dataset={args.dataset} sizes={ctx.sizes} "
+          f"|I|={n} backend={args.backend} version={svc.version} "
+          f"clusters={svc.stats()['clusters']}", flush=True)
+    print(f"[cluster-serve] listening on http://{args.host}:{server.port}",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()
+        svc.stop()
+        print("[cluster-serve] stopped", flush=True)
+    return 0
+
+
+def _smoke_client(args) -> int:
+    from ..serve.protocol import ClusterClient
+
+    port = args.port
+    if args.port_file:
+        deadline = time.monotonic() + args.timeout
+        while time.monotonic() < deadline:
+            try:
+                with open(args.port_file) as f:
+                    port = int(f.read().strip())
+                break
+            except (OSError, ValueError):
+                time.sleep(0.1)
+        else:
+            print(f"[serve-smoke] no port in {args.port_file}")
+            return 1
+    cl = ClusterClient(f"http://{args.host}:{port}")
+    h = cl.wait_ready(timeout=args.timeout)
+    print(f"[serve-smoke] ready: {h}")
+    sizes = cl.stats()["sizes"]
+
+    scalar = cl.query(entity=0, mode=0, k=3)
+    assert "hits" in scalar and isinstance(scalar["hits"], list), scalar
+    print(f"[serve-smoke] scalar query: {len(scalar['hits'])} hit(s)")
+
+    ents = list(range(min(64, sizes[0])))
+    batch = cl.query_batch(ents, mode=0, k=3)
+    assert len(batch["hits"]) == len(ents), "batch arity mismatch"
+    # batch row 0 must equal the scalar query on the same snapshot
+    if batch["version"] == scalar["version"]:
+        assert batch["hits"][0] == scalar["hits"], \
+            "batch/scalar hit mismatch"
+    print(f"[serve-smoke] batch query over {len(ents)} entities OK")
+
+    top = cl.query(k=3, include_components=True)
+    assert top["hits"], "empty top-k on a preloaded dataset"
+    scores = [hit["score"] for hit in top["hits"]]
+    assert scores == sorted(scores, reverse=True), "top-k not ranked"
+    sig = top["hits"][0]["signature"]
+    by_sig = cl.query(signature=sig, include_components=True)
+    assert by_sig["hits"] and by_sig["hits"][0]["components"] \
+        == top["hits"][0]["components"], "signature round-trip mismatch"
+    print(f"[serve-smoke] top-k + signature round-trip OK "
+          f"(top score {scores[0]:.3f})")
+
+    v0 = cl.health()["version"]
+    up = cl.upsert([[0] * len(sizes)])
+    assert up["stream_version"] > 0
+    ref = cl.refresh()
+    assert ref["version"] > v0, \
+        f"version did not advance over upsert+refresh ({v0} -> {ref})"
+    fresh = cl.query(entity=0, at_least_version=ref["version"], timeout=30)
+    assert fresh["version"] >= ref["version"]
+    print(f"[serve-smoke] upsert advanced version {v0} -> "
+          f"{ref['version']}; at_least_version read OK")
+
+    cl.shutdown()
+    print("[serve-smoke] PASS")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="imdb",
+                    choices=["k1", "k2", "k3", "imdb", "movielens",
+                             "bibsonomy", "frames", "random"])
+    ap.add_argument("--n-tuples", type=int, default=0)
+    ap.add_argument("--backend", default="streaming",
+                    choices=["streaming", "distributed"])
+    ap.add_argument("--theta", type=float, default=0.0)
+    ap.add_argument("--delta", type=float, default=None,
+                    help="NOAC δ — serve the many-valued variant")
+    ap.add_argument("--rho-min", type=float, default=0.0)
+    ap.add_argument("--minsup", type=int, default=0)
+    ap.add_argument("--refresh-interval", type=float, default=0.25,
+                    help="re-mine cadence (s) once a write is pending")
+    ap.add_argument("--dirty-threshold", type=int, default=64,
+                    help="re-mine as soon as this many writes accumulate")
+    ap.add_argument("--w-density", type=float, default=1.0)
+    ap.add_argument("--w-volume", type=float, default=0.0)
+    ap.add_argument("--w-recency", type=float, default=0.0)
+    ap.add_argument("--preload-chunks", type=int, default=4)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8787,
+                    help="0 = ephemeral (use --port-file to discover)")
+    ap.add_argument("--port-file", default="",
+                    help="write the bound port here once listening")
+    ap.add_argument("--no-shutdown", action="store_true",
+                    help="disable the POST /shutdown endpoint")
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke-client", action="store_true",
+                    help="run the CI smoke sequence against a running "
+                         "server and exit (needs --port or --port-file)")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="smoke client readiness timeout (s)")
+    args = ap.parse_args(argv)
+    if args.smoke_client:
+        return _smoke_client(args)
+    return _serve(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,25 @@
-"""Serving substrate: batched prefill+decode engine over the model API,
-plus the cluster-query surface over mined results (``serve.clusters``)."""
+"""Serving: the online cluster-serving subsystem over mined results —
+snapshot-swapped :class:`TriclusterService` (``serve.service``), ranked
+and batched lookups (``serve.ranking``), the cluster-query index
+(``serve.clusters``) and the stdlib HTTP endpoint/client
+(``serve.protocol``) — plus the LM-side batched prefill+decode engine
+(``serve.engine``)."""
 from .clusters import ClusterIndex, ClusterView, cluster_query
 from .engine import GenerationResult, ServeEngine
+from .protocol import ClusterClient, ClusterServeServer, make_server
+from .ranking import (BatchQuerier, RankingPolicy, cluster_scores,
+                      pack_signatures, rank_views, top_clusters)
+from .service import QueryResult, Snapshot, TriclusterService
 
-__all__ = ["ServeEngine", "GenerationResult", "ClusterIndex",
-           "ClusterView", "cluster_query"]
+__all__ = [
+    # cluster-query surface
+    "ClusterIndex", "ClusterView", "cluster_query",
+    # ranking layer
+    "BatchQuerier", "RankingPolicy", "cluster_scores", "pack_signatures",
+    "rank_views", "top_clusters",
+    # snapshot-swapped service + protocol
+    "TriclusterService", "Snapshot", "QueryResult",
+    "ClusterClient", "ClusterServeServer", "make_server",
+    # LM serving engine
+    "ServeEngine", "GenerationResult",
+]

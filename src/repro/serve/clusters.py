@@ -12,20 +12,75 @@
   the same seed emit bit-identical signatures, so a signature handed
   out by a batch job resolves against a streaming snapshot's index).
 
-Index construction is one host pass over the kept tuples' component
-windows (the O(|I|) post-processing cost the paper's §2 budgets);
-queries are dictionary lookups.  ``cluster_query`` is the one-shot
-convenience wrapper; long-lived serving should build the index once per
-snapshot.
+Index construction is *vectorised* (the serving layer rebuilds it on
+every snapshot swap, so it sits on the swap's critical path): the kept
+tuples' component windows are stacked with one repeat/cumsum gather per
+mode, deduplicated as packed ``(cluster << 32) | entity`` words with a
+single ``np.unique``, and re-sorted once into per-mode
+``(entity << 32) | cluster`` membership arrays (``mode_pairs``).
+Entity queries are then two ``searchsorted`` probes; the ranking layer
+(``serve.ranking``) reuses the same arrays for its batched path.
+``cluster_query`` is the one-shot convenience wrapper; long-lived
+serving should build the index once per snapshot
+(``serve.service.TriclusterService`` does).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import postprocess as PP
+
+_LOW32 = np.uint64(0xFFFFFFFF)
+
+
+class LazyComponents:
+    """Tuple-like per-mode component sets of one cluster, materialised
+    per mode on first access from the index's shared stacked membership
+    arrays.  Serving-path queries (ranked hits: signature/score/stats)
+    usually never touch the sets, and eagerly building them dominated
+    snapshot-swap latency — tens of millions of set inserts per swap at
+    benchmark scale."""
+    __slots__ = ("_ents", "_bounds", "_row", "_sets")
+
+    def __init__(self, ents, bounds, row: int):
+        self._ents = ents        # per mode: int64 member array
+        self._bounds = bounds    # per mode: (n_clusters+1,) offsets
+        self._row = row
+        self._sets = [None] * len(ents)
+
+    def __len__(self) -> int:
+        return len(self._sets)
+
+    def __getitem__(self, k):
+        if isinstance(k, slice):
+            return tuple(self[i] for i in range(len(self._sets))[k])
+        if k < 0:
+            k += len(self._sets)
+        s = self._sets[k]
+        if s is None:
+            b = self._bounds[k]
+            s = frozenset(
+                self._ents[k][b[self._row]:b[self._row + 1]].tolist())
+            self._sets[k] = s
+        return s
+
+    def __iter__(self):
+        return (self[k] for k in range(len(self._sets)))
+
+    def __eq__(self, other):
+        if not isinstance(other, (tuple, list, LazyComponents)):
+            return NotImplemented
+        return (len(self) == len(other)
+                and all(a == b for a, b in zip(self, other)))
+
+    def __hash__(self):
+        return hash(tuple(self))
+
+    def __repr__(self):
+        return repr(tuple(self))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +88,8 @@ class ClusterView:
     """One mined cluster, host-side: per-mode component sets + stats."""
     signature: Tuple[int, int]            # (sig_lo, sig_hi) cluster id
     components: Tuple[frozenset, ...]     # per-mode entity-id sets
+                                          # (or an equivalent
+                                          # LazyComponents)
     density: float
     gen_count: int
     volume: float
@@ -52,17 +109,31 @@ class ClusterView:
 
 
 class ClusterIndex:
-    """Inverted index over kept clusters of one mining result."""
+    """Inverted index over kept clusters of one mining result.
 
-    def __init__(self, clusters: List[ClusterView]):
+    ``mode_pairs`` — one sorted uint64 array per mode of packed
+    ``(entity << 32) | cluster_row`` membership words — is the single
+    structure behind entity lookups here and the batched top-k path in
+    ``serve.ranking``; it is computed vectorised by
+    :meth:`from_result` and reconstructed from the views when an index
+    is built from a plain cluster list."""
+
+    def __init__(self, clusters: List[ClusterView],
+                 mode_pairs: Optional[Sequence[np.ndarray]] = None):
         self.clusters = list(clusters)
         self._by_sig = {c.signature: c for c in self.clusters}
         arity = self.clusters[0].arity if self.clusters else 0
-        self._by_entity: list[dict] = [{} for _ in range(arity)]
-        for c in self.clusters:
-            for k, comp in enumerate(c.components):
-                for e in comp:
-                    self._by_entity[k].setdefault(int(e), []).append(c)
+        if mode_pairs is None:
+            mode_pairs = []
+            for k in range(arity):
+                pairs = [(int(e) << 32) | row
+                         for row, c in enumerate(self.clusters)
+                         for e in c.components[k]]
+                mode_pairs.append(np.sort(np.asarray(pairs, np.uint64)))
+        self.mode_pairs: List[np.ndarray] = list(mode_pairs)
+        self.any_pairs: np.ndarray = (
+            np.unique(np.concatenate(self.mode_pairs))
+            if self.mode_pairs else np.zeros(0, np.uint64))
 
     @classmethod
     def from_result(cls, result, only_kept: bool = True,
@@ -70,9 +141,10 @@ class ClusterIndex:
         """Build from a ``PipelineResult`` (batch / NOAC / streaming —
         any result carrying component windows).  ``DistributedResult``
         ships per-shard aggregates without the windows; serve those by
-        mining the snapshot through the streaming/batch engine, or
-        resolve its signatures against an index built from one (the
-        signatures are bit-identical across engines)."""
+        mining the snapshot through the streaming/batch engine (or
+        ``DistributedMiner.serving_snapshot``), or resolve its
+        signatures against an index built from one (the signatures are
+        bit-identical across engines)."""
         for field in ("range_lo", "range_hi", "sorted_e"):
             if not hasattr(result, field):
                 raise ValueError(
@@ -91,24 +163,63 @@ class ClusterIndex:
         shi = np.asarray(result.sig_hi)
         gen = np.asarray(result.gen_count)
         vol = np.asarray(result.volume)
-        n = sorted_e.shape[0]
-        views = []
-        for i in np.nonzero(flag)[0]:
-            comps = tuple(
-                frozenset(np.unique(sorted_e[k][rlo[k, i]:rhi[k, i]])
-                          .tolist())
-                for k in range(n))
-            views.append(ClusterView(
-                signature=(int(slo[i]), int(shi[i])), components=comps,
-                density=float(dens[i]), gen_count=int(gen[i]),
-                volume=float(vol[i])))
-        return cls(views)
+        n_modes = sorted_e.shape[0]
+        sel = np.nonzero(flag)[0]
+        nk = int(sel.size)
+        # stack all kept windows per mode: repeat/cumsum flat gather,
+        # dedup as (cluster << 32) | entity words in ONE np.unique —
+        # the per-cluster np.unique python loop this replaces dominated
+        # snapshot-swap latency at serving scale
+        comp_ents, comp_bounds, mode_pairs = [], [], []
+        cl_rows = np.arange(nk, dtype=np.uint64)
+        for k in range(n_modes):
+            counts = (rhi[k, sel] - rlo[k, sel]).astype(np.int64)
+            total = int(counts.sum())
+            starts = np.cumsum(counts) - counts
+            flat = (np.arange(total, dtype=np.int64)
+                    - np.repeat(starts, counts)
+                    + np.repeat(rlo[k, sel].astype(np.int64), counts))
+            ent = sorted_e[k][flat].astype(np.uint64)
+            ce = np.unique((np.repeat(cl_rows, counts) << np.uint64(32))
+                           | ent)
+            ents_k = (ce & _LOW32).astype(np.int64)
+            comp_ents.append(ents_k)
+            comp_bounds.append(np.searchsorted(ce >> np.uint64(32),
+                                               np.arange(nk + 1)))
+            mode_pairs.append(np.sort((ce << np.uint64(32))
+                                      | (ce >> np.uint64(32))))
+        # views share the stacked arrays; component sets materialise
+        # lazily (LazyComponents) — plain-python scalar lists here keep
+        # numpy scalar indexing out of the construction loop
+        slo_l, shi_l = slo[sel].tolist(), shi[sel].tolist()
+        dens_l, gen_l = dens[sel].tolist(), gen[sel].tolist()
+        vol_l = vol[sel].tolist()
+        views = [ClusterView(
+            signature=(slo_l[i], shi_l[i]),
+            components=LazyComponents(comp_ents, comp_bounds, i),
+            density=dens_l[i], gen_count=gen_l[i], volume=vol_l[i])
+            for i in range(nk)]
+        return cls(views, mode_pairs=mode_pairs)
 
     def __len__(self) -> int:
         return len(self.clusters)
 
     def __iter__(self) -> Iterator[ClusterView]:
         return iter(self.clusters)
+
+    def entity_rows(self, entity: int,
+                    mode: Optional[int] = None) -> np.ndarray:
+        """Cluster rows whose mode-``mode`` (any-mode when None)
+        component contains ``entity``, ascending — two ``searchsorted``
+        probes into the packed membership words."""
+        e = int(entity)
+        if e < 0 or e >= 1 << 32:
+            return np.zeros(0, np.int64)
+        pairs = self.any_pairs if mode is None else self.mode_pairs[mode]
+        lo = np.searchsorted(pairs, np.uint64(e << 32))
+        hi = (pairs.size if e + 1 >= 1 << 32      # avoid uint64 overflow
+              else np.searchsorted(pairs, np.uint64((e + 1) << 32)))
+        return (pairs[lo:hi] & _LOW32).astype(np.int64)
 
     def query(self, entity: Optional[int] = None,
               mode: Optional[int] = None,
@@ -124,9 +235,9 @@ class ClusterIndex:
         if mode is not None:
             if entity is None:
                 raise ValueError("mode=... requires entity=...")
-            if self._by_entity and not 0 <= mode < len(self._by_entity):
+            if self.clusters and not 0 <= mode < len(self.mode_pairs):
                 raise ValueError(f"mode {mode} out of range")
-            if not self._by_entity:         # empty index: no hits
+            if not self.clusters:           # empty index: no hits
                 return []
         if signature is not None:
             hit = self._by_sig.get((int(signature[0]), int(signature[1])))
@@ -134,15 +245,8 @@ class ClusterIndex:
             if entity is not None:
                 out = [c for c in out if c.contains(int(entity), mode)]
         elif entity is not None:
-            if mode is not None:
-                out = list(self._by_entity[mode].get(int(entity), []))
-            else:       # any-mode: union of the per-mode inverted maps
-                seen, out = set(), []
-                for by in self._by_entity:
-                    for c in by.get(int(entity), []):
-                        if id(c) not in seen:
-                            seen.add(id(c))
-                            out.append(c)
+            out = [self.clusters[r]
+                   for r in self.entity_rows(entity, mode)]
         else:
             out = list(self.clusters)
         if min_density:
@@ -156,7 +260,13 @@ def cluster_query(result, entity: Optional[int] = None,
                   min_density: float = 0.0,
                   only_kept: bool = True) -> List[ClusterView]:
     """One-shot query over a mining result: build the index and look up
-    (``ClusterIndex.from_result(...).query(...)``)."""
-    return ClusterIndex.from_result(result, only_kept=only_kept).query(
+    (``ClusterIndex.from_result(...).query(...)``).
+
+    Hits come back *ranked* — best density first (ties keep index
+    order), matching the serving layer's default policy — not in
+    whatever order the index happened to store them."""
+    hits = ClusterIndex.from_result(result, only_kept=only_kept).query(
         entity=entity, mode=mode, signature=signature,
         min_density=min_density)
+    from .ranking import rank_views       # deferred: ranking imports us
+    return [v for v, _ in rank_views([(c, c.density) for c in hits])]

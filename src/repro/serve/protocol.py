@@ -1,0 +1,275 @@
+"""Thin stdlib HTTP/JSON endpoint + client for the cluster service.
+
+The service itself (``serve.service``) is in-process; this module makes
+it drivable from outside: a ``ThreadingHTTPServer`` front-end (one OS
+thread per connection — every request is a lock-free snapshot read, so
+plain threads are plenty) and a ``urllib``-based :class:`ClusterClient`.
+No third-party dependencies; wire format is JSON.
+
+Routes (all bodies/responses JSON):
+
+* ``GET /health`` — ``{version, stream_version, clusters, dirty}``
+* ``GET /stats`` — full service stats (includes ``sizes`` so clients
+  can build valid rows/entities without out-of-band knowledge)
+* ``POST /query`` — ``{entity | entities | signature, mode?, k?,
+  at_least_version?, timeout?, include_components?}``; with
+  ``entities`` the batched path answers the whole list in one
+  stacked-window pass and ``hits`` is one list per entity
+* ``POST /upsert`` / ``POST /delete`` — ``{rows, values?}``; returns
+  ``{stream_version, dirty}`` (the background thread picks the write up
+  on its cadence/threshold; follow with ``/refresh`` to force)
+* ``POST /refresh`` — synchronous re-mine + swap; returns the new
+  ``{version, stream_version, clusters}``
+* ``POST /shutdown`` — stop serving (enabled by default; pass
+  ``allow_shutdown=False`` to :func:`make_server` to disable)
+
+Signatures travel as ``[lo, hi]`` pairs — the cross-engine cluster
+identity, so a signature minted by a batch job yesterday resolves over
+HTTP against today's streaming snapshot.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib import error as _uerror
+from urllib import request as _urequest
+
+from .service import QueryResult, TriclusterService
+
+
+def hit_doc(view, score: float, include_components: bool = False) -> dict:
+    """JSON form of one ranked hit."""
+    d = {"signature": [int(view.signature[0]), int(view.signature[1])],
+         "score": float(score), "density": float(view.density),
+         "volume": float(view.volume), "gen_count": int(view.gen_count)}
+    if include_components:
+        d["components"] = [sorted(int(e) for e in c)
+                           for c in view.components]
+    return d
+
+
+def _query_doc(res: QueryResult, batched: bool,
+               include_components: bool) -> dict:
+    if batched:
+        hits = [[hit_doc(v, s, include_components) for v, s in per]
+                for per in res.hits]
+    else:
+        hits = [hit_doc(v, s, include_components) for v, s in res.hits]
+    return {"version": res.version, "stream_version": res.stream_version,
+            "hits": hits}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # quiet by default: the load generator would otherwise spam stderr
+    def log_message(self, fmt, *args):
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    def _reply(self, doc: dict, status: int = 200) -> None:
+        body = json.dumps(doc).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _service(self) -> TriclusterService:
+        return self.server.service
+
+    def do_GET(self):
+        svc = self._service()
+        if self.path == "/health":
+            snap = svc._snap
+            self._reply({"version": svc.version,
+                         "stream_version": svc.stream_version,
+                         "clusters": 0 if snap is None else len(snap.index),
+                         "dirty": svc.dirty})
+        elif self.path == "/stats":
+            self._reply(svc.stats())
+        else:
+            self._reply({"error": f"unknown path {self.path}"}, 404)
+
+    def do_POST(self):
+        svc = self._service()
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            doc = json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError) as e:
+            return self._reply({"error": f"bad JSON body: {e}"}, 400)
+        try:
+            if self.path == "/query":
+                self._reply(self._query(svc, doc))
+            elif self.path in ("/upsert", "/delete"):
+                self._reply(self._mutate(svc, doc, self.path[1:]))
+            elif self.path == "/refresh":
+                snap = svc.refresh()
+                self._reply({"version": snap.version,
+                             "stream_version": snap.stream_version,
+                             "clusters": len(snap.index)})
+            elif self.path == "/shutdown":
+                if not getattr(self.server, "allow_shutdown", True):
+                    return self._reply({"error": "shutdown disabled"}, 403)
+                self._reply({"ok": True})
+                threading.Thread(target=self.server.shutdown,
+                                 daemon=True).start()
+            else:
+                self._reply({"error": f"unknown path {self.path}"}, 404)
+        except TimeoutError as e:
+            self._reply({"error": str(e)}, 504)
+        except (ValueError, KeyError, IndexError, OverflowError,
+                TypeError, RuntimeError) as e:
+            # malformed-but-parseable input must get the JSON error
+            # contract, not a torn connection
+            self._reply({"error": str(e)}, 400)
+
+    def _query(self, svc: TriclusterService, doc: dict) -> dict:
+        common = dict(k=int(doc.get("k", 10)),
+                      at_least_version=doc.get("at_least_version"),
+                      timeout=doc.get("timeout"))
+        mode = doc.get("mode")
+        mode = None if mode is None else int(mode)
+        inc = bool(doc.get("include_components", False))
+        if "entities" in doc:
+            res = svc.query_batch([int(e) for e in doc["entities"]],
+                                  mode=mode, **common)
+            return _query_doc(res, True, inc)
+        sig = doc.get("signature")
+        res = svc.query(
+            entity=(None if doc.get("entity") is None
+                    else int(doc["entity"])),
+            mode=mode,
+            signature=None if sig is None else (int(sig[0]), int(sig[1])),
+            **common)
+        return _query_doc(res, False, inc)
+
+    def _mutate(self, svc: TriclusterService, doc: dict, op: str) -> dict:
+        rows = doc.get("rows")
+        if not rows:
+            raise ValueError(f"/{op} needs non-empty 'rows'")
+        if op == "delete":
+            sv = svc.delete(rows)
+        else:
+            sv = svc.upsert(rows, doc.get("values"))
+        return {"stream_version": sv, "dirty": svc.dirty}
+
+
+class ClusterServeServer(ThreadingHTTPServer):
+    """HTTP front-end bound to one :class:`TriclusterService`."""
+    daemon_threads = True
+
+    def __init__(self, service: TriclusterService, addr=("127.0.0.1", 0),
+                 allow_shutdown: bool = True, verbose: bool = False):
+        super().__init__(addr, _Handler)
+        self.service = service
+        self.allow_shutdown = allow_shutdown
+        self.verbose = verbose
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+
+def make_server(service: TriclusterService, host: str = "127.0.0.1",
+                port: int = 0, allow_shutdown: bool = True,
+                verbose: bool = False) -> ClusterServeServer:
+    """Bind (port 0 = ephemeral; read ``server.port``) without serving;
+    call ``serve_forever()`` — typically on a thread — to go live."""
+    return ClusterServeServer(service, (host, port),
+                              allow_shutdown=allow_shutdown, verbose=verbose)
+
+
+class ClusterClient:
+    """urllib client for the endpoint above (stdlib only)."""
+
+    def __init__(self, base_url: str, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    def _call(self, path: str, doc: Optional[dict] = None) -> dict:
+        req = _urequest.Request(
+            self.base_url + path,
+            data=None if doc is None else json.dumps(doc).encode(),
+            headers={"Content-Type": "application/json"},
+            method="GET" if doc is None else "POST")
+        try:
+            with _urequest.urlopen(req, timeout=self.timeout) as r:
+                return json.loads(r.read())
+        except _uerror.HTTPError as e:
+            try:
+                msg = json.loads(e.read()).get("error", str(e))
+            except Exception:
+                msg = str(e)
+            raise RuntimeError(f"{path}: {msg}") from None
+
+    def health(self) -> dict:
+        return self._call("/health")
+
+    def stats(self) -> dict:
+        return self._call("/stats")
+
+    def wait_ready(self, timeout: float = 60.0, min_version: int = 1
+                   ) -> dict:
+        """Poll ``/health`` until the server answers with a published
+        snapshot (connection errors are retried until ``timeout``)."""
+        import time
+        deadline = time.monotonic() + timeout
+        last = None
+        while time.monotonic() < deadline:
+            try:
+                h = self.health()
+                if h.get("version", 0) >= min_version:
+                    return h
+                last = h
+            except (OSError, RuntimeError) as e:
+                last = e
+            time.sleep(0.1)
+        raise TimeoutError(f"server not ready after {timeout}s ({last!r})")
+
+    def query(self, entity: Optional[int] = None,
+              mode: Optional[int] = None, signature=None, k: int = 10,
+              at_least_version: Optional[int] = None,
+              timeout: Optional[float] = None,
+              include_components: bool = False) -> dict:
+        doc = {"k": k, "include_components": include_components}
+        if entity is not None:
+            doc["entity"] = int(entity)
+        if mode is not None:
+            doc["mode"] = int(mode)
+        if signature is not None:
+            doc["signature"] = [int(signature[0]), int(signature[1])]
+        if at_least_version is not None:
+            doc["at_least_version"] = int(at_least_version)
+            doc["timeout"] = timeout
+        return self._call("/query", doc)
+
+    def query_batch(self, entities, mode: Optional[int] = None,
+                    k: int = 10,
+                    at_least_version: Optional[int] = None,
+                    timeout: Optional[float] = None,
+                    include_components: bool = False) -> dict:
+        doc = {"entities": [int(e) for e in entities], "k": k,
+               "include_components": include_components}
+        if mode is not None:
+            doc["mode"] = int(mode)
+        if at_least_version is not None:
+            doc["at_least_version"] = int(at_least_version)
+            doc["timeout"] = timeout
+        return self._call("/query", doc)
+
+    def upsert(self, rows, values=None) -> dict:
+        doc = {"rows": [list(map(int, r)) for r in rows]}
+        if values is not None:
+            doc["values"] = [float(v) for v in values]
+        return self._call("/upsert", doc)
+
+    def delete(self, rows) -> dict:
+        return self._call("/delete",
+                          {"rows": [list(map(int, r)) for r in rows]})
+
+    def refresh(self) -> dict:
+        return self._call("/refresh", {})
+
+    def shutdown(self) -> dict:
+        return self._call("/shutdown", {})

@@ -1,0 +1,350 @@
+"""Online cluster-serving service: snapshot-swapped queries over live
+streams (DESIGN.md §8).
+
+The paper stops at the mined result set; this module keeps serving it
+while the stream keeps mutating.  A :class:`TriclusterService` owns one
+streaming-capable miner (``core.streaming.StreamingMiner`` by default,
+or an incremental ``core.distributed.DistributedMiner`` whose
+``serving_snapshot`` returns the windowed full-table result) and splits
+the world into two paths that never contend:
+
+* **writer path** — ``add`` / ``upsert`` / ``delete`` apply to the
+  miner's run store under the writer lock and mark the service dirty.
+  Writes are cheap (host-side chunk sort into a new run); they block on
+  an in-flight re-mine, never on readers.
+* **reader path** — queries read one reference, the *current snapshot*:
+  an immutable ``(PipelineResult, ClusterIndex, BatchQuerier, version)``
+  bundle.  Publication is a single reference swap, so a reader either
+  sees the whole previous snapshot or the whole next one — never a torn
+  index — and never takes a lock, so queries never block on mining.
+
+A background thread re-mines on a configurable cadence/dirty-threshold:
+when ``dirty >= dirty_threshold`` writes have accumulated, or a write is
+older than ``refresh_interval`` seconds, it snapshots the miner (the
+incremental merged-run path — only changed chunks were ever sorted),
+builds the index + ranking arrays *outside* the reader path, and swaps.
+
+**Versions and freshness.**  Every published snapshot carries
+``version`` (publish counter, strictly increasing) and
+``stream_version`` (the miner's write counter it covers — the snapshot
+versioning hooks in ``core.streaming`` / ``core.distributed``).  Reads
+take a freshness mode: ``latest`` (default — whatever is published now,
+non-blocking) or ``at_least_version=v`` (block up to ``timeout`` until
+``version >= v``; the read-your-writes primitive: upsert, ``refresh()``,
+then demand the returned version).
+
+**Recency.**  The service remembers the version that first published
+each cluster signature; per-cluster ages feed the ranking layer's
+recency term, so freshly emerged clusters can be boosted without any
+per-cluster timestamps in the mining pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ranking as R
+from .clusters import ClusterIndex, ClusterView
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable published state; everything a query touches."""
+    version: int              # publish counter (1-based, monotonic)
+    stream_version: int       # miner writes covered by this snapshot
+    result: Any               # the engine's PipelineResult
+    index: ClusterIndex
+    querier: R.BatchQuerier   # ranked scalar/batch lookups + signatures
+    ages: np.ndarray          # per-cluster age in versions (recency)
+    published_at: float       # time.monotonic() at swap
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Hits plus the exact snapshot identity they were answered from."""
+    version: int
+    stream_version: int
+    hits: Any      # [(ClusterView, score)] — or one such list per entity
+
+
+class TriclusterService:
+    """Long-lived serving front-end over one streaming-capable miner.
+
+    Lifecycle: construct, ``add`` initial data, ``start()`` (publishes
+    the first snapshot synchronously and starts the re-mine thread),
+    serve, ``stop()``.  Usable as a context manager.
+    """
+
+    def __init__(self, sizes: Sequence[int], *, backend: str = "streaming",
+                 theta: float = 0.0, delta: Optional[float] = None,
+                 rho_min: float = 0.0, minsup: int = 0, seed: int = 0x5EED,
+                 refresh_interval: float = 0.25, dirty_threshold: int = 64,
+                 policy: R.RankingPolicy = R.DEFAULT_POLICY,
+                 min_density: float = 0.0, recency_horizon: int = 512,
+                 mesh=None, miner=None, **miner_kw):
+        self.sizes = tuple(int(s) for s in sizes)
+        self.refresh_interval = float(refresh_interval)
+        self.dirty_threshold = max(1, int(dirty_threshold))
+        #: versions a vanished signature keeps its first-seen record;
+        #: past it the record is evicted (bounded memory on churning
+        #: streams) and a re-emerging cluster counts as fresh again
+        self.recency_horizon = max(1, int(recency_horizon))
+        self.policy = policy
+        self.min_density = float(min_density)
+        if miner is not None:
+            self.miner = miner
+        elif backend == "streaming":
+            from ..core.streaming import StreamingMiner
+            self.miner = StreamingMiner(self.sizes, theta=theta, delta=delta,
+                                        rho_min=rho_min, minsup=minsup,
+                                        seed=seed, **miner_kw)
+        elif backend == "distributed":
+            from ..core.distributed import DistributedMiner
+            if mesh is None:
+                from ..launch.mesh import make_local_mesh
+                mesh = make_local_mesh()
+            self.miner = DistributedMiner(self.sizes, mesh, theta=theta,
+                                          delta=delta, rho_min=rho_min,
+                                          minsup=minsup, seed=seed,
+                                          **miner_kw)
+        else:
+            raise ValueError(f"backend must be 'streaming' or "
+                             f"'distributed', got {backend!r}")
+        # the distributed serving path needs the windowed full-table
+        # result; the streaming snapshot already is one
+        self._mine = getattr(self.miner, "serving_snapshot",
+                             getattr(self.miner, "snapshot"))
+        self._ingest = getattr(self.miner, "ingest", None) or self.miner.add
+        self._wlock = threading.Lock()      # miner store + dirty counter
+        self._remine_lock = threading.Lock()  # one re-mine at a time
+        self._cv = threading.Condition()    # snapshot publication + waits
+        self._snap: Optional[Snapshot] = None
+        self._dirty = 0
+        self._first_seen: dict = {}   # signature -> [first_v, last_seen_v]
+        self._last_mine = 0.0
+        self._stop_evt = threading.Event()
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._stats = {"writes": 0, "publishes": 0, "mine_errors": 0,
+                       "last_mine_ms": 0.0, "total_mine_ms": 0.0}
+
+    # -- writer path ---------------------------------------------------------
+
+    def _write(self, op, rows, values=None) -> int:
+        with self._wlock:
+            if values is None:
+                op(rows)
+            else:
+                op(rows, values)
+            self._dirty += 1
+            self._stats["writes"] += 1
+            v = self.miner.stream_version
+        self._wake.set()
+        return v
+
+    def add(self, rows, values=None) -> int:
+        """Append a chunk; returns the miner's new stream_version."""
+        return self._write(self._ingest, rows, values)
+
+    def upsert(self, rows, values=None) -> int:
+        return self._write(self.miner.upsert, rows, values)
+
+    def delete(self, rows) -> int:
+        return self._write(self.miner.delete, rows)
+
+    @property
+    def dirty(self) -> int:
+        """Writes not yet covered by the published snapshot."""
+        return self._dirty
+
+    @property
+    def stream_version(self) -> int:
+        return self.miner.stream_version
+
+    @property
+    def version(self) -> int:
+        """Version of the currently published snapshot (0: none yet)."""
+        snap = self._snap
+        return 0 if snap is None else snap.version
+
+    def stats(self) -> dict:
+        out = dict(self._stats)
+        snap = self._snap
+        out.update(version=self.version, dirty=self._dirty,
+                   stream_version=self.miner.stream_version,
+                   clusters=0 if snap is None else len(snap.index),
+                   sizes=list(self.sizes))
+        return out
+
+    # -- mining / publication ------------------------------------------------
+
+    def refresh(self) -> Snapshot:
+        """Synchronously mine + publish a new snapshot (even when clean:
+        an explicit refresh always advances the version, giving callers
+        a version number that provably covers their writes)."""
+        return self._remine(force=True)
+
+    def _remine(self, force: bool = False) -> Snapshot:
+        with self._remine_lock:
+            snap = self._snap
+            if not force and snap is not None and self._dirty == 0:
+                return snap
+            t0 = time.perf_counter()
+            with self._wlock:
+                # the store mutates under snapshot() (compaction/merge):
+                # writers hold off while we mine, readers don't care
+                covered = self.miner.stream_version
+                result = self._mine()
+                np.asarray(result.keep)      # block: leave jit-land here
+                self._dirty = 0
+            mine_ms = (time.perf_counter() - t0) * 1e3
+            # index + ranking build off the writer path: writes land
+            # freely while we stack windows host-side
+            index = ClusterIndex.from_result(result,
+                                             min_density=self.min_density)
+            version = (0 if self._snap is None else self._snap.version) + 1
+            fs = self._first_seen
+            ages = []
+            for c in index.clusters:
+                rec = fs.get(c.signature)
+                if rec is None:
+                    fs[c.signature] = rec = [version, version]
+                else:
+                    rec[1] = version
+                ages.append(version - rec[0])
+            ages = np.asarray(ages, np.float64)
+            # evict first-seen records of long-vanished signatures
+            # (sweep only when the map clearly outgrew the live set)
+            if len(fs) > 2 * len(index.clusters) + 1024:
+                cut = version - self.recency_horizon
+                for sig in [s for s, r in fs.items() if r[1] < cut]:
+                    del fs[sig]
+            querier = R.BatchQuerier(index, self.policy, ages)
+            snap = Snapshot(version=version, stream_version=covered,
+                            result=result, index=index, querier=querier,
+                            ages=ages, published_at=time.monotonic())
+            self._last_mine = time.monotonic()
+            self._stats["publishes"] += 1
+            self._stats["last_mine_ms"] = mine_ms
+            self._stats["total_mine_ms"] += mine_ms
+            with self._cv:
+                self._snap = snap            # THE atomic swap
+                self._cv.notify_all()
+            return snap
+
+    def _loop(self):
+        while not self._stop_evt.is_set():
+            self._wake.wait(timeout=max(self.refresh_interval, 1e-3))
+            if self._stop_evt.is_set():
+                break
+            self._wake.clear()
+            with self._wlock:
+                dirty = self._dirty
+            due = dirty >= self.dirty_threshold or (
+                dirty > 0 and time.monotonic() - self._last_mine
+                >= self.refresh_interval)
+            if due:
+                try:
+                    self._remine()
+                except Exception as e:   # noqa: BLE001 — the refresh
+                    # thread must survive anything (a deleted-empty
+                    # stream, a transient XLA error): keep serving the
+                    # last published snapshot and record the failure
+                    # instead of silently dying ever-staler
+                    self._stats["mine_errors"] += 1
+                    self._stats["last_mine_error"] = repr(e)
+
+    def start(self) -> "TriclusterService":
+        """Publish the initial snapshot (if any data is ingested) and
+        start the background re-mine thread."""
+        if self._thread is not None:
+            return self
+        try:
+            self._remine(force=True)
+        except ValueError:
+            pass                              # no data yet: first write mines
+        self._stop_evt.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="tricluster-remine",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    def __enter__(self) -> "TriclusterService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- reader path ---------------------------------------------------------
+
+    def snapshot(self, at_least_version: Optional[int] = None,
+                 timeout: Optional[float] = None) -> Snapshot:
+        """The current snapshot — one reference read, never blocking on
+        mining.  ``at_least_version`` switches freshness mode: wait (up
+        to ``timeout`` seconds) until a snapshot with that version or
+        newer is published, then return it."""
+        snap = self._snap
+        if at_least_version is None:
+            if snap is None:
+                raise RuntimeError("no snapshot published yet — ingest "
+                                   "data and start()/refresh() first")
+            return snap
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._snap is None or \
+                    self._snap.version < at_least_version:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"version {at_least_version} not published within "
+                        f"{timeout}s (current: {self.version})")
+                self._cv.wait(timeout=remaining)
+            return self._snap
+
+    def query(self, entity: Optional[int] = None,
+              mode: Optional[int] = None,
+              signature: Optional[Tuple[int, int]] = None,
+              k: int = 10, at_least_version: Optional[int] = None,
+              timeout: Optional[float] = None) -> QueryResult:
+        """Ranked lookup against one consistent snapshot.
+
+        ``signature=(lo, hi)``: exact resolution (≤ 1 hit, score
+        attached).  ``entity=e [, mode=m]``: top-``k`` by the ranking
+        policy.  Neither: the snapshot's global top-``k``."""
+        snap = self.snapshot(at_least_version, timeout)
+        if signature is not None:
+            row = int(snap.querier.lookup_signatures([signature])[0])
+            hits: List[Tuple[ClusterView, float]] = []
+            if row >= 0:
+                view = snap.index.clusters[row]
+                if entity is None or view.contains(int(entity), mode):
+                    hits = [(view, float(snap.querier.scores[row]))]
+        elif entity is not None:
+            hits = snap.querier.topk(int(entity), mode, k)
+        else:
+            hits = R.top_clusters(snap.index, k, self.policy, snap.ages)
+        return QueryResult(snap.version, snap.stream_version, hits)
+
+    def query_batch(self, entities, mode: Optional[int] = None,
+                    k: int = 10, at_least_version: Optional[int] = None,
+                    timeout: Optional[float] = None) -> QueryResult:
+        """Vectorised multi-entity top-``k``: one stacked-window pass for
+        the whole batch (``ranking.BatchQuerier.topk_batch``) against one
+        consistent snapshot; ``hits[i]`` corresponds to ``entities[i]``
+        and equals the scalar ``query(entity=entities[i])`` hits."""
+        snap = self.snapshot(at_least_version, timeout)
+        return QueryResult(snap.version, snap.stream_version,
+                           snap.querier.topk_batch(entities, mode, k))

@@ -1,0 +1,129 @@
+"""Ranking layer (serve/ranking.py): scored top-k, the vectorised
+batch-query path's bit-identity with the scalar path, packed-signature
+resolution, and the ranked-order `cluster_query` regression."""
+import numpy as np
+import pytest
+
+from repro.core import BatchMiner, StreamingMiner
+from repro.data import synthetic
+from repro.serve.clusters import ClusterIndex, cluster_query
+from repro.serve.ranking import (BatchQuerier, RankingPolicy,
+                                 cluster_scores, pack_signatures,
+                                 rank_views, top_clusters)
+
+
+@pytest.fixture(scope="module")
+def mined():
+    ctx = synthetic.random_context((8, 7, 6), 96, seed=7)
+    bm = BatchMiner(ctx.sizes)
+    res = bm(ctx.tuples)
+    return ctx, ClusterIndex.from_result(res), res
+
+
+def test_scores_default_policy_is_density(mined):
+    _, idx, _ = mined
+    scores = cluster_scores(idx)
+    assert np.allclose(scores, [c.density for c in idx.clusters])
+
+
+def test_policy_terms(mined):
+    _, idx, _ = mined
+    n = len(idx.clusters)
+    vol = cluster_scores(idx, RankingPolicy(w_density=0, w_volume=1.0))
+    assert vol.max() <= 1.0 + 1e-12 and np.isclose(vol.max(), 1.0)
+    # recency: ages=0 scores 1; larger age scores strictly less
+    ages = np.arange(n, dtype=np.float64)
+    rec = cluster_scores(idx, RankingPolicy(w_density=0, w_recency=1.0),
+                         ages=ages)
+    assert np.isclose(rec[0], 1.0)
+    if n > 1:
+        assert np.all(np.diff(rec) < 0)
+
+
+def test_scalar_batch_bit_identical(mined):
+    ctx, idx, _ = mined
+    bq = BatchQuerier(idx)
+    rng = np.random.default_rng(0)
+    for mode in (None, 0, 1, 2):
+        size = ctx.sizes[mode or 0]
+        # includes out-of-vocabulary entities (no hits) on purpose
+        ents = rng.integers(0, size + 3, 40).tolist()
+        batch = bq.topk_batch(ents, mode=mode, k=5)
+        assert len(batch) == len(ents)
+        for e, got in zip(ents, batch):
+            want = bq.topk(e, mode=mode, k=5)
+            assert [(id(v), s) for v, s in got] \
+                == [(id(v), s) for v, s in want]
+            # ranked: scores non-increasing
+            ss = [s for _, s in got]
+            assert ss == sorted(ss, reverse=True)
+
+
+def test_batch_mode_out_of_range(mined):
+    _, idx, _ = mined
+    with pytest.raises(ValueError):
+        BatchQuerier(idx).topk_batch([0], mode=7)
+
+
+def test_top_clusters_ranked(mined):
+    _, idx, _ = mined
+    top = top_clusters(idx, k=5)
+    ss = [s for _, s in top]
+    assert len(top) == min(5, len(idx)) and ss == sorted(ss, reverse=True)
+    assert np.isclose(ss[0], max(c.density for c in idx.clusters))
+
+
+def test_rank_views_stable_on_ties():
+    views = ["a", "b", "c"]
+    ranked = rank_views([(views[0], 1.0), (views[1], 2.0),
+                         (views[2], 1.0)])
+    assert [v for v, _ in ranked] == ["b", "a", "c"]
+
+
+def test_signature_lookup_batch_cross_engine(mined):
+    ctx, idx, _ = mined
+    bq = BatchQuerier(idx)
+    # streaming-issued signatures resolve against the batch index
+    sm = StreamingMiner(ctx.sizes)
+    sm.add(ctx.tuples[:48])
+    sm.add(ctx.tuples[48:])
+    sidx = ClusterIndex.from_result(sm.snapshot())
+    sigs = [c.signature for c in sidx.clusters[:8]] + [(0, 0)]
+    rows = bq.lookup_signatures(sigs)
+    assert rows[-1] == -1
+    for sig, row in zip(sigs[:-1], rows[:-1]):
+        assert row >= 0 and idx.clusters[row].signature == sig
+        assert idx.clusters[row].components \
+            == sidx.query(signature=sig)[0].components
+
+
+def test_pack_signatures_word():
+    w = pack_signatures([1, 0xFFFFFFFF], [2, 3])
+    assert w.dtype == np.uint64
+    assert int(w[0]) == (2 << 32) | 1
+    assert int(w[1]) == (3 << 32) | 0xFFFFFFFF
+
+
+def test_cluster_query_ranked_order_regression(mined):
+    """`cluster_query` must return ranked (density-desc) hits, not
+    index insertion order."""
+    ctx, idx, res = mined
+    entity = int(ctx.tuples[0, 0])
+    hits = cluster_query(res, entity=entity, mode=0)
+    dens = [c.density for c in hits]
+    assert dens == sorted(dens, reverse=True)
+    assert {c.signature for c in hits} \
+        == {c.signature for c in idx.query(entity=entity, mode=0)}
+    # global query too
+    all_dens = [c.density for c in cluster_query(res)]
+    assert all_dens == sorted(all_dens, reverse=True)
+
+
+def test_serve_exports():
+    """Regression: the serving API is reachable from `repro.serve`."""
+    import repro.serve as S
+    for name in ("TriclusterService", "Snapshot", "QueryResult",
+                 "BatchQuerier", "RankingPolicy", "top_clusters",
+                 "ClusterClient", "make_server", "ClusterIndex",
+                 "cluster_query"):
+        assert hasattr(S, name) and name in S.__all__, name
