@@ -74,8 +74,14 @@ def _mining_summary(results: dict, scale: float) -> dict:
         out["calibration"] = results["packed"]["calibration"]
     if results.get("serving"):
         # online query service: latency under a write trickle, swap
-        # staleness, batch-vs-scalar speedup (benchmarks/serving.py)
-        out["serving"] = results["serving"]
+        # staleness, batch-vs-scalar speedup (benchmarks/serving.py);
+        # the sharded-plane results (delta index rebuild, replica
+        # scale-out) are their own gated section
+        srv = dict(results["serving"])
+        scale_sec = srv.pop("serving_scale", None)
+        out["serving"] = srv
+        if scale_sec:
+            out["serving_scale"] = scale_sec
     return out
 
 

@@ -2,25 +2,43 @@
 trickle, snapshot-swap staleness, and the batch-vs-scalar query speedup
 (``serve.service`` / ``serve.ranking``; DESIGN.md §8).
 
-Three phases against one ``TriclusterService`` over a movielens-like
-stream:
+Phases against one ``TriclusterService`` over a movielens-like stream:
 
 1. **load** — a writer thread trickles upserts/deletes (the background
    thread re-mines and swaps snapshots) while the main thread issues
    ranked entity queries as fast as they complete, recording per-query
-   latency (p50/p99), throughput, and the served snapshot's *staleness*
-   (age of the published snapshot at query time).  Every sampled query
-   also proves the swap is atomic: the observed snapshot's index holds
-   exactly its own result's kept clusters and versions never go
-   backwards — a torn swap would fail either check.
+   latency (p50/p99 wall, plus the handler-CPU / off-CPU-wait split so
+   tail latency is attributable to queue wait vs handler work),
+   throughput, and the served snapshot's *staleness* (age of the
+   published snapshot at query time).  Every sampled query also proves
+   the swap is atomic: the observed snapshot's index holds exactly its
+   own result's kept clusters and versions never go backwards — a torn
+   swap would fail either check.
 2. **batch-vs-scalar** — quiesced, top-k for E ∈ {16, 64, 256} entities
    via the scalar dict-probe loop vs the stacked-window batched pass,
    interleaved best-of-``repeat``.
-3. the resulting ``serving`` section rides in BENCH_mining.json and is
-   schema-gated by ``benchmarks/validate.py`` (CI bench-smoke).
+3. **delta probe** (``serving_scale.delta``) — full
+   ``ClusterIndex.from_result`` rebuild vs
+   ``ClusterIndex.delta_from_result`` splice after a small (few-%%-of-
+   clusters-dirty) update, best-of-``repeat``, with the delta result
+   asserted **bit-identical** to the full rebuild.
+4. **replica scale-out** (``serving_scale.replica_scaleout``) — a
+   sharded plane (2 writer processes mirroring snapshots to shared
+   memory, 2 zero-copy replica readers each, fronted by a
+   ``serve.router``) vs the single-process full-rebuild baseline, same
+   write trickle and client count on both sides; records the aggregate
+   replica qps ratio, per-endpoint consistency (replica answers equal
+   the writer's at a pinned version) and cross-shard read-your-writes
+   through the router token.
+
+The resulting ``serving`` + ``serving_scale`` sections ride in
+BENCH_mining.json and are schema-gated by ``benchmarks/validate.py``
+(CI bench-smoke).
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
 
@@ -33,6 +51,10 @@ from .common import print_table, save_json
 
 BATCH_SIZES = (16, 64, 256)
 TOP_K = 8
+#: replica scale-out topology (shards x replicas) and load clients
+SCALEOUT_SHARDS = 2
+SCALEOUT_REPLICAS = 2
+SCALEOUT_CLIENTS = 4
 
 
 def _load_phase(svc: TriclusterService, ctx, duration_s: float,
@@ -55,7 +77,7 @@ def _load_phase(svc: TriclusterService, ctx, duration_s: float,
             writer_ops[0] += 1
             time.sleep(0.002)
 
-    lat, stale = [], []
+    lat, cpu, stale = [], [], []
     consistent = True
     last_version = 0
     t = threading.Thread(target=writer, daemon=True)
@@ -65,7 +87,9 @@ def _load_phase(svc: TriclusterService, ctx, duration_s: float,
     while time.monotonic() < t_end:
         e = int(rng.integers(0, svc.sizes[0]))
         t0 = time.perf_counter()
+        c0 = time.thread_time()
         res = svc.query(entity=e, mode=0, k=TOP_K)
+        cpu.append((time.thread_time() - c0) * 1e3)
         lat.append((time.perf_counter() - t0) * 1e3)
         snap = svc.snapshot()
         stale.append((time.monotonic() - snap.published_at) * 1e3)
@@ -81,10 +105,17 @@ def _load_phase(svc: TriclusterService, ctx, duration_s: float,
     stop.set()
     t.join(timeout=10)
     lat = np.asarray(lat)
+    # tail attribution: handler CPU (the query's own work) vs off-CPU
+    # wait (descheduled behind the miner/writer threads — the
+    # in-process analogue of HTTP queue wait; cf. ``server_ms`` in
+    # serve.protocol for the over-the-wire split)
+    wait = np.maximum(np.asarray(lat) - np.asarray(cpu), 0.0)
     return {"queries": int(lat.size), "duration_s": float(duration_s),
             "qps": float(lat.size / duration_s),
             "p50_ms": float(np.percentile(lat, 50)),
             "p99_ms": float(np.percentile(lat, 99)),
+            "p99_handler_ms": float(np.percentile(cpu, 99)),
+            "p99_wait_ms": float(np.percentile(wait, 99)),
             "writer_ops": int(writer_ops[0]),
             "staleness_ms_mean": float(np.mean(stale)),
             "staleness_ms_max": float(np.max(stale)),
@@ -119,6 +150,269 @@ def _batch_phase(svc: TriclusterService, repeat: int, seed: int = 2
     return out
 
 
+def _index_identical(a, b) -> bool:
+    """Bit-identity of two ClusterIndex builds: every stacked array and
+    every per-cluster stat must match exactly."""
+    if not (np.array_equal(a.packed_sigs, b.packed_sigs)
+            and np.array_equal(a.any_pairs, b.any_pairs)):
+        return False
+    for pa, pb in zip(a.mode_pairs, b.mode_pairs):
+        if not np.array_equal(pa, pb):
+            return False
+    for ea, eb in zip(a.comp_ents, b.comp_ents):
+        if not np.array_equal(ea, eb):
+            return False
+    for ba, bb in zip(a.comp_bounds, b.comp_bounds):
+        if not np.array_equal(ba, bb):
+            return False
+    return all(va.signature == vb.signature and va.density == vb.density
+               and va.gen_count == vb.gen_count
+               and va.volume == vb.volume
+               for va, vb in zip(a.clusters, b.clusters))
+
+
+def _delta_probe(scale: float, repeat: int, seed: int = 3) -> dict:
+    """Full ``from_result`` rebuild vs ``delta_from_result`` splice
+    after a small update (the swap-critical-path comparison), with the
+    delta output asserted bit-identical to the full rebuild."""
+    from repro.core import pipeline as P
+    from repro.core.streaming import StreamingMiner
+    from repro.serve.clusters import ClusterIndex
+
+    n = max(2_000, int(1_000_000 * scale))
+    ctx = synthetic.movielens_like(n_tuples=n, seed=seed)
+    m = StreamingMiner(ctx.sizes, seed=seed)
+    m.upsert(ctx.tuples)
+    res1 = m.snapshot()
+    idx1 = ClusterIndex.from_result(res1)
+    sigs1 = P.kept_sig_words(res1)
+    # a small localized update: a handful of novel tuples (plus one
+    # delete), so only a few %% of cluster signatures go dirty
+    rng = np.random.default_rng(seed + 1)
+    k = max(4, n // 4000)
+    m.upsert(rng.integers(0, ctx.sizes, size=(k, len(ctx.sizes)))
+             .astype(np.int64))
+    m.delete(ctx.tuples[rng.integers(0, len(ctx.tuples), 1)])
+    res2 = m.snapshot()
+    dirty = P.dirty_sig_count(sigs1, P.kept_sig_words(res2))
+
+    best = {"full": float("inf"), "delta": float("inf")}
+    delta_idx = None
+    for _ in range(max(2, repeat)):
+        t0 = time.perf_counter()
+        full_idx = ClusterIndex.from_result(res2)
+        best["full"] = min(best["full"],
+                           (time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        delta_idx = ClusterIndex.delta_from_result(idx1, res2)
+        best["delta"] = min(best["delta"],
+                            (time.perf_counter() - t0) * 1e3)
+    identical = _index_identical(full_idx, delta_idx)
+    assert identical, "delta_from_result diverged from from_result"
+    return {"n_tuples": int(n), "clusters": int(len(full_idx)),
+            "dirty_clusters": int(dirty),
+            "dirty_fraction": float(dirty / max(len(full_idx), 1)),
+            "full_ms": best["full"], "delta_ms": best["delta"],
+            "speedup": best["full"] / max(best["delta"], 1e-9),
+            "identical": bool(identical)}
+
+
+def _wait_port(path: str, timeout: float = 180.0) -> int:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        try:
+            with open(path) as f:
+                return int(f.read().strip())
+        except (OSError, ValueError):
+            time.sleep(0.1)
+    raise TimeoutError(f"no port in {path}")
+
+
+def _http_load(endpoints, n_entities: int, duration_s: float,
+               n_clients: int, seed: int) -> dict:
+    """``n_clients`` threads of persistent-connection entity queries,
+    client ``i`` pinned to endpoint ``i % len(endpoints)``; returns
+    aggregate qps + per-endpoint version monotonicity."""
+    from repro.serve.router import PooledClient
+
+    stop = threading.Event()
+    counts = [0] * n_clients
+    monotone = [True] * n_clients
+
+    def client(ci: int):
+        cl = PooledClient(endpoints[ci % len(endpoints)])
+        rng = np.random.default_rng(seed + ci)
+        last_v = 0
+        while not stop.is_set():
+            e = int(rng.integers(0, n_entities))
+            out = cl.call("/query", {"entity": e, "mode": 0,
+                                     "k": TOP_K})
+            if out["version"] < last_v:
+                monotone[ci] = False
+            last_v = max(last_v, out["version"])
+            counts[ci] += 1
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(n_clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    elapsed = time.monotonic() - t0
+    return {"queries": int(sum(counts)),
+            "qps": float(sum(counts) / elapsed),
+            "monotone": all(monotone)}
+
+
+def _replica_scaleout(scale: float, seed: int = 5) -> dict:
+    """Sharded zero-copy plane (writers + shm replicas + router) vs the
+    single-process full-rebuild baseline under the same write trickle
+    and client count."""
+    import multiprocessing as mp
+
+    from repro.launch.cluster_serve import _child_replica, _child_writer
+    from repro.serve.router import PooledClient, RouterService, Shard
+
+    n = max(2_000, int(1_000_000 * scale))
+    duration = float(min(10.0, max(2.0, 80 * scale)))
+    mp_ctx = mp.get_context("spawn")
+    tmp = tempfile.mkdtemp(prefix="bench-scaleout-")
+    base = {"dataset": "movielens", "n_tuples": n, "seed": seed,
+            "backend": "streaming", "theta": 0.0, "delta": None,
+            "rho_min": 0.0, "minsup": 0, "refresh_interval": 0.05,
+            "dirty_threshold": 16, "policy": (1.0, 0.0, 0.0),
+            "preload_chunks": 4, "host": "127.0.0.1", "verbose": False,
+            "timeout": 180.0}
+    sizes0 = synthetic.movielens_like(n_tuples=4, seed=seed).sizes[0]
+
+    def trickle(write_fn, stop):
+        wrng = np.random.default_rng(seed + 99)
+        ops = [0]
+
+        def loop():
+            while not stop.is_set():
+                rows = wrng.integers(0, (sizes0, 1, 1), size=(4, 3))
+                write_fn(rows.astype(np.int64).tolist())
+                ops[0] += 1
+                time.sleep(0.002)
+
+        t = threading.Thread(target=loop, daemon=True)
+        t.start()
+        return t, ops
+
+    procs, out = [], {"shards": SCALEOUT_SHARDS,
+                      "replicas": SCALEOUT_REPLICAS,
+                      "clients": SCALEOUT_CLIENTS,
+                      "n_tuples": int(n), "duration_s": duration}
+    try:
+        # ---- baseline: one process, full index rebuild every swap ----
+        cfg = dict(base, shard=0, n_shards=1, shm_prefix="",
+                   delta_index=False,
+                   port_file=os.path.join(tmp, "base.port"))
+        p = mp_ctx.Process(target=_child_writer, args=(cfg,),
+                           daemon=True)
+        p.start()
+        procs.append(p)
+        bport = _wait_port(cfg["port_file"])
+        bcl = PooledClient(f"http://127.0.0.1:{bport}")
+        while bcl.call("/health")["version"] < 1:
+            time.sleep(0.2)
+        stop = threading.Event()
+        wt, wops = trickle(lambda r: bcl.call("/upsert", {"rows": r}),
+                           stop)
+        base_load = _http_load([bcl.base_url], sizes0, duration,
+                               SCALEOUT_CLIENTS, seed)
+        stop.set()
+        wt.join(timeout=10)
+        base_load["write_ops"] = int(wops[0])
+        bcl.call("/shutdown", {})
+        out["baseline"] = base_load
+
+        # ---- sharded plane: writers + shm replicas + router ----------
+        shard_specs = []
+        for s in range(SCALEOUT_SHARDS):
+            prefix = f"bs{os.getpid()}s{s}"
+            wcfg = dict(base, shard=s, n_shards=SCALEOUT_SHARDS,
+                        shm_prefix=prefix, delta_index=True,
+                        port_file=os.path.join(tmp, f"w{s}.port"))
+            p = mp_ctx.Process(target=_child_writer, args=(wcfg,),
+                               daemon=True)
+            p.start()
+            procs.append(p)
+            rfiles = []
+            for r in range(SCALEOUT_REPLICAS):
+                rcfg = dict(base, shard=s, replica=r,
+                            shm_prefix=prefix,
+                            port_file=os.path.join(tmp,
+                                                   f"r{s}.{r}.port"))
+                p = mp_ctx.Process(target=_child_replica, args=(rcfg,),
+                                   daemon=True)
+                p.start()
+                procs.append(p)
+                rfiles.append(rcfg["port_file"])
+            shard_specs.append((wcfg["port_file"], rfiles))
+        shards, replica_urls = [], []
+        for wf, rfiles in shard_specs:
+            wp = _wait_port(wf)
+            rps = [_wait_port(rf) for rf in rfiles]
+            urls = [f"http://127.0.0.1:{rp}" for rp in rps]
+            replica_urls.extend(urls)
+            # generous HTTP timeouts: /refresh and pinned-version reads
+            # block on a full re-mine cycle, which at benchmark scale
+            # runs tens of seconds on one busy core
+            shards.append(Shard(f"http://127.0.0.1:{wp}", urls,
+                                timeout=180.0))
+        router = RouterService(shards, timeout=180.0)
+        router.health()                       # plane fully attached
+        stop = threading.Event()
+        wt, wops = trickle(router.upsert, stop)
+        plane_load = _http_load(replica_urls, sizes0, duration,
+                                SCALEOUT_CLIENTS, seed)
+        stop.set()
+        wt.join(timeout=10)
+        plane_load["write_ops"] = int(wops[0])
+        out["plane"] = plane_load
+
+        # consistency: at a pinned per-shard version every replica must
+        # answer exactly what its writer answers
+        ref = router.refresh()
+        tok = ref["shard_versions"]
+        consistent = plane_load["monotone"] and base_load["monotone"]
+        probe = {"entity": 0, "mode": 0, "k": TOP_K}
+        for s, sh in enumerate(shards):
+            want = sh.writer.call("/query",
+                                  dict(probe, at_least_version=tok[s],
+                                       timeout=60))
+            for rep in sh.replicas:
+                got = rep.call("/query",
+                               dict(probe, at_least_version=tok[s],
+                                    timeout=60))
+                if got["hits"] != want["hits"] \
+                        or got["version"] < tok[s]:
+                    consistent = False
+        # cross-shard read-your-writes through the router token
+        routed = router.query(entity=0, mode=0, k=TOP_K,
+                              at_least_version=tok, timeout=60)
+        ryw = all(v >= t for v, t in zip(routed["shard_versions"], tok))
+        out.update(consistent=bool(consistent),
+                   read_your_writes=bool(ryw),
+                   qps_ratio=float(plane_load["qps"]
+                                   / max(base_load["qps"], 1e-9)))
+        router.shutdown_backends()
+        router.close()
+    finally:
+        deadline = time.monotonic() + 15
+        for p in procs:
+            p.join(timeout=max(0.1, deadline - time.monotonic()))
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+    return out
+
+
 def run(scale: float = 0.12, repeat: int = 3) -> dict:
     n = max(2_000, int(1_000_000 * scale))
     ctx = synthetic.movielens_like(n_tuples=n, seed=0)
@@ -144,18 +438,40 @@ def run(scale: float = 0.12, repeat: int = 3) -> dict:
         raw["batch"] = _batch_phase(svc, max(2, repeat))
     at64 = [b["speedup"] for b in raw["batch"] if b["entities"] >= 64]
     raw["batch_speedup_at_64"] = float(max(at64))
+    raw["serving_scale"] = {"scale": float(scale),
+                            "delta": _delta_probe(scale, repeat),
+                            "replica_scaleout": _replica_scaleout(scale)}
     print_table(
         "serving: query latency under write trickle",
-        ["n_tuples", "queries", "qps", "p50_ms", "p99_ms", "swaps",
-         "stale_ms", "consistent"],
+        ["n_tuples", "queries", "qps", "p50_ms", "p99_ms", "p99_wait",
+         "swaps", "stale_ms", "consistent"],
         [[f"{n:,}", raw["queries"], f"{raw['qps']:,.0f}",
-          f"{raw['p50_ms']:.3f}", f"{raw['p99_ms']:.3f}", raw["swaps"],
+          f"{raw['p50_ms']:.3f}", f"{raw['p99_ms']:.3f}",
+          f"{raw['p99_wait_ms']:.3f}", raw["swaps"],
           f"{raw['staleness_ms_mean']:.1f}", raw["consistent"]]])
     print_table(
         "serving: batch vs scalar top-k",
         ["entities", "scalar_ms", "batch_ms", "speedup"],
         [[b["entities"], f"{b['scalar_ms']:.2f}", f"{b['batch_ms']:.2f}",
           f"{b['speedup']:.2f}x"] for b in raw["batch"]])
+    d = raw["serving_scale"]["delta"]
+    print_table(
+        "serving_scale: delta vs full index rebuild",
+        ["clusters", "dirty", "dirty_frac", "full_ms", "delta_ms",
+         "speedup", "identical"],
+        [[f"{d['clusters']:,}", d["dirty_clusters"],
+          f"{d['dirty_fraction']:.4f}", f"{d['full_ms']:.2f}",
+          f"{d['delta_ms']:.2f}", f"{d['speedup']:.2f}x",
+          d["identical"]]])
+    s = raw["serving_scale"]["replica_scaleout"]
+    print_table(
+        "serving_scale: replica plane vs single-process baseline",
+        ["topology", "clients", "base_qps", "plane_qps", "ratio",
+         "consistent", "ryw"],
+        [[f"{s['shards']}x{s['replicas']}", s["clients"],
+          f"{s['baseline']['qps']:,.0f}", f"{s['plane']['qps']:,.0f}",
+          f"{s['qps_ratio']:.2f}x", s["consistent"],
+          s["read_your_writes"]]])
     save_json("serving.json", raw)
     return raw
 

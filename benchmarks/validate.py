@@ -39,6 +39,21 @@ SERVING_KEYS = {"n_tuples": int, "queries": int, "qps": (int, float),
 SERVING_BATCH_KEYS = {"entities": int, "scalar_ms": (int, float),
                       "batch_ms": (int, float), "speedup": (int, float)}
 SERVING_MIN_BATCH_SPEEDUP = 2.0
+#: sharded serving plane (``benchmarks/serving.py`` serving_scale):
+#: delta index maintenance must be bit-identical to the full rebuild,
+#: and at report scale (>= SCALE_FULL) also >= MIN_DELTA_SPEEDUP x
+#: faster, with the 2x2 replica plane >= MIN_QPS_RATIO x the
+#: single-process baseline.  Below report scale the speed gates relax
+#: to sanity bounds (tiny runs are noise-dominated) but identity,
+#: consistency and read-your-writes always gate.
+SCALE_DELTA_KEYS = {"n_tuples": int, "clusters": int,
+                    "dirty_clusters": int, "dirty_fraction": (int, float),
+                    "full_ms": (int, float), "delta_ms": (int, float),
+                    "speedup": (int, float)}
+SCALE_LOAD_KEYS = {"queries": int, "qps": (int, float), "write_ops": int}
+SCALE_FULL = 0.1
+MIN_DELTA_SPEEDUP = 5.0
+MIN_QPS_RATIO = 2.5
 
 
 def validate(doc: dict) -> list[str]:
@@ -118,6 +133,9 @@ def validate(doc: dict) -> list[str]:
     srv = doc.get("serving")
     if srv is not None:
         errs.extend(_validate_serving(srv))
+    scale_sec = doc.get("serving_scale")
+    if scale_sec is not None:
+        errs.extend(_validate_serving_scale(scale_sec))
     paths = {r.get("sort_path") for r in rows}
     if SORT_PATHS & paths:
         if not SORT_PATHS <= paths:
@@ -175,6 +193,71 @@ def _validate_serving(srv) -> list[str]:
     return errs
 
 
+def _validate_serving_scale(sec) -> list[str]:
+    errs = []
+    if not isinstance(sec, dict):
+        return ["'serving_scale' section is not a dict"]
+    scale = sec.get("scale")
+    if not isinstance(scale, (int, float)):
+        errs.append("serving_scale: missing 'scale'")
+        scale = 0.0
+    full_run = scale >= SCALE_FULL
+
+    d = sec.get("delta")
+    if not isinstance(d, dict):
+        errs.append("serving_scale: 'delta' probe missing")
+    else:
+        for key, typ in SCALE_DELTA_KEYS.items():
+            if not isinstance(d.get(key), typ) or isinstance(d.get(key),
+                                                             bool):
+                errs.append(f"serving_scale.delta: bad '{key}' "
+                            f"({d.get(key)!r})")
+        if d.get("identical") is not True:
+            errs.append("serving_scale.delta: 'identical' is not True — "
+                        "the spliced index diverged from the full "
+                        "rebuild oracle")
+        sp = d.get("speedup")
+        if isinstance(sp, (int, float)):
+            floor = MIN_DELTA_SPEEDUP if full_run else 1.0
+            if sp < floor:
+                errs.append(f"serving_scale.delta: speedup {sp:.2f}x "
+                            f"< {floor}x (scale={scale})")
+
+    r = sec.get("replica_scaleout")
+    if not isinstance(r, dict):
+        errs.append("serving_scale: 'replica_scaleout' missing")
+        return errs
+    for side in ("baseline", "plane"):
+        load = r.get(side)
+        if not isinstance(load, dict):
+            errs.append(f"serving_scale.replica_scaleout: '{side}' "
+                        "missing")
+            continue
+        for key, typ in SCALE_LOAD_KEYS.items():
+            if not isinstance(load.get(key), typ) \
+                    or isinstance(load.get(key), bool):
+                errs.append(f"serving_scale.replica_scaleout.{side}: "
+                            f"bad '{key}' ({load.get(key)!r})")
+    if r.get("consistent") is not True:
+        errs.append("serving_scale.replica_scaleout: 'consistent' is "
+                    "not True — a replica answered differently from "
+                    "its writer at a pinned version")
+    if r.get("read_your_writes") is not True:
+        errs.append("serving_scale.replica_scaleout: cross-shard "
+                    "read-your-writes not verified")
+    ratio = r.get("qps_ratio")
+    if not isinstance(ratio, (int, float)) or isinstance(ratio, bool):
+        errs.append("serving_scale.replica_scaleout: bad 'qps_ratio'")
+    elif full_run and ratio < MIN_QPS_RATIO:
+        errs.append(f"serving_scale.replica_scaleout: plane only "
+                    f"{ratio:.2f}x baseline qps (need >= "
+                    f"{MIN_QPS_RATIO}x at scale >= {SCALE_FULL})")
+    elif ratio <= 0:
+        errs.append("serving_scale.replica_scaleout: non-positive "
+                    "qps_ratio")
+    return errs
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else os.path.join(RESULTS_DIR,
@@ -199,7 +282,11 @@ def main(argv=None):
              if "calibration" in doc else "")
           + (f", serving p50={doc['serving']['p50_ms']:.3f}ms "
              f"batch@64={doc['serving']['batch_speedup_at_64']:.2f}x"
-             if "serving" in doc else ""))
+             if "serving" in doc else "")
+          + (f", delta={doc['serving_scale']['delta']['speedup']:.1f}x"
+             f" plane="
+             f"{doc['serving_scale']['replica_scaleout']['qps_ratio']:.1f}x"
+             if "serving_scale" in doc else ""))
     return 0
 
 

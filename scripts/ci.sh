@@ -39,5 +39,21 @@ wait "$SERVE_PID"   # /shutdown from the smoke client stops the server
 trap - EXIT
 rm -f "$PORT_FILE"
 
+echo "== serve smoke (router: 2 shards x 2 replica readers) =="
+# same smoke sequence through the radix-range router topology: the
+# client detects role=router and additionally verifies cross-shard
+# read-your-writes via per-shard write tokens (at_least_version)
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+python -m repro.launch.cluster_serve --dataset random --n-tuples 1024 \
+    --shards 2 --replicas 2 --port 0 --port-file "$PORT_FILE" &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+python -m repro.launch.cluster_serve --smoke-client \
+    --port-file "$PORT_FILE" --timeout 240
+wait "$SERVE_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
+
 echo "== trend smoke (calibration-normalised cross-PR report) =="
 python scripts/render_trend.py --limit 8

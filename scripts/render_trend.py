@@ -47,12 +47,13 @@ def history(path: str, limit: int) -> list:
     docs = []
     for sha, subject in revs[:limit]:
         try:
-            docs.append((sha, subject,
-                         json.loads(_git("show", f"{sha}:{path}"))))
+            doc = json.loads(_git("show", f"{sha}:{path}"))
         except (subprocess.SubprocessError, OSError,
                 json.JSONDecodeError):
             continue
-    if wt is not None and (not docs or wt != docs[0][2]):
+        if isinstance(doc, dict):    # pre-schema commits: skip quietly
+            docs.append((sha, subject, doc))
+    if isinstance(wt, dict) and (not docs or wt != docs[0][2]):
         out.append(("worktree", "(uncommitted)", wt))
     return out + docs
 
@@ -61,11 +62,11 @@ def _pick_e2e(doc: dict, variant: str):
     """Representative end-to-end ms: the packed-radix (else packed-lax)
     batch row of the sort-path comparison — present since the probes
     were introduced; None for older documents."""
-    rows = [r for r in doc.get("rows", [])
-            if r.get("backend") == "batch" and r.get("variant") == variant]
+    rows = [r for r in doc.get("rows", []) if isinstance(r, dict)
+            and r.get("backend") == "batch" and r.get("variant") == variant]
     for path in ("packed-radix", "packed-lax"):
         for r in rows:
-            if r.get("sort_path") == path:
+            if r.get("sort_path") == path and r.get("ms") is not None:
                 return float(r["ms"])
     return None
 
@@ -75,26 +76,41 @@ def _fmt(v, spec="{:.2f}", dash="-"):
 
 
 def trend_rows(hist: list) -> list:
+    """One report row per document; every section is optional — a
+    historical commit predating a section (e.g. pre-PR-5 files have no
+    ``serving``, pre-PR-6 no ``serving_scale``) renders dashes for its
+    columns instead of aborting the whole report."""
     rows = []
     for label, subject, doc in hist:
-        cal = (doc.get("calibration") or {}).get("ms")
-        row = {"rev": label, "subject": subject, "cal_ms": cal}
-        for variant in ("prime", "noac"):
-            ms = _pick_e2e(doc, variant)
-            row[f"{variant}_ms"] = ms
-            row[f"{variant}_x_cal"] = (None if not cal or ms is None
-                                       else ms / cal)
-            sp = (doc.get("radix_speedup") or {}).get(variant) or {}
-            row[f"{variant}_radix_sp"] = sp.get("end_to_end")
-        runs = doc.get("runs_speedup") or {}
-        row["inc_snapshot_sp"] = (runs.get("prime") or {}).get(
-            "incremental_snapshot")
-        srv = doc.get("serving") or {}
-        row["serve_p50_ms"] = srv.get("p50_ms")
-        row["serve_p50_x_cal"] = (None if not cal or not srv.get("p50_ms")
-                                  else srv["p50_ms"] / cal)
-        row["serve_batch_sp"] = srv.get("batch_speedup_at_64")
+        row = {"rev": label, "subject": subject, "cal_ms": None}
         rows.append(row)
+        try:
+            cal = (doc.get("calibration") or {}).get("ms")
+            row["cal_ms"] = cal
+            for variant in ("prime", "noac"):
+                ms = _pick_e2e(doc, variant)
+                row[f"{variant}_ms"] = ms
+                row[f"{variant}_x_cal"] = (None if not cal or ms is None
+                                           else ms / cal)
+                sp = (doc.get("radix_speedup") or {}).get(variant) or {}
+                row[f"{variant}_radix_sp"] = sp.get("end_to_end")
+            runs = doc.get("runs_speedup") or {}
+            row["inc_snapshot_sp"] = (runs.get("prime") or {}).get(
+                "incremental_snapshot")
+            srv = doc.get("serving") or {}
+            row["serve_p50_ms"] = srv.get("p50_ms")
+            row["serve_p50_x_cal"] = (None if not cal
+                                      or not srv.get("p50_ms")
+                                      else srv["p50_ms"] / cal)
+            row["serve_batch_sp"] = srv.get("batch_speedup_at_64")
+            scale = doc.get("serving_scale") or {}
+            row["delta_sp"] = (scale.get("delta") or {}).get("speedup")
+            row["qps_ratio"] = (scale.get("replica_scaleout") or {}).get(
+                "qps_ratio")
+        except (TypeError, ValueError, AttributeError):
+            # malformed historical document: keep the rev visible with
+            # whatever was extracted before the fault
+            continue
     return rows
 
 
@@ -104,7 +120,8 @@ HEADERS = [("rev", "rev"), ("cal_ms", "cal ms"),
            ("prime_radix_sp", "radix sp"),
            ("inc_snapshot_sp", "inc-snap sp"),
            ("serve_p50_x_cal", "serve p50 ×cal"),
-           ("serve_batch_sp", "batch sp")]
+           ("serve_batch_sp", "batch sp"),
+           ("delta_sp", "delta sp"), ("qps_ratio", "qps ratio")]
 
 
 def render(rows: list) -> str:
@@ -136,8 +153,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
     hist = history(args.path, args.limit)
     if not hist:
-        print(f"[trend] no readable versions of {args.path}")
-        return 1
+        # empty history is a state, not a failure: fresh checkouts and
+        # shallow clones run the trend step before any benchmark commit
+        print(f"[trend] no readable versions of {args.path} — "
+              "nothing to report yet")
+        return 0
     text = render(trend_rows(hist))
     print(text)
     if args.out:

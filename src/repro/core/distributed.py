@@ -392,6 +392,13 @@ class DistributedMiner:
         # bump ``stream_version``; snapshots record the version covered
         self.stream_version = 0
         self.snapshot_stream_version = 0
+        # per-snapshot dirty-signature tracking (serve delta index);
+        # off by default — it syncs the signature lanes to host.  Only
+        # ``serving_snapshot`` notes sigs: it is the serving path, and
+        # the only one whose result carries the full-table lanes.
+        self.track_dirty_sigs = False
+        self.last_kept_sigs: Optional[np.ndarray] = None
+        self.last_dirty_sigs = 0
         # single-device serving pipeline (full PipelineResult with
         # component windows), compiled lazily per padded capacity
         self._serve_fn = None
@@ -776,13 +783,20 @@ class DistributedMiner:
             vdom = self._value_domain(vals) if vals is not None else None
             if vdom is not None and not vdom.shape[0]:
                 vdom = None
-            return self._serve_fn(targs, self._lo, self._hi, values=vargs,
-                                  value_domain=vdom)
-        perms = RS.padded_perms(run, self.key_plans, rows[:1],
-                                None if vals is None else vals[:1],
-                                count, cap)
-        return self._serve_fn(targs, self._lo, self._hi, values=vargs,
-                              perms=jnp.asarray(perms, jnp.int32))
+            res = self._serve_fn(targs, self._lo, self._hi, values=vargs,
+                                 value_domain=vdom)
+        else:
+            perms = RS.padded_perms(run, self.key_plans, rows[:1],
+                                    None if vals is None else vals[:1],
+                                    count, cap)
+            res = self._serve_fn(targs, self._lo, self._hi, values=vargs,
+                                 perms=jnp.asarray(perms, jnp.int32))
+        if self.track_dirty_sigs:
+            sigs = PL.kept_sig_words(res)
+            self.last_dirty_sigs = PL.dirty_sig_count(
+                self.last_kept_sigs, sigs)
+            self.last_kept_sigs = sigs
+        return res
 
 
 def pad_tuples(tuples: np.ndarray, multiple: int) -> np.ndarray:

@@ -553,6 +553,30 @@ def materialise(result: PipelineResult, only_kept: bool = True):
     return out
 
 
+def kept_sig_words(result) -> np.ndarray:
+    """Sorted packed ``(sig_hi << 32) | sig_lo`` words of the kept
+    clusters of one result — the per-snapshot signature *set* the
+    serving layer diffs to find dirty clusters (``serve.clusters``
+    packs identically; Stage 3 sorts the same word)."""
+    keep = np.asarray(result.keep).astype(bool)
+    m = np.uint64(0xFFFFFFFF)
+    lo = np.asarray(result.sig_lo)[keep].astype(np.uint64) & m
+    hi = np.asarray(result.sig_hi)[keep].astype(np.uint64) & m
+    return np.unique((hi << np.uint64(32)) | lo)
+
+
+def dirty_sig_count(prev: Optional[np.ndarray],
+                    cur: np.ndarray) -> int:
+    """Size of the symmetric difference of two sorted signature-word
+    sets — how many clusters changed identity between two consecutive
+    snapshots (the delta-index workload, surfaced by miners when
+    ``track_dirty_sigs`` is on)."""
+    if prev is None:
+        return int(cur.size)
+    inter = np.intersect1d(cur, prev, assume_unique=True).size
+    return int(cur.size) + int(prev.size) - 2 * int(inter)
+
+
 class PipelineMiner:
     """Base driver: jit-compiled single-shard pipeline over fixed sizes.
 

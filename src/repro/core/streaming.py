@@ -100,6 +100,12 @@ class StreamingMiner(P.PipelineMiner):
         # writes it reflects
         self.stream_version = 0
         self.snapshot_stream_version = 0
+        # per-snapshot dirty-signature tracking (serve delta index):
+        # off by default — it forces a host transfer of the signature
+        # lanes inside snapshot(), which mining benchmarks must not pay
+        self.track_dirty_sigs = False
+        self.last_kept_sigs: Optional[np.ndarray] = None
+        self.last_dirty_sigs = 0
         # kept for API compatibility: the snapshot materialiser
         self.miner = self
 
@@ -168,10 +174,22 @@ class StreamingMiner(P.PipelineMiner):
         vargs = None if vals is None else jnp.asarray(vals, jnp.float32)
         if full_remine or not s.incremental:
             self.stats["full_resorts"] += 1
-            return self._fn(targs, self._lo, self._hi, values=vargs)
-        perms = s.perms(cap)
-        return self._fn(targs, self._lo, self._hi, values=vargs,
-                        perms=jnp.asarray(perms, jnp.int32))
+            res = self._fn(targs, self._lo, self._hi, values=vargs)
+        else:
+            perms = s.perms(cap)
+            res = self._fn(targs, self._lo, self._hi, values=vargs,
+                           perms=jnp.asarray(perms, jnp.int32))
+        if self.track_dirty_sigs:
+            self._note_sigs(res)
+        return res
+
+    def _note_sigs(self, result) -> None:
+        """Record this snapshot's kept-signature set and how many
+        signatures changed vs the previous snapshot (the serving
+        layer's delta-index workload)."""
+        sigs = P.kept_sig_words(result)
+        self.last_dirty_sigs = P.dirty_sig_count(self.last_kept_sigs, sigs)
+        self.last_kept_sigs = sigs
 
     def snapshot_clusters(self, only_kept: bool = True):
         return self.materialise(self.snapshot(), only_kept=only_kept)

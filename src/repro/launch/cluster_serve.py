@@ -7,16 +7,29 @@ Server:  ``python -m repro.launch.cluster_serve --dataset imdb
 stores), publishes the first snapshot, and serves queries while the
 background thread re-mines on writes.
 
+Sharded plane:  ``--shards 2 --replicas 2`` spawns (per shard) one
+writer process — which preloads only the radix range it owns
+(``core.runs.shard_of_rows`` on the mode-0 identity key) and mirrors
+every snapshot into shared memory — plus N zero-copy replica reader
+processes (``serve.shm.ReplicaService``; jax-free), then fronts the
+whole topology with a ``serve.router`` endpoint on ``--port``.  The
+router speaks the same protocol, so clients are unchanged.
+
 Smoke client:  ``python -m repro.launch.cluster_serve --smoke-client
 --port-file /tmp/p`` — drives a running server through the whole
 surface (scalar, batch, top-k and signature queries; an upsert; a
-forced refresh asserting the version advanced; clean shutdown).  Exits
-non-zero on any violation — this is the CI serve-smoke step.
+forced refresh asserting the version advanced; clean shutdown).
+Against a router it additionally verifies cross-shard
+read-your-writes: an upsert spanning every shard, then a query pinned
+to the per-shard ``shard_versions`` write token.  Exits non-zero on
+any violation — this is the CI serve-smoke step.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import tempfile
 import time
 
 
@@ -35,7 +48,7 @@ def _serve(args) -> int:
         delta=args.delta, rho_min=args.rho_min, minsup=args.minsup,
         refresh_interval=args.refresh_interval,
         dirty_threshold=args.dirty_threshold, policy=policy,
-        seed=args.seed or 0x5EED)
+        delta_index=not args.no_delta_index, seed=args.seed or 0x5EED)
     n = ctx.tuples.shape[0]
     step = -(-n // max(1, args.preload_chunks))
     for lo in range(0, n, step):
@@ -61,6 +74,182 @@ def _serve(args) -> int:
     finally:
         server.server_close()
         svc.stop()
+        print("[cluster-serve] stopped", flush=True)
+    return 0
+
+
+def _wait_port_file(path: str, timeout: float) -> int:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        try:
+            with open(path) as f:
+                return int(f.read().strip())
+        except (OSError, ValueError):
+            time.sleep(0.1)
+    raise TimeoutError(f"no port in {path} after {timeout}s")
+
+
+def _child_writer(cfg: dict) -> None:
+    """Spawn target: one shard's writer — loads the dataset, keeps only
+    the radix range this shard owns, publishes snapshots to shared
+    memory (when replicas attach) and serves the write/query HTTP
+    surface on an ephemeral port."""
+    from ..serve.protocol import make_server
+    from ..serve.ranking import RankingPolicy
+    from ..serve.service import TriclusterService
+    from .tricluster import load_dataset
+
+    ctx = load_dataset(cfg["dataset"], cfg["n_tuples"], cfg["seed"])
+    publisher = None
+    if cfg["shm_prefix"]:
+        from ..serve.shm import ShmPublisher
+        publisher = ShmPublisher(cfg["shm_prefix"])
+    svc = TriclusterService(
+        ctx.sizes, backend=cfg["backend"], theta=cfg["theta"],
+        delta=cfg["delta"], rho_min=cfg["rho_min"], minsup=cfg["minsup"],
+        refresh_interval=cfg["refresh_interval"],
+        dirty_threshold=cfg["dirty_threshold"],
+        policy=RankingPolicy(*cfg["policy"]),
+        delta_index=cfg["delta_index"], publisher=publisher,
+        seed=cfg["seed"] or 0x5EED)
+    tuples, values = ctx.tuples, ctx.values
+    if cfg["n_shards"] > 1:
+        # deterministic load (same dataset+seed in every writer), so
+        # each writer can compute ownership locally — no coordinator
+        from ..core import keys as K
+        from ..core import runs as RS
+        plan = K.plan_mode_key(ctx.sizes, 0, with_values=False)
+        own = RS.shard_of_rows(tuples, plan,
+                               cfg["n_shards"]) == cfg["shard"]
+        tuples = tuples[own]
+        values = None if values is None else values[own]
+    n = tuples.shape[0]
+    step = -(-max(n, 1) // max(1, cfg["preload_chunks"]))
+    for lo in range(0, n, step):
+        svc.add(tuples[lo:lo + step],
+                None if values is None or cfg["delta"] is None
+                else values[lo:lo + step])
+    svc.start()
+    server = make_server(svc, host=cfg["host"], port=0,
+                         verbose=cfg["verbose"])
+    with open(cfg["port_file"], "w") as f:
+        f.write(str(server.port))
+    print(f"[shard-{cfg['shard']}] |I|={n} version={svc.version} "
+          f"clusters={svc.stats()['clusters']} port={server.port}",
+          flush=True)
+    try:
+        server.serve_forever()
+    finally:
+        server.server_close()
+        svc.stop()
+        if publisher is not None:
+            publisher.close()
+
+
+def _child_replica(cfg: dict) -> None:
+    """Spawn target: one zero-copy replica reader — attaches the
+    shard's shared-memory snapshot bundles (never imports jax, never
+    mines) and serves the read-only HTTP surface."""
+    from ..serve.protocol import make_server
+    from ..serve.shm import ReplicaService
+
+    svc = ReplicaService(cfg["shm_prefix"],
+                         connect_timeout=cfg["timeout"])
+    svc.start(first_snapshot_timeout=cfg["timeout"])
+    server = make_server(svc, host=cfg["host"], port=0,
+                         verbose=cfg["verbose"])
+    with open(cfg["port_file"], "w") as f:
+        f.write(str(server.port))
+    print(f"[replica-{cfg['shard']}.{cfg['replica']}] attached "
+          f"version={svc.version} port={server.port}", flush=True)
+    try:
+        server.serve_forever()
+    finally:
+        server.server_close()
+        svc.stop()
+
+
+def _serve_topology(args) -> int:
+    """Boot ``--shards`` writer processes (+ ``--replicas`` zero-copy
+    readers each) and front them with a router endpoint."""
+    import multiprocessing as mp
+
+    from ..serve.router import RouterService, Shard, make_router_server
+
+    mp_ctx = mp.get_context("spawn")          # fork is unsafe under jax
+    tmp = tempfile.mkdtemp(prefix="cluster-serve-")
+    base_cfg = {
+        "dataset": args.dataset, "n_tuples": args.n_tuples,
+        "seed": args.seed, "backend": args.backend, "theta": args.theta,
+        "delta": args.delta, "rho_min": args.rho_min,
+        "minsup": args.minsup,
+        "refresh_interval": args.refresh_interval,
+        "dirty_threshold": args.dirty_threshold,
+        "policy": (args.w_density, args.w_volume, args.w_recency),
+        "delta_index": not args.no_delta_index,
+        "preload_chunks": args.preload_chunks, "host": args.host,
+        "verbose": args.verbose, "n_shards": args.shards,
+        "timeout": args.timeout,
+    }
+    procs, shard_specs = [], []
+    try:
+        for s in range(args.shards):
+            prefix = (f"cs{os.getpid()}s{s}" if args.replicas else "")
+            wcfg = dict(base_cfg, shard=s, shm_prefix=prefix,
+                        port_file=os.path.join(tmp, f"w{s}.port"))
+            p = mp_ctx.Process(target=_child_writer, args=(wcfg,),
+                               daemon=True, name=f"shard-{s}")
+            p.start()
+            procs.append(p)
+            rfiles = []
+            for r in range(args.replicas):
+                rcfg = dict(base_cfg, shard=s, replica=r,
+                            shm_prefix=prefix,
+                            port_file=os.path.join(tmp,
+                                                   f"r{s}.{r}.port"))
+                p = mp_ctx.Process(target=_child_replica, args=(rcfg,),
+                                   daemon=True, name=f"replica-{s}.{r}")
+                p.start()
+                procs.append(p)
+                rfiles.append(rcfg["port_file"])
+            shard_specs.append((wcfg["port_file"], rfiles))
+
+        shards = []
+        for wf, rfiles in shard_specs:
+            wp = _wait_port_file(wf, args.timeout)
+            rps = [_wait_port_file(rf, args.timeout) for rf in rfiles]
+            shards.append(Shard(
+                f"http://{args.host}:{wp}",
+                [f"http://{args.host}:{rp}" for rp in rps]))
+        router = RouterService(shards)
+        server = make_router_server(
+            router, host=args.host, port=args.port,
+            allow_shutdown=not args.no_shutdown,
+            cascade_shutdown=True, verbose=args.verbose)
+        if args.port_file:
+            with open(args.port_file, "w") as f:
+                f.write(str(server.port))
+        h = router.health()
+        print(f"[cluster-serve] router over {args.shards} shard(s) x "
+              f"{args.replicas} replica(s): clusters={h['clusters']} "
+              f"shard_versions={h['shard_versions']}", flush=True)
+        print(f"[cluster-serve] listening on "
+              f"http://{args.host}:{server.port}", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+            router.shutdown_backends()
+            router.close()
+    finally:
+        deadline = time.monotonic() + 10
+        for p in procs:
+            p.join(timeout=max(0.1, deadline - time.monotonic()))
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
         print("[cluster-serve] stopped", flush=True)
     return 0
 
@@ -94,7 +283,9 @@ def _smoke_client(args) -> int:
     batch = cl.query_batch(ents, mode=0, k=3)
     assert len(batch["hits"]) == len(ents), "batch arity mismatch"
     # batch row 0 must equal the scalar query on the same snapshot
-    if batch["version"] == scalar["version"]:
+    # (per-shard versions, when the backend is a router)
+    if batch.get("shard_versions", batch["version"]) \
+            == scalar.get("shard_versions", scalar["version"]):
         assert batch["hits"][0] == scalar["hits"], \
             "batch/scalar hit mismatch"
     print(f"[serve-smoke] batch query over {len(ents)} entities OK")
@@ -110,14 +301,37 @@ def _smoke_client(args) -> int:
     print(f"[serve-smoke] top-k + signature round-trip OK "
           f"(top score {scores[0]:.3f})")
 
-    v0 = cl.health()["version"]
-    up = cl.upsert([[0] * len(sizes)])
-    assert up["stream_version"] > 0
-    ref = cl.refresh()
-    assert ref["version"] > v0, \
-        f"version did not advance over upsert+refresh ({v0} -> {ref})"
-    fresh = cl.query(entity=0, at_least_version=ref["version"], timeout=30)
-    assert fresh["version"] >= ref["version"]
+    health = cl.health()
+    v0 = health["version"]
+    if health.get("role") == "router":
+        # one write per shard (spread across the key range), then a
+        # read pinned to the per-shard write token: cross-shard
+        # read-your-writes through the router
+        n_shards = health["shards"]
+        rows = [[int(sizes[0] * (2 * s + 1) // (2 * n_shards))]
+                + [0] * (len(sizes) - 1) for s in range(n_shards)]
+        up = cl.upsert(rows)
+        assert sum(up["stream_versions"]) > 0, up
+        ref = cl.refresh()
+        tok = ref["shard_versions"]
+        assert len(tok) == n_shards and ref["version"] > v0, (v0, ref)
+        fresh = cl.query(entity=0, at_least_version=tok, timeout=30)
+        assert all(v >= t for v, t in
+                   zip(fresh["shard_versions"], tok)), (fresh, tok)
+        h = cl.health()
+        assert h["dirty"] == 0 and h["staleness_s"] is not None, h
+        print(f"[serve-smoke] router: {n_shards} shard(s), replicas="
+              f"{h['replicas']}; cross-shard read-your-writes OK "
+              f"(token {tok} -> {fresh['shard_versions']})")
+    else:
+        up = cl.upsert([[0] * len(sizes)])
+        assert up["stream_version"] > 0
+        ref = cl.refresh()
+        assert ref["version"] > v0, \
+            f"version did not advance over upsert+refresh ({v0} -> {ref})"
+        fresh = cl.query(entity=0, at_least_version=ref["version"],
+                         timeout=30)
+        assert fresh["version"] >= ref["version"]
     print(f"[serve-smoke] upsert advanced version {v0} -> "
           f"{ref['version']}; at_least_version read OK")
 
@@ -147,6 +361,15 @@ def main(argv=None):
     ap.add_argument("--w-volume", type=float, default=0.0)
     ap.add_argument("--w-recency", type=float, default=0.0)
     ap.add_argument("--preload-chunks", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=1,
+                    help=">1: spawn per-shard writer processes behind "
+                         "a serve.router endpoint")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="zero-copy shared-memory replica readers per "
+                         "shard (implies a router topology)")
+    ap.add_argument("--no-delta-index", action="store_true",
+                    help="full ClusterIndex rebuild every swap "
+                         "(baseline; default is delta maintenance)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8787,
                     help="0 = ephemeral (use --port-file to discover)")
@@ -164,6 +387,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke_client:
         return _smoke_client(args)
+    if args.shards > 1 or args.replicas > 0:
+        return _serve_topology(args)
     return _serve(args)
 
 

@@ -1,25 +1,55 @@
 """Serving: the online cluster-serving subsystem over mined results —
 snapshot-swapped :class:`TriclusterService` (``serve.service``), ranked
-and batched lookups (``serve.ranking``), the cluster-query index
-(``serve.clusters``) and the stdlib HTTP endpoint/client
-(``serve.protocol``) — plus the LM-side batched prefill+decode engine
-(``serve.engine``)."""
-from .clusters import ClusterIndex, ClusterView, cluster_query
-from .engine import GenerationResult, ServeEngine
-from .protocol import ClusterClient, ClusterServeServer, make_server
+and batched lookups (``serve.ranking``), the cluster-query index with
+delta maintenance (``serve.clusters``), the stdlib HTTP
+endpoint/client (``serve.protocol``), zero-copy shared-memory snapshot
+replicas (``serve.shm``) and the sharded query router
+(``serve.router``) — plus the LM-side batched prefill+decode engine
+(``serve.engine``).
+
+``serve.engine`` is the only jax-dependent module here, so it is
+imported lazily: replica readers and routers import ``repro.serve``
+without paying (or needing) the accelerator stack.
+"""
+from .clusters import (ClusterIndex, ClusterView, cluster_query,
+                       pack_sig_words)
+from .protocol import (ClusterClient, ClusterServeServer, health_doc,
+                       make_server)
 from .ranking import (BatchQuerier, RankingPolicy, cluster_scores,
-                      pack_signatures, rank_views, top_clusters)
-from .service import QueryResult, Snapshot, TriclusterService
+                      pack_signatures, rank_views, top_clusters,
+                      top_from_scores)
+from .router import (PooledClient, RouterServer, RouterService, Shard,
+                     make_router_server)
+from .service import (QueryResult, Snapshot, TriclusterService,
+                      snapshot_query, snapshot_query_batch)
+from .shm import ReplicaService, ShmPublisher, ShmReplica, SnapshotBundle
 
 __all__ = [
     # cluster-query surface
-    "ClusterIndex", "ClusterView", "cluster_query",
+    "ClusterIndex", "ClusterView", "cluster_query", "pack_sig_words",
     # ranking layer
     "BatchQuerier", "RankingPolicy", "cluster_scores", "pack_signatures",
-    "rank_views", "top_clusters",
+    "rank_views", "top_clusters", "top_from_scores",
     # snapshot-swapped service + protocol
     "TriclusterService", "Snapshot", "QueryResult",
-    "ClusterClient", "ClusterServeServer", "make_server",
-    # LM serving engine
+    "snapshot_query", "snapshot_query_batch",
+    "ClusterClient", "ClusterServeServer", "make_server", "health_doc",
+    # zero-copy shared-memory replicas
+    "ShmPublisher", "ShmReplica", "ReplicaService", "SnapshotBundle",
+    # sharded query router
+    "RouterService", "RouterServer", "Shard", "PooledClient",
+    "make_router_server",
+    # LM serving engine (lazy: jax)
     "ServeEngine", "GenerationResult",
 ]
+
+_LAZY = {"ServeEngine": "engine", "GenerationResult": "engine"}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    from importlib import import_module
+    return getattr(import_module(f".{mod}", __name__), name)

@@ -8,35 +8,77 @@ No third-party dependencies; wire format is JSON.
 
 Routes (all bodies/responses JSON):
 
-* ``GET /health`` — ``{version, stream_version, clusters, dirty}``
+* ``GET /health`` — ``{version, stream_version, clusters, dirty,
+  dirty_clusters, staleness_s, role}``: ``dirty`` is the write backlog
+  (writes not yet covered by the published snapshot),
+  ``dirty_clusters`` how many cluster signatures changed at the last
+  swap, ``staleness_s`` the seconds since the served snapshot was
+  published (wall-clock on replicas — comparable across processes)
 * ``GET /stats`` — full service stats (includes ``sizes`` so clients
   can build valid rows/entities without out-of-band knowledge)
 * ``POST /query`` — ``{entity | entities | signature, mode?, k?,
   at_least_version?, timeout?, include_components?}``; with
   ``entities`` the batched path answers the whole list in one
-  stacked-window pass and ``hits`` is one list per entity
+  stacked-window pass and ``hits`` is one list per entity.  Responses
+  carry ``server_ms`` — handler wall time, so clients can attribute
+  tail latency to queue wait vs handler work
 * ``POST /upsert`` / ``POST /delete`` — ``{rows, values?}``; returns
   ``{stream_version, dirty}`` (the background thread picks the write up
-  on its cadence/threshold; follow with ``/refresh`` to force)
+  on its cadence/threshold; follow with ``/refresh`` to force).
+  **501** on a read-only replica (``serve.shm.ReplicaService``) —
+  writes go to the shard's writer endpoint
 * ``POST /refresh`` — synchronous re-mine + swap; returns the new
-  ``{version, stream_version, clusters}``
+  ``{version, stream_version, clusters}`` (**501** on a replica)
 * ``POST /shutdown`` — stop serving (enabled by default; pass
   ``allow_shutdown=False`` to :func:`make_server` to disable)
 
 Signatures travel as ``[lo, hi]`` pairs — the cross-engine cluster
 identity, so a signature minted by a batch job yesterday resolves over
 HTTP against today's streaming snapshot.
+
+**Load-balancer contract.**  A fleet of replicas behind one writer (or
+a ``serve.router`` fan-out over several shards) is balanced on two
+/health signals, both cheap lock-free reads:
+
+* *readiness* — route queries to a backend once ``version >= 1``;
+  ``ClusterClient.wait_ready`` polls exactly this.
+* *freshness* — ``staleness_s`` + ``dirty``: a backend whose
+  ``staleness_s`` grows while ``dirty > 0`` has a stuck writer (or a
+  replica whose publisher died) and should be drained;
+  ``ClusterClient.wait_until_fresh`` blocks on the complementary
+  condition (backlog drained and snapshot younger than a bound).
+  Replicas of the same shard report the same ``version`` stream, so a
+  balancer may also pin ``at_least_version`` tokens (read-your-writes)
+  to any replica of the shard that served the write.
 """
 from __future__ import annotations
 
 import json
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib import error as _uerror
 from urllib import request as _urequest
 
 from .service import QueryResult, TriclusterService
+
+
+def health_doc(svc) -> dict:
+    """The /health body for any service-shaped object (in-process
+    writer or shared-memory replica)."""
+    snap = getattr(svc, "_snap", None)
+    stale = svc.staleness_s() if hasattr(svc, "staleness_s") else None
+    if stale is not None and stale == float("inf"):
+        stale = None
+    return {"version": svc.version,
+            "stream_version": svc.stream_version,
+            "clusters": 0 if snap is None else len(snap.index),
+            "dirty": svc.dirty,
+            "dirty_clusters": int(getattr(svc, "dirty_clusters", 0)),
+            "staleness_s": stale,
+            "role": ("replica" if getattr(svc, "read_only", False)
+                     else "writer")}
 
 
 def hit_doc(view, score: float, include_components: bool = False) -> dict:
@@ -81,11 +123,7 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self):
         svc = self._service()
         if self.path == "/health":
-            snap = svc._snap
-            self._reply({"version": svc.version,
-                         "stream_version": svc.stream_version,
-                         "clusters": 0 if snap is None else len(snap.index),
-                         "dirty": svc.dirty})
+            self._reply(health_doc(svc))
         elif self.path == "/stats":
             self._reply(svc.stats())
         else:
@@ -101,6 +139,11 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if self.path == "/query":
                 self._reply(self._query(svc, doc))
+            elif self.path in ("/upsert", "/delete", "/refresh") and \
+                    getattr(svc, "read_only", False):
+                self._reply({"error": f"{self.path} on a read-only "
+                             "replica — send writes to the shard's "
+                             "writer endpoint"}, 501)
             elif self.path in ("/upsert", "/delete"):
                 self._reply(self._mutate(svc, doc, self.path[1:]))
             elif self.path == "/refresh":
@@ -125,8 +168,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply({"error": str(e)}, 400)
 
     def _query(self, svc: TriclusterService, doc: dict) -> dict:
+        t0 = time.perf_counter()
+        alv = doc.get("at_least_version")
         common = dict(k=int(doc.get("k", 10)),
-                      at_least_version=doc.get("at_least_version"),
+                      at_least_version=(None if alv is None else int(alv)),
                       timeout=doc.get("timeout"))
         mode = doc.get("mode")
         mode = None if mode is None else int(mode)
@@ -134,15 +179,21 @@ class _Handler(BaseHTTPRequestHandler):
         if "entities" in doc:
             res = svc.query_batch([int(e) for e in doc["entities"]],
                                   mode=mode, **common)
-            return _query_doc(res, True, inc)
-        sig = doc.get("signature")
-        res = svc.query(
-            entity=(None if doc.get("entity") is None
-                    else int(doc["entity"])),
-            mode=mode,
-            signature=None if sig is None else (int(sig[0]), int(sig[1])),
-            **common)
-        return _query_doc(res, False, inc)
+            out = _query_doc(res, True, inc)
+        else:
+            sig = doc.get("signature")
+            res = svc.query(
+                entity=(None if doc.get("entity") is None
+                        else int(doc["entity"])),
+                mode=mode,
+                signature=(None if sig is None
+                           else (int(sig[0]), int(sig[1]))),
+                **common)
+            out = _query_doc(res, False, inc)
+        # handler wall time: the client subtracts this from its own
+        # round-trip to attribute tail latency (queue vs handler)
+        out["server_ms"] = (time.perf_counter() - t0) * 1e3
+        return out
 
     def _mutate(self, svc: TriclusterService, doc: dict, op: str) -> dict:
         rows = doc.get("rows")
@@ -178,6 +229,15 @@ def make_server(service: TriclusterService, host: str = "127.0.0.1",
     call ``serve_forever()`` — typically on a thread — to go live."""
     return ClusterServeServer(service, (host, port),
                               allow_shutdown=allow_shutdown, verbose=verbose)
+
+
+def _version_token(v):
+    """Freshness token: a scalar against one service, or a per-shard
+    list against a ``serve.router`` endpoint (cross-shard
+    read-your-writes)."""
+    if isinstance(v, (list, tuple)):
+        return [int(x) for x in v]
+    return int(v)
 
 
 class ClusterClient:
@@ -227,6 +287,31 @@ class ClusterClient:
             time.sleep(0.1)
         raise TimeoutError(f"server not ready after {timeout}s ({last!r})")
 
+    def wait_until_fresh(self, max_staleness_s: float = 5.0,
+                         timeout: float = 60.0) -> dict:
+        """Block until the server's write backlog is drained
+        (``dirty == 0``) and its snapshot is younger than
+        ``max_staleness_s`` — the load-balancer freshness condition
+        (module docstring).  Returns the satisfying /health doc."""
+        import time
+        deadline = time.monotonic() + timeout
+        last = None
+        while time.monotonic() < deadline:
+            try:
+                h = self.health()
+                stale = h.get("staleness_s")
+                if (h.get("version", 0) >= 1 and h.get("dirty", 0) == 0
+                        and stale is not None
+                        and stale <= max_staleness_s):
+                    return h
+                last = h
+            except (OSError, RuntimeError) as e:
+                last = e
+            time.sleep(0.05)
+        raise TimeoutError(
+            f"server not fresh (≤{max_staleness_s}s, drained) after "
+            f"{timeout}s ({last!r})")
+
     def query(self, entity: Optional[int] = None,
               mode: Optional[int] = None, signature=None, k: int = 10,
               at_least_version: Optional[int] = None,
@@ -240,7 +325,7 @@ class ClusterClient:
         if signature is not None:
             doc["signature"] = [int(signature[0]), int(signature[1])]
         if at_least_version is not None:
-            doc["at_least_version"] = int(at_least_version)
+            doc["at_least_version"] = _version_token(at_least_version)
             doc["timeout"] = timeout
         return self._call("/query", doc)
 
@@ -254,7 +339,7 @@ class ClusterClient:
         if mode is not None:
             doc["mode"] = int(mode)
         if at_least_version is not None:
-            doc["at_least_version"] = int(at_least_version)
+            doc["at_least_version"] = _version_token(at_least_version)
             doc["timeout"] = timeout
         return self._call("/query", doc)
 

@@ -60,12 +60,11 @@ def cluster_scores(index: ClusterIndex,
     """One float64 score per ``index.clusters`` row (ties are broken by
     row order everywhere downstream, so equal-score rankings are still
     deterministic)."""
-    n = len(index.clusters)
-    dens = np.fromiter((c.density for c in index.clusters), np.float64, n)
+    n = len(index)
+    dens = index.density.astype(np.float64)
     score = policy.w_density * dens
     if policy.w_volume:
-        vol = np.log1p(np.fromiter((c.volume for c in index.clusters),
-                                   np.float64, n))
+        vol = np.log1p(index.volume.astype(np.float64))
         score = score + policy.w_volume * (vol / max(vol.max(initial=0.0),
                                                      1e-12))
     if policy.w_recency:
@@ -90,7 +89,7 @@ def top_clusters(index: ClusterIndex, k: int = 10,
     """Global top-k of a snapshot (no entity constraint)."""
     scores = cluster_scores(index, policy, ages)
     order = np.lexsort((np.arange(len(scores)), -scores))[:k]
-    return [(index.clusters[i], float(scores[i])) for i in order]
+    return [(index.view_at(int(i)), float(scores[i])) for i in order]
 
 
 def pack_signatures(sig_lo, sig_hi) -> np.ndarray:
@@ -102,6 +101,15 @@ def pack_signatures(sig_lo, sig_hi) -> np.ndarray:
     return (hi << np.uint64(32)) | lo
 
 
+def top_from_scores(index: ClusterIndex, scores: np.ndarray, k: int = 10
+                    ) -> List[Tuple[ClusterView, float]]:
+    """Global top-k from an already-computed score vector (the replica
+    path reuses the scores the writer published; identical ordering to
+    :func:`top_clusters` given the same scores)."""
+    order = np.lexsort((np.arange(len(scores)), -scores))[:k]
+    return [(index.view_at(int(i)), float(scores[i])) for i in order]
+
+
 class BatchQuerier:
     """Ranked lookups over one snapshot's :class:`ClusterIndex`.
 
@@ -111,25 +119,36 @@ class BatchQuerier:
 
     def __init__(self, index: ClusterIndex,
                  policy: RankingPolicy = DEFAULT_POLICY,
-                 ages: Optional[np.ndarray] = None):
+                 ages: Optional[np.ndarray] = None,
+                 scores: Optional[np.ndarray] = None):
         self.index = index
         self.policy = policy
-        self.scores = cluster_scores(index, policy, ages)
-        views = index.clusters
-        self._row_of = {id(c): i for i, c in enumerate(views)}
+        #: ``scores`` short-circuits the recompute — replica readers
+        #: (serve.shm) rank with the exact score vector the writer
+        #: published, so writer and replicas answer bit-identically
+        self.scores = (np.asarray(scores, np.float64) if scores is not None
+                       else cluster_scores(index, policy, ages))
         #: bits of the packed word holding the cluster row (low field) —
         #: the index's membership words are always (entity << 32) | row
         self.cluster_bits = 32
         self._row_mask = np.uint64(0xFFFFFFFF)
-        # the stacked component windows: shared with the index, which
-        # already built them vectorised from the snapshot's result
-        self._mode_keys: List[np.ndarray] = index.mode_pairs
-        self._any_keys = index.any_pairs
-        # signature resolution: sorted packed words + their rows
-        sigs = pack_signatures([c.signature[0] for c in views],
-                               [c.signature[1] for c in views])
-        self._sig_order = np.argsort(sigs).astype(np.int64)
-        self._sig_sorted = sigs[self._sig_order]
+        # the stacked component windows are shared with the index, but
+        # pulled lazily: a delta-built index answers scalar probes from
+        # its overlay without ever materialising the flat arrays, so
+        # constructing a querier stays off the swap-critical path
+        self._keys_cache: Optional[Tuple[List[np.ndarray], np.ndarray]] \
+            = None
+        # signature resolution: sorted packed words + their rows; a
+        # vectorised index is already row-ordered by packed signature,
+        # so its sig array is reused as-is (argsort is the identity) —
+        # and no view objects are touched anywhere in construction
+        if index.packed_sigs is not None:
+            self._sig_sorted = index.packed_sigs
+            self._sig_order = np.arange(len(index), dtype=np.int64)
+        else:
+            sigs = pack_signatures(index.sig_lo, index.sig_hi)
+            self._sig_order = np.argsort(sigs).astype(np.int64)
+            self._sig_sorted = sigs[self._sig_order]
 
     # -- scalar path (the baseline) -----------------------------------------
 
@@ -139,22 +158,32 @@ class BatchQuerier:
         mode-``mode`` (any-mode when None) component holds ``entity``.
         Ordering: score desc, cluster row asc — identical to
         :meth:`topk_batch`."""
-        hits = self.index.query(entity=int(entity), mode=mode)
-        rows = [self._row_of[id(c)] for c in hits]
-        order = sorted(range(len(rows)),
-                       key=lambda i: (-self.scores[rows[i]], rows[i]))[:k]
-        return [(hits[i], float(self.scores[rows[i]])) for i in order]
+        if mode is not None:
+            if not len(self.index):
+                return []
+            if not 0 <= mode < self.index.arity:
+                raise ValueError(f"mode {mode} out of range")
+        rows = self.index.entity_rows(int(entity), mode).tolist()
+        order = sorted(rows, key=lambda r: (-self.scores[r], r))[:k]
+        return [(self.index.view_at(r), float(self.scores[r]))
+                for r in order]
 
     # -- batched path --------------------------------------------------------
 
     def _stacked(self, mode: Optional[int]) -> np.ndarray:
+        if self._keys_cache is None:
+            # first batched query materialises (and caches) the flat
+            # stacked arrays — a no-op on a full-built index
+            self._keys_cache = (self.index.mode_pairs,
+                                self.index.any_pairs)
+        mode_keys, any_keys = self._keys_cache
         if mode is None:
-            return self._any_keys
-        if not self._mode_keys:
+            return any_keys
+        if not mode_keys:
             return np.zeros(0, np.uint64)
-        if not 0 <= mode < len(self._mode_keys):
+        if not 0 <= mode < len(mode_keys):
             raise ValueError(f"mode {mode} out of range")
-        return self._mode_keys[mode]
+        return mode_keys[mode]
 
     def topk_batch_raw(self, entities, mode: Optional[int] = None,
                        k: int = 10):
@@ -198,9 +227,9 @@ class BatchQuerier:
         bit-identical to ``topk(entities[i], mode, k)``."""
         qid, rows, sc = self.topk_batch_raw(entities, mode, k)
         out: List[List[Tuple[ClusterView, float]]] = [[] for _ in entities]
-        views = self.index.clusters
+        view_at = self.index.view_at
         for i, r, s in zip(qid.tolist(), rows.tolist(), sc.tolist()):
-            out[i].append((views[r], s))
+            out[i].append((view_at(r), s))
         return out
 
     # -- signatures ----------------------------------------------------------

@@ -1,0 +1,461 @@
+"""Radix-range query router: one serving plane over N shards
+(DESIGN.md §8).
+
+Scaling writes past one miner reuses the partitioner the mining side
+already trusts: ``core.runs.shard_of_rows`` — the top radix digit of
+the mode-0 identity key, the same key-range ownership scheme
+``DistributedMiner.ingest`` and the shuffle use (and the MapReduce FCA
+/ distributed-triangle-counting partitioning of the related work).
+Each shard is an independent writer (``TriclusterService`` + HTTP
+endpoint) with optional shared-memory replica readers
+(``serve.shm.ReplicaService``); this module is the thin tier in front:
+
+* **writes** (``upsert`` / ``delete``) are partitioned by
+  ``shard_of_rows`` and forwarded to the owning shards' writers;
+* **queries** fan out to every shard (a cluster lives in the shard
+  that owns its *generating tuples*, but its components may contain
+  any entity, so entity lookups cannot be routed by entity id), each
+  shard answers its local ranked top-k, and the router k-way-merges
+  the per-shard lists by ``(-score, shard, rank)`` with a heap —
+  top-k of the union equals the merge of per-shard top-ks;
+* **freshness** is a per-shard vector: ``/refresh`` returns
+  ``shard_versions`` (one snapshot version per shard) as the
+  *write token*; passing that list back as ``at_least_version``
+  makes every shard wait for its own component — cross-shard
+  read-your-writes.  A scalar ``at_least_version`` is broadcast.
+
+Mining stays *shard-local*: a cluster's components are computed from
+the tuples its shard owns, so a logical cluster whose generating
+tuples straddle a range boundary appears as per-shard parts (exactly
+the per-partition aggregation trade-off of the MapReduce scheme).
+Merged hits are deduplicated by signature (best score wins) so the
+plane still answers with one hit per cluster identity.
+
+The router speaks the same HTTP/JSON dialect as ``serve.protocol`` —
+``ClusterClient`` works unchanged against a router endpoint — and
+keeps per-worker-thread persistent connections to every backend, so
+its fan-out adds no per-query TCP setup.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import List, Optional, Sequence
+
+import http.client
+
+import numpy as np
+
+
+class PooledClient:
+    """Minimal JSON-over-HTTP client with one persistent connection per
+    calling thread (stdlib ``http.client``; reconnects once on a stale
+    keep-alive socket)."""
+
+    def __init__(self, base_url: str, timeout: float = 30.0):
+        base = base_url.rstrip("/")
+        if base.startswith("http://"):
+            base = base[len("http://"):]
+        self.base_url = "http://" + base
+        host, _, port = base.partition(":")
+        self.host, self.port = host, int(port or 80)
+        self.timeout = timeout
+        self._local = threading.local()
+
+    def _conn(self) -> http.client.HTTPConnection:
+        c = getattr(self._local, "conn", None)
+        if c is None:
+            c = http.client.HTTPConnection(self.host, self.port,
+                                           timeout=self.timeout)
+            self._local.conn = c
+        return c
+
+    def _drop(self) -> None:
+        c = getattr(self._local, "conn", None)
+        if c is not None:
+            c.close()
+        self._local.conn = None
+
+    def call(self, path: str, doc: Optional[dict] = None) -> dict:
+        body = None if doc is None else json.dumps(doc).encode()
+        method = "GET" if doc is None else "POST"
+        for attempt in (0, 1):
+            try:
+                c = self._conn()
+                c.request(method, path, body=body,
+                          headers={"Content-Type": "application/json"})
+                r = c.getresponse()
+                data = r.read()
+                break
+            except (http.client.HTTPException, ConnectionError,
+                    OSError):
+                self._drop()
+                if attempt:
+                    raise
+        out = json.loads(data) if data else {}
+        if r.status == 504:
+            raise TimeoutError(out.get("error", "gateway timeout"))
+        if r.status >= 400:
+            raise RuntimeError(f"{path}: "
+                               f"{out.get('error', f'HTTP {r.status}')}")
+        return out
+
+
+class Shard:
+    """One radix range: a writer endpoint plus its replica readers.
+    Queries round-robin over the replicas (falling back to the writer
+    when there are none); writes always go to the writer."""
+
+    def __init__(self, writer: str, replicas: Sequence[str] = (),
+                 timeout: float = 30.0):
+        self.writer = PooledClient(writer, timeout)
+        self.replicas = [PooledClient(u, timeout) for u in replicas]
+        self._rr = itertools.count()
+
+    def reader(self) -> PooledClient:
+        if not self.replicas:
+            return self.writer
+        return self.replicas[next(self._rr) % len(self.replicas)]
+
+    def endpoints(self) -> List[PooledClient]:
+        return [self.writer, *self.replicas]
+
+
+def _merge_hits(per_shard: List[list], k: int) -> list:
+    """K-way merge of per-shard ranked hit lists; global best-first by
+    ``(-score, shard, rank)``, deduplicated by signature (first — i.e.
+    best — occurrence wins), truncated to ``k``."""
+    streams = [((-h["score"], s, i), h)
+               for s, hits in enumerate(per_shard)
+               for i, h in enumerate(hits)]
+    out, seen = [], set()
+    for _, h in heapq.nsmallest(len(streams), streams, key=lambda t: t[0]):
+        sig = tuple(h["signature"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(h)
+        if len(out) >= k:
+            break
+    return out
+
+
+class RouterService:
+    """Fan-out / merge logic over a list of :class:`Shard`; the HTTP
+    front-end (:func:`make_router_server`) is a thin JSON shim over
+    these methods, and they are equally usable in-process."""
+
+    def __init__(self, shards: Sequence[Shard], sizes=None,
+                 timeout: float = 30.0):
+        if not shards:
+            raise ValueError("router needs at least one shard")
+        self.shards = list(shards)
+        self.timeout = timeout
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(2, len(self.shards) * 2),
+            thread_name_prefix="router-fan")
+        self._sizes = None if sizes is None else tuple(int(s)
+                                                       for s in sizes)
+        self._id_plan = None
+        self._lock = threading.Lock()
+
+    # -- partitioning --------------------------------------------------------
+
+    @property
+    def sizes(self):
+        if self._sizes is None:
+            st = self.shards[0].writer.call("/stats")
+            self._sizes = tuple(int(s) for s in st["sizes"])
+        return self._sizes
+
+    def shard_of(self, rows) -> np.ndarray:
+        """Owning shard per tuple row — ``core.runs.shard_of_rows`` on
+        the mode-0 identity key's top radix digit (the partitioner the
+        shuffle and ``DistributedMiner`` already use)."""
+        if self._id_plan is None:
+            with self._lock:
+                if self._id_plan is None:
+                    from ..core import keys as K
+                    self._id_plan = K.plan_mode_key(self.sizes, 0,
+                                                    with_values=False)
+        from ..core import runs as RS
+        return RS.shard_of_rows(np.asarray(rows, np.int64), self._id_plan,
+                                len(self.shards))
+
+    # -- fan-out helpers -----------------------------------------------------
+
+    def _fan(self, calls) -> list:
+        """Run ``(client, path, doc)`` triples concurrently; returns the
+        responses in order.  Any backend failure propagates (the plane
+        answers fully or not at all — partial answers would silently
+        drop ranges)."""
+        futs = [self._pool.submit(c.call, path, doc)
+                for c, path, doc in calls]
+        return [f.result(timeout=self.timeout + 5) for f in futs]
+
+    def _tokens(self, at_least_version) -> List[Optional[int]]:
+        n = len(self.shards)
+        if at_least_version is None:
+            return [None] * n
+        if isinstance(at_least_version, (list, tuple)):
+            if len(at_least_version) != n:
+                raise ValueError(
+                    f"at_least_version list must have one entry per "
+                    f"shard ({n}), got {len(at_least_version)}")
+            return [int(v) for v in at_least_version]
+        return [int(at_least_version)] * n
+
+    # -- reads ---------------------------------------------------------------
+
+    def query(self, entity=None, mode=None, signature=None, k: int = 10,
+              at_least_version=None, timeout=None,
+              include_components: bool = False) -> dict:
+        doc = {"k": int(k), "include_components": bool(include_components)}
+        if entity is not None:
+            doc["entity"] = int(entity)
+        if mode is not None:
+            doc["mode"] = int(mode)
+        if signature is not None:
+            doc["signature"] = [int(signature[0]), int(signature[1])]
+        res = self._fan_query(doc, at_least_version, timeout)
+        hits = _merge_hits([r["hits"] for r in res], int(k))
+        return self._doc(res, hits)
+
+    def query_batch(self, entities, mode=None, k: int = 10,
+                    at_least_version=None, timeout=None,
+                    include_components: bool = False) -> dict:
+        doc = {"entities": [int(e) for e in entities], "k": int(k),
+               "include_components": bool(include_components)}
+        if mode is not None:
+            doc["mode"] = int(mode)
+        res = self._fan_query(doc, at_least_version, timeout)
+        hits = [_merge_hits([r["hits"][i] for r in res], int(k))
+                for i in range(len(doc["entities"]))]
+        return self._doc(res, hits)
+
+    def _fan_query(self, doc: dict, at_least_version, timeout) -> list:
+        tokens = self._tokens(at_least_version)
+        calls = []
+        for sh, tok in zip(self.shards, tokens):
+            d = dict(doc)
+            if tok is not None:
+                d["at_least_version"] = tok
+                d["timeout"] = timeout
+            calls.append((sh.reader(), "/query", d))
+        return self._fan(calls)
+
+    def _doc(self, res: list, hits) -> dict:
+        vers = [int(r["version"]) for r in res]
+        return {"version": min(vers), "shard_versions": vers,
+                "stream_version": min(int(r["stream_version"])
+                                      for r in res),
+                "hits": hits}
+
+    # -- writes --------------------------------------------------------------
+
+    def _scatter(self, op: str, rows, values=None) -> dict:
+        rows = [list(map(int, r)) for r in rows]
+        if not rows:
+            raise ValueError(f"/{op} needs non-empty 'rows'")
+        owner = self.shard_of(rows)
+        calls, touched = [], []
+        for s, sh in enumerate(self.shards):
+            idx = np.nonzero(owner == s)[0]
+            if not idx.size:
+                continue
+            doc = {"rows": [rows[int(i)] for i in idx]}
+            if values is not None:
+                doc["values"] = [float(values[int(i)]) for i in idx]
+            calls.append((sh.writer, f"/{op}", doc))
+            touched.append(s)
+        res = self._fan(calls)
+        svs = [0] * len(self.shards)
+        dirty = [0] * len(self.shards)
+        for s, r in zip(touched, res):
+            svs[s] = int(r["stream_version"])
+            dirty[s] = int(r.get("dirty", 0))
+        return {"shards": touched, "stream_versions": svs,
+                "dirty": sum(dirty)}
+
+    def upsert(self, rows, values=None) -> dict:
+        return self._scatter("upsert", rows, values)
+
+    def delete(self, rows) -> dict:
+        return self._scatter("delete", rows)
+
+    def refresh(self) -> dict:
+        """Synchronous re-mine + swap on every shard; the returned
+        ``shard_versions`` list is the cross-shard write token."""
+        res = self._fan([(sh.writer, "/refresh", {})
+                         for sh in self.shards])
+        vers = [int(r["version"]) for r in res]
+        return {"version": min(vers), "shard_versions": vers,
+                "clusters": sum(int(r["clusters"]) for r in res)}
+
+    # -- health / lifecycle --------------------------------------------------
+
+    def health(self) -> dict:
+        res = self._fan([(c, "/health", None)
+                         for sh in self.shards for c in sh.endpoints()])
+        per_shard, i = [], 0
+        for sh in self.shards:
+            ends = res[i:i + 1 + len(sh.replicas)]
+            i += len(ends)
+            per_shard.append(ends)
+        vers = [min(int(e["version"]) for e in ends)
+                for ends in per_shard]
+        stale = [e.get("staleness_s") for ends in per_shard for e in ends]
+        stale = [s for s in stale if s is not None]
+        return {"role": "router", "version": min(vers),
+                "shard_versions": vers,
+                "stream_version": min(int(ends[0]["stream_version"])
+                                      for ends in per_shard),
+                "clusters": sum(int(ends[0]["clusters"])
+                                for ends in per_shard),
+                "dirty": sum(int(ends[0]["dirty"]) for ends in per_shard),
+                "dirty_clusters": sum(int(ends[0].get("dirty_clusters", 0))
+                                      for ends in per_shard),
+                "staleness_s": max(stale) if stale else None,
+                "shards": len(self.shards),
+                "replicas": [len(sh.replicas) for sh in self.shards]}
+
+    def stats(self) -> dict:
+        res = self._fan([(sh.writer, "/stats", None)
+                         for sh in self.shards])
+        out = self.health()
+        out["sizes"] = res[0].get("sizes")
+        out["shard_stats"] = res
+        return out
+
+    def shutdown_backends(self) -> None:
+        """Best-effort fan-out /shutdown to every backend (replicas
+        first, then writers)."""
+        for sh in self.shards:
+            for c in [*sh.replicas, sh.writer]:
+                try:
+                    c.call("/shutdown", {})
+                except Exception:            # noqa: BLE001 — teardown
+                    pass
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+
+class _RouterHandler(BaseHTTPRequestHandler):
+    def log_message(self, fmt, *args):
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    def _reply(self, doc: dict, status: int = 200) -> None:
+        body = json.dumps(doc).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        router: RouterService = self.server.router
+        try:
+            if self.path == "/health":
+                self._reply(router.health())
+            elif self.path == "/stats":
+                self._reply(router.stats())
+            else:
+                self._reply({"error": f"unknown path {self.path}"}, 404)
+        except TimeoutError as e:
+            self._reply({"error": str(e)}, 504)
+        except (RuntimeError, OSError) as e:
+            self._reply({"error": f"backend failure: {e}"}, 502)
+
+    def do_POST(self):
+        router: RouterService = self.server.router
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            doc = json.loads(self.rfile.read(n) or b"{}")
+        except (ValueError, json.JSONDecodeError) as e:
+            return self._reply({"error": f"bad JSON body: {e}"}, 400)
+        try:
+            t0 = time.perf_counter()
+            if self.path == "/query":
+                if "entities" in doc:
+                    out = router.query_batch(
+                        doc["entities"], mode=doc.get("mode"),
+                        k=int(doc.get("k", 10)),
+                        at_least_version=doc.get("at_least_version"),
+                        timeout=doc.get("timeout"),
+                        include_components=bool(
+                            doc.get("include_components", False)))
+                else:
+                    sig = doc.get("signature")
+                    out = router.query(
+                        entity=doc.get("entity"), mode=doc.get("mode"),
+                        signature=(None if sig is None
+                                   else (int(sig[0]), int(sig[1]))),
+                        k=int(doc.get("k", 10)),
+                        at_least_version=doc.get("at_least_version"),
+                        timeout=doc.get("timeout"),
+                        include_components=bool(
+                            doc.get("include_components", False)))
+                out["server_ms"] = (time.perf_counter() - t0) * 1e3
+                self._reply(out)
+            elif self.path == "/upsert":
+                self._reply(router.upsert(doc.get("rows") or [],
+                                          doc.get("values")))
+            elif self.path == "/delete":
+                self._reply(router.delete(doc.get("rows") or []))
+            elif self.path == "/refresh":
+                self._reply(router.refresh())
+            elif self.path == "/shutdown":
+                if not getattr(self.server, "allow_shutdown", True):
+                    return self._reply({"error": "shutdown disabled"}, 403)
+                if getattr(self.server, "cascade_shutdown", False) or \
+                        doc.get("cascade"):
+                    router.shutdown_backends()
+                self._reply({"ok": True})
+                threading.Thread(target=self.server.shutdown,
+                                 daemon=True).start()
+            else:
+                self._reply({"error": f"unknown path {self.path}"}, 404)
+        except TimeoutError as e:
+            self._reply({"error": str(e)}, 504)
+        except (ValueError, KeyError, IndexError, OverflowError,
+                TypeError) as e:
+            self._reply({"error": str(e)}, 400)
+        except (RuntimeError, OSError) as e:
+            self._reply({"error": f"backend failure: {e}"}, 502)
+
+
+class RouterServer(ThreadingHTTPServer):
+    """HTTP front-end bound to one :class:`RouterService`."""
+    daemon_threads = True
+
+    def __init__(self, router: RouterService, addr=("127.0.0.1", 0),
+                 allow_shutdown: bool = True,
+                 cascade_shutdown: bool = False, verbose: bool = False):
+        super().__init__(addr, _RouterHandler)
+        self.router = router
+        self.allow_shutdown = allow_shutdown
+        self.cascade_shutdown = cascade_shutdown
+        self.verbose = verbose
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+
+def make_router_server(router: RouterService, host: str = "127.0.0.1",
+                       port: int = 0, allow_shutdown: bool = True,
+                       cascade_shutdown: bool = False,
+                       verbose: bool = False) -> RouterServer:
+    """Bind (port 0 = ephemeral; read ``server.port``) without serving;
+    call ``serve_forever()`` — typically on a thread — to go live."""
+    return RouterServer(router, (host, port),
+                        allow_shutdown=allow_shutdown,
+                        cascade_shutdown=cascade_shutdown,
+                        verbose=verbose)

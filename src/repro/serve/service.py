@@ -56,11 +56,15 @@ class Snapshot:
     """One immutable published state; everything a query touches."""
     version: int              # publish counter (1-based, monotonic)
     stream_version: int       # miner writes covered by this snapshot
-    result: Any               # the engine's PipelineResult
+    result: Any               # the engine's PipelineResult (None on a
+                              # shared-memory replica — queries never
+                              # touch it)
     index: ClusterIndex
     querier: R.BatchQuerier   # ranked scalar/batch lookups + signatures
     ages: np.ndarray          # per-cluster age in versions (recency)
     published_at: float       # time.monotonic() at swap
+    published_wall: float = 0.0   # time.time() at swap — cross-process
+                                  # staleness (/health staleness_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +73,37 @@ class QueryResult:
     version: int
     stream_version: int
     hits: Any      # [(ClusterView, score)] — or one such list per entity
+
+
+def snapshot_query(snap: Snapshot, entity: Optional[int] = None,
+                   mode: Optional[int] = None,
+                   signature: Optional[Tuple[int, int]] = None,
+                   k: int = 10) -> List[Tuple[ClusterView, float]]:
+    """Ranked lookup against one snapshot — the query logic shared by
+    the in-process service and shared-memory replica readers
+    (``serve.shm.ReplicaService``), so both answer bit-identically.
+
+    ``signature=(lo, hi)``: exact resolution (≤ 1 hit, score attached).
+    ``entity=e [, mode=m]``: top-``k`` by the snapshot's scores.
+    Neither: the snapshot's global top-``k``."""
+    if signature is not None:
+        row = int(snap.querier.lookup_signatures([signature])[0])
+        hits: List[Tuple[ClusterView, float]] = []
+        if row >= 0:
+            view = snap.index.view_at(row)
+            if entity is None or view.contains(int(entity), mode):
+                hits = [(view, float(snap.querier.scores[row]))]
+        return hits
+    if entity is not None:
+        return snap.querier.topk(int(entity), mode, k)
+    return R.top_from_scores(snap.index, snap.querier.scores, k)
+
+
+def snapshot_query_batch(snap: Snapshot, entities,
+                         mode: Optional[int] = None, k: int = 10):
+    """Batched twin of :func:`snapshot_query` (one stacked-window
+    pass; ``hits[i]`` equals the scalar hits for ``entities[i]``)."""
+    return snap.querier.topk_batch(entities, mode, k)
 
 
 class TriclusterService:
@@ -85,10 +120,19 @@ class TriclusterService:
                  refresh_interval: float = 0.25, dirty_threshold: int = 64,
                  policy: R.RankingPolicy = R.DEFAULT_POLICY,
                  min_density: float = 0.0, recency_horizon: int = 512,
+                 delta_index: bool = True, publisher=None,
                  mesh=None, miner=None, **miner_kw):
         self.sizes = tuple(int(s) for s in sizes)
         self.refresh_interval = float(refresh_interval)
         self.dirty_threshold = max(1, int(dirty_threshold))
+        #: delta-maintain the ClusterIndex across swaps (diff by packed
+        #: signature, splice only dirty clusters — serve.clusters);
+        #: False forces a full ``from_result`` rebuild every swap (the
+        #: oracle / benchmark baseline)
+        self.delta_index = bool(delta_index)
+        #: optional ``serve.shm.ShmPublisher`` — every published
+        #: snapshot is mirrored into shared memory for replica readers
+        self.publisher = publisher
         #: versions a vanished signature keeps its first-seen record;
         #: past it the record is evicted (bounded memory on churning
         #: streams) and a re-emerging cluster counts as fresh again
@@ -118,6 +162,11 @@ class TriclusterService:
         # result; the streaming snapshot already is one
         self._mine = getattr(self.miner, "serving_snapshot",
                              getattr(self.miner, "snapshot"))
+        # per-snapshot dirty-signature sets (core.streaming /
+        # core.distributed): surfaces the delta-index workload as the
+        # ``dirty_clusters`` backlog in stats//health
+        if hasattr(self.miner, "track_dirty_sigs"):
+            self.miner.track_dirty_sigs = True
         self._ingest = getattr(self.miner, "ingest", None) or self.miner.add
         self._wlock = threading.Lock()      # miner store + dirty counter
         self._remine_lock = threading.Lock()  # one re-mine at a time
@@ -130,7 +179,9 @@ class TriclusterService:
         self._wake = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._stats = {"writes": 0, "publishes": 0, "mine_errors": 0,
-                       "last_mine_ms": 0.0, "total_mine_ms": 0.0}
+                       "last_mine_ms": 0.0, "total_mine_ms": 0.0,
+                       "delta_builds": 0, "full_builds": 0,
+                       "last_index_build_ms": 0.0, "publish_errors": 0}
 
     # -- writer path ---------------------------------------------------------
 
@@ -144,6 +195,11 @@ class TriclusterService:
             self._stats["writes"] += 1
             v = self.miner.stream_version
         self._wake.set()
+        if self.publisher is not None:
+            try:                       # advisory backlog slot (no swap)
+                self.publisher.update_dirty(self._dirty)
+            except Exception:          # noqa: BLE001 — never fail a write
+                pass
         return v
 
     def add(self, rows, values=None) -> int:
@@ -171,12 +227,29 @@ class TriclusterService:
         snap = self._snap
         return 0 if snap is None else snap.version
 
+    @property
+    def dirty_clusters(self) -> int:
+        """Clusters whose signature changed at the last snapshot (the
+        miner's per-snapshot dirty-signature set — the delta-index
+        workload)."""
+        return int(getattr(self.miner, "last_dirty_sigs", 0))
+
+    def staleness_s(self) -> float:
+        """Seconds since the current snapshot was published (inf before
+        the first publish) — the /health freshness signal."""
+        snap = self._snap
+        if snap is None:
+            return float("inf")
+        return max(0.0, time.monotonic() - snap.published_at)
+
     def stats(self) -> dict:
         out = dict(self._stats)
         snap = self._snap
         out.update(version=self.version, dirty=self._dirty,
                    stream_version=self.miner.stream_version,
                    clusters=0 if snap is None else len(snap.index),
+                   dirty_clusters=self.dirty_clusters,
+                   staleness_s=self.staleness_s(),
                    sizes=list(self.sizes))
         return out
 
@@ -203,30 +276,64 @@ class TriclusterService:
                 self._dirty = 0
             mine_ms = (time.perf_counter() - t0) * 1e3
             # index + ranking build off the writer path: writes land
-            # freely while we stack windows host-side
-            index = ClusterIndex.from_result(result,
-                                             min_density=self.min_density)
+            # freely while we stack windows host-side.  Delta path: diff
+            # against the previous snapshot's index by packed signature
+            # and splice only dirty clusters — O(changed), the
+            # swap-critical-path optimisation; full from_result stays
+            # the oracle (and the fallback for the first snapshot)
+            t1 = time.perf_counter()
+            prev = self._snap
+            if (self.delta_index and prev is not None
+                    and prev.index.supports_delta):
+                index = ClusterIndex.delta_from_result(
+                    prev.index, result, min_density=self.min_density)
+                self._stats["delta_builds"] += 1
+            else:
+                index = ClusterIndex.from_result(
+                    result, min_density=self.min_density)
+                self._stats["full_builds"] += 1
+            self._stats["last_index_build_ms"] = \
+                (time.perf_counter() - t1) * 1e3
             version = (0 if self._snap is None else self._snap.version) + 1
             fs = self._first_seen
             ages = []
-            for c in index.clusters:
-                rec = fs.get(c.signature)
+            # signature keys straight off the stats arrays — this loop
+            # must not force the index's lazy view list (that would
+            # re-introduce the O(clusters) build the delta path removed)
+            for sig in index.signature_keys():
+                rec = fs.get(sig)
                 if rec is None:
-                    fs[c.signature] = rec = [version, version]
+                    fs[sig] = rec = [version, version]
                 else:
                     rec[1] = version
                 ages.append(version - rec[0])
             ages = np.asarray(ages, np.float64)
             # evict first-seen records of long-vanished signatures
             # (sweep only when the map clearly outgrew the live set)
-            if len(fs) > 2 * len(index.clusters) + 1024:
+            if len(fs) > 2 * len(index) + 1024:
                 cut = version - self.recency_horizon
                 for sig in [s for s, r in fs.items() if r[1] < cut]:
                     del fs[sig]
             querier = R.BatchQuerier(index, self.policy, ages)
             snap = Snapshot(version=version, stream_version=covered,
                             result=result, index=index, querier=querier,
-                            ages=ages, published_at=time.monotonic())
+                            ages=ages, published_at=time.monotonic(),
+                            published_wall=time.time())
+            # mirror into shared memory BEFORE the in-process swap: by
+            # the time a writer-side call (refresh/upsert+wait) returns
+            # version v, the shm side already carries v — so a client
+            # that then demands at_least_version=v from a replica can
+            # only block on the replica's attach latency, never on an
+            # unpublished segment
+            if self.publisher is not None:
+                try:
+                    self.publisher.publish_snapshot(snap, sizes=self.sizes)
+                    self.publisher.update_dirty(self._dirty)
+                except Exception as e:        # noqa: BLE001 — serving
+                    # must outlive a publish failure; replicas just stay
+                    # on the previous segment
+                    self._stats["publish_errors"] += 1
+                    self._stats["last_publish_error"] = repr(e)
             self._last_mine = time.monotonic()
             self._stats["publishes"] += 1
             self._stats["last_mine_ms"] = mine_ms
@@ -325,17 +432,8 @@ class TriclusterService:
         attached).  ``entity=e [, mode=m]``: top-``k`` by the ranking
         policy.  Neither: the snapshot's global top-``k``."""
         snap = self.snapshot(at_least_version, timeout)
-        if signature is not None:
-            row = int(snap.querier.lookup_signatures([signature])[0])
-            hits: List[Tuple[ClusterView, float]] = []
-            if row >= 0:
-                view = snap.index.clusters[row]
-                if entity is None or view.contains(int(entity), mode):
-                    hits = [(view, float(snap.querier.scores[row]))]
-        elif entity is not None:
-            hits = snap.querier.topk(int(entity), mode, k)
-        else:
-            hits = R.top_clusters(snap.index, k, self.policy, snap.ages)
+        hits = snapshot_query(snap, entity=entity, mode=mode,
+                              signature=signature, k=k)
         return QueryResult(snap.version, snap.stream_version, hits)
 
     def query_batch(self, entities, mode: Optional[int] = None,
@@ -347,4 +445,4 @@ class TriclusterService:
         and equals the scalar ``query(entity=entities[i])`` hits."""
         snap = self.snapshot(at_least_version, timeout)
         return QueryResult(snap.version, snap.stream_version,
-                           snap.querier.topk_batch(entities, mode, k))
+                           snapshot_query_batch(snap, entities, mode, k))

@@ -1,0 +1,525 @@
+"""Zero-copy snapshot bundles over POSIX shared memory (DESIGN.md §8).
+
+One serving process mines and builds indexes; N *replica reader*
+processes answer queries.  The bridge between them is this module: the
+writer publishes every snapshot's stacked arrays — membership words,
+component members/bounds, packed signatures, scores, per-row stats —
+into a ``multiprocessing.shared_memory`` segment, and replicas map the
+segment and serve straight out of it (``np.frombuffer`` views, no
+copy, no deserialisation).
+
+**Memory model.**  Two kinds of segments per ``prefix``:
+
+* ``{prefix}.ctl`` — a fixed 4 KiB *control block*, created once by the
+  writer.  It names the current data segment and carries the snapshot
+  version, stream version, publish wall-time and cluster count behind a
+  *seqlock*: the writer bumps a sequence word to odd, rewrites the
+  payload, bumps it to even; a reader re-reads until it observes the
+  same even sequence before and after — so a reader never acts on a
+  torn control block.  A separate ``dirty`` slot (the write backlog)
+  sits outside the seqlock payload and is updated on every write
+  without bumping the sequence.
+* ``{prefix}.v{version}`` — one immutable *data segment per snapshot*:
+  an 8-byte header length, a JSON manifest (array names / dtypes /
+  shapes / offsets + snapshot meta), then the arrays, 64-byte aligned.
+  Data segments are never mutated after the control block names them —
+  single-reference swap semantics, exactly like the in-process
+  ``TriclusterService`` snapshot swap.
+
+**Reclamation.**  After publishing version ``v`` the writer *unlinks*
+segment ``v-1``.  POSIX keeps the memory alive until the last process
+unmaps it, so replicas still serving ``v-1`` are never torn; the
+segment is physically reclaimed when the last reader drops its mapping
+(replicas drop theirs when they attach ``v``; CPython refcounting frees
+the old mapping as soon as no in-flight query holds a view).  A replica
+that loses the attach race (control named ``v`` but the writer already
+moved on and unlinked it) just re-reads the control block and retries.
+
+Replicas must *not* let Python's ``resource_tracker`` adopt attached
+segments — it would unlink live segments when the replica exits — so
+:func:`attach_segment` detaches them from tracking (``track=False``
+where available, else explicit unregister).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import threading
+import time
+from multiprocessing import shared_memory
+from typing import Optional
+
+import numpy as np
+
+CTL_SIZE = 4096
+_CTL_FMT = "<QQQdQQ"     # seq, version, stream_version, wall, n, name_len
+_CTL_PAYLOAD = struct.calcsize(_CTL_FMT)
+_NAME_OFF = _CTL_PAYLOAD
+_NAME_MAX = 200
+_DIRTY_OFF = 512         # outside the seqlock payload (see module doc)
+_ALIGN = 64
+
+
+class _Segment(shared_memory.SharedMemory):
+    """SharedMemory whose ``close`` tolerates live zero-copy views:
+    ``mmap.close`` refuses while exported buffers exist (in-flight
+    queries still reading the old snapshot), and that is fine — the
+    mapping is freed when the last view dies."""
+
+    def close(self):                         # also guards __del__
+        try:
+            super().close()
+        except BufferError:
+            pass
+
+
+def attach_segment(name: str) -> shared_memory.SharedMemory:
+    """Attach an existing segment *without* resource-tracker ownership
+    (the writer owns unlink; a tracked reader would destroy live
+    segments on exit)."""
+    try:
+        return _Segment(name=name, track=False)
+    except TypeError:                        # Python < 3.13: no track=
+        seg = _Segment(name=name)
+        try:
+            from multiprocessing import resource_tracker
+            resource_tracker.unregister(seg._name, "shared_memory")
+        except Exception:                    # noqa: BLE001 — advisory
+            pass
+        return seg
+
+
+def _unlink_segment(seg: shared_memory.SharedMemory) -> None:
+    """Unlink with a balanced resource-tracker state: re-register first
+    (a set add — idempotent), so unlink's unregister never targets an
+    absent name (which the tracker process logs as a KeyError when a
+    same-process reader already unregistered it)."""
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.register(seg._name, "shared_memory")
+    except Exception:                        # noqa: BLE001 — advisory
+        pass
+    try:
+        seg.unlink()
+    except FileNotFoundError:
+        pass
+
+
+def _pad(n: int) -> int:
+    return (n + _ALIGN - 1) // _ALIGN * _ALIGN
+
+
+class SnapshotBundle:
+    """One mapped data segment: zero-copy array views + snapshot meta.
+    Holds the segment mapping alive exactly as long as any of its
+    arrays (or itself) is referenced."""
+
+    def __init__(self, seg: shared_memory.SharedMemory):
+        self._seg = seg
+        (hlen,) = struct.unpack_from("<Q", seg.buf, 0)
+        head = json.loads(bytes(seg.buf[8:8 + hlen]))
+        self.meta: dict = head["meta"]
+        self.version: int = int(self.meta["version"])
+        self.stream_version: int = int(self.meta["stream_version"])
+        self.published_wall: float = float(self.meta["published_wall"])
+        self.arrays: dict = {}
+        for a in head["arrays"]:
+            arr = np.frombuffer(seg.buf, dtype=np.dtype(a["dtype"]),
+                                count=int(np.prod(a["shape"], dtype=int)),
+                                offset=a["offset"]).reshape(a["shape"])
+            arr.flags.writeable = False
+            self.arrays[a["name"]] = arr
+
+
+class ShmPublisher:
+    """Writer side: owns the control block, publishes one data segment
+    per snapshot, unlinks the previous one after each swap."""
+
+    def __init__(self, prefix: str):
+        if len(prefix) + 16 > _NAME_MAX:
+            raise ValueError(f"prefix too long: {prefix!r}")
+        self.prefix = prefix
+        self._seq = 0
+        self._data: Optional[shared_memory.SharedMemory] = None
+        try:
+            self._ctl = _Segment(
+                name=f"{prefix}.ctl", create=True, size=CTL_SIZE)
+        except FileExistsError:
+            # a stale control block from a dead writer: adopt and reset
+            self._ctl = attach_segment(f"{prefix}.ctl")
+        self._ctl.buf[:CTL_SIZE] = b"\0" * CTL_SIZE
+
+    def publish(self, version: int, stream_version: int,
+                arrays: dict, meta: Optional[dict] = None,
+                published_wall: Optional[float] = None) -> str:
+        """Write ``arrays`` into a fresh ``{prefix}.v{version}`` segment
+        and swing the control block to it; then unlink the previous
+        segment (readers still mapping it keep it alive)."""
+        wall = time.time() if published_wall is None else published_wall
+        manifest, offset = [], 0
+        items = [(k, np.ascontiguousarray(v)) for k, v in arrays.items()]
+        # header size depends on offsets which depend on header size:
+        # reserve generously once, then lay arrays after it
+        probe = json.dumps({"meta": dict(meta or {}), "arrays": [
+            {"name": k, "dtype": str(v.dtype), "shape": list(v.shape),
+             "offset": 0} for k, v in items]}).encode()
+        data_off = _pad(8 + len(probe) + 4096)
+        offset = data_off
+        for k, v in items:
+            manifest.append({"name": k, "dtype": str(v.dtype),
+                             "shape": list(v.shape), "offset": offset})
+            offset = _pad(offset + v.nbytes)
+        m = dict(meta or {})
+        m.update(version=int(version), stream_version=int(stream_version),
+                 published_wall=wall)
+        head = json.dumps({"meta": m, "arrays": manifest}).encode()
+        if 8 + len(head) > data_off:
+            raise ValueError("header overflow")          # 4 KiB slack
+        name = f"{self.prefix}.v{int(version)}"
+        seg = _Segment(name=name, create=True,
+                       size=max(offset, data_off + 1))
+        struct.pack_into("<Q", seg.buf, 0, len(head))
+        seg.buf[8:8 + len(head)] = head
+        for spec, (_, v) in zip(manifest, items):
+            o = spec["offset"]
+            seg.buf[o:o + v.nbytes] = v.tobytes()
+        self._swing(version, stream_version, wall,
+                    int(arrays.get("packed_sigs", np.zeros(0)).shape[0]),
+                    name)
+        prev, self._data = self._data, seg
+        if prev is not None:
+            prev.close()
+            _unlink_segment(prev)
+        return name
+
+    def publish_snapshot(self, snap, sizes=None) -> str:
+        """Publish a ``serve.service.Snapshot`` whose index carries the
+        stacked arrays (``supports_delta``)."""
+        idx = snap.index
+        if not idx.supports_delta:
+            raise ValueError("index lacks stacked arrays — build it "
+                             "with from_result/delta_from_result")
+        arrays = {
+            "packed_sigs": idx.packed_sigs,
+            "any_pairs": idx.any_pairs,
+            "scores": snap.querier.scores,
+            "ages": np.asarray(snap.ages, np.float64),
+            # straight off the index's stats arrays — publishing must
+            # not force the lazy view list
+            "density": np.asarray(idx.density, np.float64),
+            "gen_count": np.asarray(idx.gen_count, np.int64),
+            "volume": np.asarray(idx.volume, np.float64),
+        }
+        for k in range(len(idx.mode_pairs)):
+            arrays[f"mode_pairs_{k}"] = idx.mode_pairs[k]
+            arrays[f"comp_ents_{k}"] = idx.comp_ents[k]
+            arrays[f"comp_bounds_{k}"] = idx.comp_bounds[k]
+        meta = {"n_modes": len(idx.mode_pairs),
+                "sizes": [] if sizes is None else [int(s) for s in sizes]}
+        return self.publish(snap.version, snap.stream_version, arrays,
+                            meta=meta,
+                            published_wall=getattr(snap, "published_wall",
+                                                   None))
+
+    def _swing(self, version, stream_version, wall, n, name) -> None:
+        nb = name.encode()
+        self._seq += 1                                   # odd: writing
+        struct.pack_into("<Q", self._ctl.buf, 0, self._seq)
+        struct.pack_into(_CTL_FMT, self._ctl.buf, 0, self._seq,
+                         int(version), int(stream_version), float(wall),
+                         int(n), len(nb))
+        self._ctl.buf[_NAME_OFF:_NAME_OFF + len(nb)] = nb
+        self._seq += 1                                   # even: stable
+        struct.pack_into("<Q", self._ctl.buf, 0, self._seq)
+
+    def update_dirty(self, dirty: int) -> None:
+        """Advisory write-backlog slot; no seqlock bump (see module
+        doc), so replicas surface it without re-attaching anything."""
+        struct.pack_into("<Q", self._ctl.buf, _DIRTY_OFF, int(dirty))
+
+    def close(self, unlink: bool = True) -> None:
+        if self._data is not None:
+            self._data.close()
+            if unlink:
+                _unlink_segment(self._data)
+            self._data = None
+        self._ctl.close()
+        if unlink:
+            _unlink_segment(self._ctl)
+
+
+class ShmReplica:
+    """Reader side: seqlock-consistent control reads + data-segment
+    attach with swap-race retry.  Thread-safe; meant to back one
+    replica process's query surface (``ReplicaService``)."""
+
+    def __init__(self, prefix: str, connect_timeout: float = 60.0):
+        self.prefix = prefix
+        self._lock = threading.Lock()
+        self._bundle: Optional[SnapshotBundle] = None
+        deadline = time.monotonic() + connect_timeout
+        while True:
+            try:
+                self._ctl = attach_segment(f"{prefix}.ctl")
+                break
+            except FileNotFoundError:
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"no publisher control block {prefix!r}.ctl "
+                        f"after {connect_timeout}s") from None
+                time.sleep(0.05)
+
+    def read_control(self) -> dict:
+        """One seqlock-consistent control read (never torn)."""
+        buf = self._ctl.buf
+        while True:
+            (s1,) = struct.unpack_from("<Q", buf, 0)
+            if s1 % 2:                       # writer mid-swing
+                time.sleep(0.0002)
+                continue
+            seq, ver, sv, wall, n, nlen = struct.unpack_from(
+                _CTL_FMT, buf, 0)
+            name = bytes(buf[_NAME_OFF:_NAME_OFF + nlen]).decode()
+            (dirty,) = struct.unpack_from("<Q", buf, _DIRTY_OFF)
+            (s2,) = struct.unpack_from("<Q", buf, 0)
+            if s1 == s2:
+                return {"version": ver, "stream_version": sv,
+                        "published_wall": wall, "clusters": n,
+                        "segment": name, "dirty": dirty}
+
+    def current(self) -> Optional[SnapshotBundle]:
+        """The bundle for the control block's current snapshot,
+        (re-)attaching on version change; None until the writer has
+        published anything.  Losing the attach race to a concurrent
+        swap (segment already unlinked) retries off the fresh control
+        block."""
+        while True:
+            ctl = self.read_control()
+            if ctl["version"] == 0:
+                return None
+            b = self._bundle
+            if b is not None and b.version == ctl["version"]:
+                return b
+            with self._lock:
+                b = self._bundle
+                if b is not None and b.version == ctl["version"]:
+                    return b
+                try:
+                    seg = attach_segment(ctl["segment"])
+                except FileNotFoundError:
+                    continue                 # swapped under us: retry
+                bundle = SnapshotBundle(seg)
+                # dropping the previous bundle releases our mapping of
+                # the old (already unlinked) segment once the last
+                # in-flight query referencing its arrays completes
+                self._bundle = bundle
+                return bundle
+
+    def wait_version(self, at_least: int,
+                     timeout: Optional[float] = None) -> SnapshotBundle:
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while True:
+            b = self.current()
+            if b is not None and b.version >= at_least:
+                return b
+            if deadline is not None and time.monotonic() >= deadline:
+                cur = 0 if b is None else b.version
+                raise TimeoutError(
+                    f"version {at_least} not published within {timeout}s "
+                    f"(current: {cur})")
+            time.sleep(0.002)
+
+    def close(self) -> None:
+        self._bundle = None
+        self._ctl.close()
+
+
+class ReplicaService:
+    """Read-only query surface of one replica reader process.
+
+    Maps the writer's shared-memory snapshots (:class:`ShmReplica`),
+    reassembles the ``ClusterIndex`` + querier from the zero-copy array
+    views on every version change, and answers ``query`` /
+    ``query_batch`` / ``snapshot`` with exactly the in-process
+    service's semantics (same shared ``snapshot_query`` logic, same
+    freshness modes) — so ``serve.protocol.make_server`` serves a
+    replica unchanged, minus the write routes (``read_only``)."""
+
+    read_only = True
+
+    def __init__(self, prefix: str, poll_interval: float = 0.005,
+                 connect_timeout: float = 60.0):
+        self.replica = ShmReplica(prefix, connect_timeout=connect_timeout)
+        self.poll_interval = float(poll_interval)
+        self._cv = threading.Condition()
+        self._snap = None
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._stats = {"attaches": 0, "attach_errors": 0,
+                       "last_attach_ms": 0.0}
+
+    # -- snapshot maintenance ------------------------------------------------
+
+    def _build(self, bundle: SnapshotBundle):
+        from . import ranking as R
+        from .clusters import ClusterIndex
+        from .service import Snapshot
+        t0 = time.perf_counter()
+        n_modes = int(bundle.meta.get("n_modes", 0))
+        a = bundle.arrays
+        idx = ClusterIndex.from_arrays(
+            a["packed_sigs"],
+            [a[f"mode_pairs_{k}"] for k in range(n_modes)],
+            [a[f"comp_ents_{k}"] for k in range(n_modes)],
+            [a[f"comp_bounds_{k}"] for k in range(n_modes)],
+            a["any_pairs"], a["density"], a["gen_count"], a["volume"])
+        querier = R.BatchQuerier(idx, scores=a["scores"])
+        snap = Snapshot(version=bundle.version,
+                        stream_version=bundle.stream_version,
+                        result=None, index=idx, querier=querier,
+                        ages=a["ages"], published_at=time.monotonic(),
+                        published_wall=bundle.published_wall)
+        self._stats["attaches"] += 1
+        self._stats["last_attach_ms"] = (time.perf_counter() - t0) * 1e3
+        return snap
+
+    def _maybe_attach(self) -> None:
+        snap = self._snap
+        ctl = self.replica.read_control()
+        if ctl["version"] == 0 or (snap is not None
+                                   and snap.version >= ctl["version"]):
+            return
+        bundle = self.replica.current()
+        if bundle is None or (snap is not None
+                              and bundle.version <= snap.version):
+            return
+        snap = self._build(bundle)
+        with self._cv:
+            self._snap = snap                # the replica's atomic swap
+            self._cv.notify_all()
+
+    def _loop(self) -> None:
+        while not self._stop_evt.is_set():
+            try:
+                self._maybe_attach()
+            except Exception as e:           # noqa: BLE001 — keep
+                # serving the previous snapshot on any attach failure
+                self._stats["attach_errors"] += 1
+                self._stats["last_attach_error"] = repr(e)
+            self._stop_evt.wait(self.poll_interval)
+
+    def start(self, first_snapshot_timeout: float = 60.0
+              ) -> "ReplicaService":
+        if self._thread is not None:
+            return self
+        deadline = time.monotonic() + first_snapshot_timeout
+        while self._snap is None:
+            self._maybe_attach()
+            if self._snap is not None:
+                break
+            if time.monotonic() >= deadline:
+                raise TimeoutError("writer published no snapshot within "
+                                   f"{first_snapshot_timeout}s")
+            time.sleep(0.02)
+        self._stop_evt.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="replica-attach", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        self.replica.close()
+
+    def __enter__(self) -> "ReplicaService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- service-compatible reader surface -----------------------------------
+
+    @property
+    def version(self) -> int:
+        snap = self._snap
+        return 0 if snap is None else snap.version
+
+    @property
+    def stream_version(self) -> int:
+        snap = self._snap
+        return 0 if snap is None else snap.stream_version
+
+    @property
+    def dirty(self) -> int:
+        """The writer's advisory write-backlog slot."""
+        try:
+            return int(self.replica.read_control()["dirty"])
+        except Exception:                    # noqa: BLE001
+            return 0
+
+    @property
+    def sizes(self):
+        return tuple(int(s) for s in self._meta_sizes())
+
+    def _meta_sizes(self):
+        b = self.replica._bundle
+        return [] if b is None else b.meta.get("sizes", [])
+
+    def staleness_s(self) -> float:
+        """Cross-process staleness: wall-clock now − the writer's
+        publish wall time."""
+        snap = self._snap
+        if snap is None:
+            return float("inf")
+        return max(0.0, time.time() - snap.published_wall)
+
+    def stats(self) -> dict:
+        out = dict(self._stats)
+        snap = self._snap
+        out.update(role="replica", version=self.version,
+                   stream_version=self.stream_version,
+                   clusters=0 if snap is None else len(snap.index),
+                   dirty=self.dirty, staleness_s=self.staleness_s(),
+                   sizes=list(self._meta_sizes()))
+        return out
+
+    def snapshot(self, at_least_version: Optional[int] = None,
+                 timeout: Optional[float] = None):
+        snap = self._snap
+        if at_least_version is None:
+            if snap is None:
+                raise RuntimeError("no snapshot attached yet")
+            return snap
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._snap is None or \
+                    self._snap.version < at_least_version:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"version {at_least_version} not published "
+                        f"within {timeout}s (current: {self.version})")
+                self._cv.wait(timeout=remaining)
+            return self._snap
+
+    def query(self, entity=None, mode=None, signature=None, k: int = 10,
+              at_least_version: Optional[int] = None,
+              timeout: Optional[float] = None):
+        from .service import QueryResult, snapshot_query
+        snap = self.snapshot(at_least_version, timeout)
+        hits = snapshot_query(snap, entity=entity, mode=mode,
+                              signature=signature, k=k)
+        return QueryResult(snap.version, snap.stream_version, hits)
+
+    def query_batch(self, entities, mode=None, k: int = 10,
+                    at_least_version: Optional[int] = None,
+                    timeout: Optional[float] = None):
+        from .service import QueryResult, snapshot_query_batch
+        snap = self.snapshot(at_least_version, timeout)
+        return QueryResult(snap.version, snap.stream_version,
+                           snapshot_query_batch(snap, entities, mode, k))

@@ -1,0 +1,164 @@
+"""Sharded serving plane (ISSUE 6): delta-maintained ClusterIndex
+property tests, zero-copy shared-memory replica fidelity, and the
+router's ranked-hit merge.
+
+The delta invariant under test is the serving plane's backbone: for ANY
+interleaving of upserts and deletes, ``ClusterIndex.delta_from_result``
+(the O(changed) overlay build) must be *bit-identical* — stacked
+membership words, bounds, stats and per-view components — to a fresh
+``from_result`` rebuild of the same snapshot, including when deltas are
+chained snapshot-over-snapshot and when the self-compaction heuristic
+falls back to a full build mid-sequence.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import StreamingMiner
+from repro.data import synthetic
+from repro.serve.clusters import ClusterIndex
+
+
+def _assert_identical(full: ClusterIndex, delta: ClusterIndex) -> None:
+    """Bit-identity of the two builds: every stacked array, every stat,
+    and (sampled) every per-view component set."""
+    assert np.array_equal(full.packed_sigs, delta.packed_sigs)
+    assert np.array_equal(full.any_pairs, delta.any_pairs)
+    for k in range(full.arity):
+        assert np.array_equal(full.mode_pairs[k], delta.mode_pairs[k])
+        assert np.array_equal(full.comp_ents[k], delta.comp_ents[k])
+        assert np.array_equal(full.comp_bounds[k], delta.comp_bounds[k])
+    for name in ("sig_lo", "sig_hi", "density", "gen_count", "volume"):
+        assert np.array_equal(getattr(full, name), getattr(delta, name)), name
+    step = max(1, len(full) // 17)
+    for row in range(0, len(full), step):
+        va, vb = full.view_at(row), delta.view_at(row)
+        assert va.signature == vb.signature
+        assert tuple(va.components) == tuple(vb.components)
+
+
+@pytest.mark.parametrize("seed", [11, 29])
+def test_delta_bit_identical_random_interleavings(seed):
+    sizes = (60, 40, 20)
+    rng = np.random.default_rng(seed)
+    m = StreamingMiner(sizes, seed=seed)
+    inserted = rng.integers(0, sizes, size=(400, 3)).astype(np.int64)
+    m.upsert(inserted)
+    prev_res = m.snapshot()
+    prev_idx = ClusterIndex.from_result(prev_res)
+    for step in range(6):
+        op = rng.integers(0, 3)
+        if op == 0:        # small novel upsert → few dirty clusters
+            rows = rng.integers(0, sizes, size=(3, 3)).astype(np.int64)
+            m.upsert(rows)
+            inserted = np.concatenate((inserted, rows))
+        elif op == 1:      # delete a few live tuples → tombstones
+            take = rng.integers(0, len(inserted), 4)
+            m.delete(inserted[take])
+        else:              # bulk churn → the compaction fallback path
+            rows = rng.integers(0, sizes, size=(120, 3)).astype(np.int64)
+            m.upsert(rows)
+            inserted = np.concatenate((inserted, rows))
+        res = m.snapshot()
+        full = ClusterIndex.from_result(res)
+        delta = ClusterIndex.delta_from_result(prev_idx, res)
+        # query parity BEFORE any flat-array materialisation: the
+        # overlay answers probes without touching the O(M) arrays
+        for e in (0, 1, int(rng.integers(0, sizes[0]))):
+            for mode in (None, 0, 1, 2):
+                assert np.array_equal(full.entity_rows(e, mode),
+                                      delta.entity_rows(e, mode)), \
+                    (step, e, mode)
+        _assert_identical(full, delta)
+        # chain: the (now materialised) delta is the next base
+        prev_idx = delta
+
+
+def test_delta_chains_without_materialising():
+    """Deltas chained over an *un-materialised* overlay index stay
+    bit-identical — the swap path never needs the flat arrays."""
+    sizes = (50, 30, 15)
+    rng = np.random.default_rng(5)
+    m = StreamingMiner(sizes, seed=5)
+    m.upsert(rng.integers(0, sizes, size=(300, 3)).astype(np.int64))
+    prev = ClusterIndex.from_result(m.snapshot())
+    for _ in range(3):
+        m.upsert(rng.integers(0, sizes, size=(2, 3)).astype(np.int64))
+        res = m.snapshot()
+        prev = ClusterIndex.delta_from_result(prev, res)
+        assert prev.supports_delta
+    full = ClusterIndex.from_result(res)
+    _assert_identical(full, prev)
+
+
+_CHILD = r"""
+import hashlib, json, sys
+from repro.serve.shm import ShmReplica
+
+prefix = sys.argv[1]
+rep = ShmReplica(prefix, connect_timeout=30.0)
+bundle = rep.current()
+out = {"version": bundle.version,
+       "stream_version": bundle.stream_version,
+       "hashes": {k: hashlib.sha256(v.tobytes()).hexdigest()
+                  for k, v in sorted(bundle.arrays.items())}}
+print(json.dumps(out))
+rep.close()
+"""
+
+
+def test_replica_process_observes_exact_writer_arrays(tmp_path):
+    """A separate reader process attaches the published segment and
+    must see byte-for-byte the arrays the writer laid out."""
+    shm = pytest.importorskip("repro.serve.shm")
+    ctx = synthetic.random_context((8, 7, 6), 96, seed=7)
+    m = StreamingMiner(ctx.sizes, seed=7)
+    m.upsert(ctx.tuples)
+    idx = ClusterIndex.from_result(m.snapshot())
+    arrays = {"packed_sigs": idx.packed_sigs, "any_pairs": idx.any_pairs,
+              "density": idx.density}
+    for k in range(idx.arity):
+        arrays[f"mode_pairs_{k}"] = idx.mode_pairs[k]
+        arrays[f"comp_ents_{k}"] = idx.comp_ents[k]
+        arrays[f"comp_bounds_{k}"] = idx.comp_bounds[k]
+    prefix = f"trs-test-{os.getpid()}"
+    pub = shm.ShmPublisher(prefix)
+    try:
+        pub.publish(3, 17, arrays, meta={"n_modes": idx.arity})
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p)
+        proc = subprocess.run([sys.executable, "-c", _CHILD, prefix],
+                              capture_output=True, text=True, timeout=120,
+                              env=env)
+        assert proc.returncode == 0, proc.stderr
+        got = json.loads(proc.stdout)
+    finally:
+        pub.close()
+    assert got["version"] == 3 and got["stream_version"] == 17
+    want = {k: hashlib.sha256(np.ascontiguousarray(v).tobytes()).hexdigest()
+            for k, v in arrays.items()}
+    assert got["hashes"] == want
+
+
+def test_router_merge_ranks_dedups_truncates():
+    from repro.serve.router import _merge_hits
+
+    def hit(sig, score):
+        return {"signature": list(sig), "score": score}
+
+    a = [hit((1, 0), 0.9), hit((2, 0), 0.5), hit((3, 0), 0.1)]
+    b = [hit((4, 0), 0.7), hit((1, 0), 0.9), hit((5, 0), 0.3)]
+    merged = _merge_hits([a, b], k=4)
+    assert [tuple(h["signature"]) for h in merged] \
+        == [(1, 0), (4, 0), (2, 0), (5, 0)]          # global best-first,
+    # the duplicate signature (1,0) kept once (best/first occurrence),
+    # truncated to k
+    scores = [h["score"] for h in merged]
+    assert scores == sorted(scores, reverse=True)
+    assert _merge_hits([[], []], k=3) == []
