@@ -1,0 +1,339 @@
+"""Chaos benchmark: kill-and-restart cycles through a supervised
+sharded serving plane, with a zero-gateway-5xx and bit-identical-
+recovery gate (``serve.faults`` / ``serve.supervise``; DESIGN.md §9).
+
+Topology: 2 shard writer processes (checkpoint+WAL ``recover_dir``
+each) x 2 zero-copy shm replicas each, supervised, fronted by an
+in-process ``RouterService`` — the same plane ``launch/cluster_serve.py
+--shards 2 --replicas 2`` boots.  A seeded :class:`FaultPlan` injects:
+
+* **writer kill** — shard 0's writer hard-crashes (``os._exit(23)``)
+  the moment its stream version reaches a fixed mid-trickle value;
+* **replica kill** — replica (1, 0) hard-crashes on a fixed request
+  ordinal.
+
+While the plane degrades and heals, client threads hammer the router
+and classify every response: ``ok`` (full coverage), ``degraded``
+(partial coverage, explicitly marked), or ``gateway_5xx`` (an error
+surfaced to the caller).  A writer thread trickles upserts at shard 0,
+recording every op; the batch in flight at the kill errors at the
+client but is durable (WAL-before-apply precedes the injected exit),
+so the recorded log is exact.
+
+Gates (asserted here and schema-checked by ``benchmarks/validate.py``):
+
+* ``gateway_5xx == 0`` — failures degrade, they never 502;
+* ``recovery_s < 30`` — supervisor restarts both victims and the
+  router's health shows no down endpoint within the bound;
+* ``bit_identical`` — the recovered writer, quiesced at its final
+  stream version, answers top-k exactly like an uninterrupted
+  in-process control service fed the same preload + recorded ops
+  (same stream version, same signatures, same scores);
+* ``injected exits`` — the supervisor observed exit code 23 (the
+  injected crash, not a bug) for both victims.
+
+Emits the ``serving_faults`` section (``results/chaos.json``).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.data import synthetic
+from repro.serve.faults import KILL_EXIT_CODE, Fault, FaultPlan
+
+from .common import print_table, save_json
+
+TOP_K = 8
+SHARDS = 2
+REPLICAS = 2
+CLIENTS = 4
+PRELOAD_CHUNKS = 4            # preload stream version per writer
+CHECKPOINT_EVERY = 4          # checkpoint covers the preload; trickle
+                              # ops land in the WAL tail
+KILL_AFTER_OPS = 7            # writer dies on the 7th trickle op
+TRICKLE_OPS = 24
+REPLICA_KILL_AT = 10          # request ordinal on replica (1, 0)
+RECOVERY_BOUND_S = 30.0
+
+
+def _fault_plan(seed: int) -> FaultPlan:
+    kill_sv = PRELOAD_CHUNKS + KILL_AFTER_OPS
+    return FaultPlan.build(
+        FaultPlan.kill_writer(0, at_stream_version=kill_sv),
+        Fault("kill", "request", role="replica", shard=1, replica=0,
+              at=REPLICA_KILL_AT),
+        seed=seed)
+
+
+def _wait(cond, timeout: float, what: str) -> float:
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        if cond():
+            return time.monotonic() - t0
+        time.sleep(0.05)
+    raise TimeoutError(f"{what} not reached within {timeout}s")
+
+
+def _control_sigs(n: int, seed: int, ops: list) -> tuple:
+    """The uninterrupted control: a fresh in-process service given
+    shard 0's exact preload and the recorded trickle ops, quiesced —
+    what the recovered writer must match bit-for-bit."""
+    from repro.core import keys as K
+    from repro.core import runs as RS
+    from repro.launch.tricluster import load_dataset
+    from repro.serve.ranking import RankingPolicy
+    from repro.serve.service import TriclusterService
+
+    ctx = load_dataset("movielens", n, seed)
+    plan = K.plan_mode_key(ctx.sizes, 0, with_values=False)
+    own = RS.shard_of_rows(ctx.tuples, plan, SHARDS) == 0
+    tuples = ctx.tuples[own]
+    svc = TriclusterService(ctx.sizes, backend="streaming", theta=0.0,
+                            delta=None, rho_min=0.0, minsup=0,
+                            refresh_interval=60.0,
+                            dirty_threshold=1 << 30,
+                            policy=RankingPolicy(1.0, 0.0, 0.0),
+                            seed=seed or 0x5EED)
+    n_own = tuples.shape[0]
+    step = -(-max(n_own, 1) // PRELOAD_CHUNKS)
+    for lo in range(0, n_own, step):
+        svc.add(tuples[lo:lo + step])
+    sv = svc.miner.stream_version
+    for op in ops:
+        rows = np.asarray(op["rows"], dtype=np.int64)
+        sv = (svc.upsert(rows) if op["op"] == "upsert"
+              else svc.delete(rows))
+    with svc:
+        svc.refresh()
+        hits = svc.query(mode=0, k=TOP_K).hits
+    return int(sv), [(int(v.signature[0]), int(v.signature[1]),
+                      round(float(s), 12)) for v, s in hits]
+
+
+def run(scale: float = 0.02, repeat: int = 1, seed: int = 11,
+        out_name: str = "chaos.json") -> dict:
+    import multiprocessing as mp
+
+    from repro.launch.cluster_serve import _child_replica, _child_writer
+    from repro.serve.router import PooledClient, RouterService, Shard
+    from repro.serve.supervise import Supervisor
+
+    n = max(2_000, int(1_000_000 * scale))
+    sizes = synthetic.movielens_like(n_tuples=4, seed=seed).sizes
+    mp_ctx = mp.get_context("spawn")
+    tmp = tempfile.mkdtemp(prefix="bench-chaos-")
+    plan_json = _fault_plan(seed).to_json()
+    base = {"dataset": "movielens", "n_tuples": n, "seed": seed,
+            "backend": "streaming", "theta": 0.0, "delta": None,
+            "rho_min": 0.0, "minsup": 0, "refresh_interval": 0.05,
+            "dirty_threshold": 8, "policy": (1.0, 0.0, 0.0),
+            "delta_index": True, "preload_chunks": PRELOAD_CHUNKS,
+            "host": "127.0.0.1", "verbose": False, "n_shards": SHARDS,
+            "timeout": 180.0, "checkpoint_every": CHECKPOINT_EVERY,
+            "health_max_staleness": None, "drain_timeout": 5.0,
+            "flag_dir": tmp}
+    # the injected faults are one-shot per run: only the FIRST boot of
+    # each child carries the plan — a restarted victim must not re-die
+    # at the same (replayed) counter value and crash-loop
+    boots: dict = {}
+
+    def factory(name, target, cfg):
+        def make():
+            c = dict(cfg,
+                     fault_plan="" if boots.get(name) else plan_json)
+            boots[name] = boots.get(name, 0) + 1
+            p = mp_ctx.Process(target=target, args=(c,), daemon=True,
+                               name=name)
+            p.start()
+            return p
+        return make
+
+    sup = Supervisor(flag_dir=tmp, restart_backoff=0.2, max_restarts=5)
+    out = {"shards": SHARDS, "replicas": REPLICAS, "clients": CLIENTS,
+           "n_tuples": int(n),
+           "writer_kill_sv": PRELOAD_CHUNKS + KILL_AFTER_OPS,
+           "replica_kill_at": REPLICA_KILL_AT, "seed": int(seed)}
+    router = None
+    try:
+        shard_specs = []
+        for s in range(SHARDS):
+            prefix = f"cb{os.getpid()}s{s}"
+            wcfg = dict(base, shard=s, shm_prefix=prefix,
+                        recover_dir=os.path.join(tmp, f"s{s}"),
+                        port_file=os.path.join(tmp, f"w{s}.port"))
+            os.makedirs(wcfg["recover_dir"], exist_ok=True)
+            sup.add(f"shard-{s}",
+                    factory(f"shard-{s}", _child_writer, wcfg))
+            rfiles = []
+            for r in range(REPLICAS):
+                rcfg = dict(base, shard=s, replica=r, shm_prefix=prefix,
+                            port_file=os.path.join(tmp,
+                                                   f"r{s}.{r}.port"))
+                sup.add(f"replica-{s}.{r}",
+                        factory(f"replica-{s}.{r}", _child_replica,
+                                rcfg))
+                rfiles.append(rcfg["port_file"])
+            shard_specs.append((wcfg["port_file"], rfiles))
+        sup.start()
+
+        from .serving import _wait_port
+        shards = []
+        for wf, rfiles in shard_specs:
+            wp = _wait_port(wf)
+            rps = [_wait_port(rf) for rf in rfiles]
+            shards.append(Shard(f"http://127.0.0.1:{wp}",
+                                [f"http://127.0.0.1:{rp}"
+                                 for rp in rps], timeout=30.0))
+        router = RouterService(shards, timeout=60.0, retry_base=0.05,
+                               retry_cap=0.5, probe_interval=0.2,
+                               probe_timeout=2.0)
+        router.health()                        # plane fully attached
+
+        # ---- client fan-in: classify every routed response ----------
+        stop = threading.Event()
+        counts = {"ok": 0, "degraded": 0, "gateway_5xx": 0}
+        clock = threading.Lock()
+
+        def client(ci: int):
+            rng = np.random.default_rng(seed + 100 + ci)
+            while not stop.is_set():
+                e = int(rng.integers(0, sizes[0]))
+                try:
+                    doc = router.query(entity=e, mode=0, k=TOP_K)
+                    key = "degraded" if doc.get("degraded") else "ok"
+                except Exception:              # noqa: BLE001 — a 5xx
+                    key = "gateway_5xx"
+                with clock:
+                    counts[key] += 1
+        threads = [threading.Thread(target=client, args=(i,),
+                                    daemon=True) for i in range(CLIENTS)]
+        for t in threads:
+            t.start()
+
+        # ---- recorded write trickle at shard 0's writer -------------
+        w0 = shards[0].writer.base_url
+        wcl = PooledClient(w0, timeout=30.0)
+        wrng = np.random.default_rng(seed + 1)
+        ops, t_kill = [], None
+        sv_expect = PRELOAD_CHUNKS
+        i = 0
+        while len(ops) < TRICKLE_OPS:
+            if i % 8 == 7:
+                op = {"op": "delete",
+                      "rows": wrng.integers(0, sizes,
+                                            (1, len(sizes))).tolist()}
+            else:
+                op = {"op": "upsert",
+                      "rows": wrng.integers(0, sizes,
+                                            (4, len(sizes))).tolist()}
+            i += 1
+            try:
+                wcl.call(f"/{op['op']}", {"rows": op["rows"]})
+            except Exception:                  # noqa: BLE001
+                # the killed batch: the client saw the severed
+                # connection, but WAL-before-apply precedes the
+                # injected exit — the op is durable and MUST be part
+                # of the control replay
+                assert t_kill is None, "writer died more than once"
+                t_kill = time.monotonic()
+                ops.append(op)
+                sv_expect += 1
+                # wait out the supervisor restart + WAL replay, then
+                # keep trickling against the recovered writer
+                sup.wait_state("shard-0", ("running",), timeout=30.0)
+                _wait(lambda: _probe_sv(wcl) >= sv_expect, 60.0,
+                      "writer recovery")
+                continue
+            ops.append(op)
+            sv_expect += 1
+            time.sleep(0.02)
+        assert t_kill is not None, \
+            "fault plan never fired: writer survived the trickle"
+
+        # ---- recovery: both victims back, no endpoint down ----------
+        def healthy():
+            h = router.health()
+            return not h.get("down") and not h.get("degraded")
+        t_rec = _wait(healthy, 60.0, "full coverage")
+        recovery_s = time.monotonic() - t_kill
+        _wait(lambda: sup.stats()["children"]["replica-1.0"]["restarts"]
+              >= 1, 60.0, "replica restart")
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+
+        st = sup.stats()["children"]
+        out.update(
+            queries=int(sum(counts.values())), **counts,
+            recovery_s=float(recovery_s), health_settle_s=float(t_rec),
+            writer_restarts=int(st["shard-0"]["restarts"]),
+            writer_exit=st["shard-0"]["last_exit"],
+            replica_restarts=int(st["replica-1.0"]["restarts"]),
+            replica_exit=st["replica-1.0"]["last_exit"],
+            trickle_ops=len(ops),
+            router=dict(router.resilience_stats(), breakers=None))
+
+        # ---- bit-identity: recovered writer vs uninterrupted control
+        wcl.call("/refresh", {})
+        h = wcl.call("/health")
+        got = wcl.call("/query", {"mode": 0, "k": TOP_K})
+        got_sigs = [(int(x["signature"][0]), int(x["signature"][1]),
+                     round(float(x["score"]), 12))
+                    for x in got["hits"]]
+        ctl_sv, ctl_sigs = _control_sigs(n, seed, ops)
+        out.update(stream_version_final=int(h["stream_version"]),
+                   stream_version_control=int(ctl_sv),
+                   bit_identical=bool(got_sigs == ctl_sigs
+                                      and h["stream_version"] == ctl_sv))
+
+        # orderly teardown: stop the monitor FIRST, then let /shutdown
+        # drain the children to clean exits — terminating them early
+        # would SIGTERM mid-drain, which keeps shm segments for a
+        # successor that never comes
+        sup.stop(terminate=False)
+        router.shutdown_backends()
+        _wait(lambda: not any(c["alive"] for c in
+                              sup.stats()["children"].values()),
+              30.0, "children exit")
+    finally:
+        if router is not None:
+            router.close()
+        sup.stop(terminate=True)
+
+    # ---- the gates this benchmark exists for ------------------------
+    assert out["gateway_5xx"] == 0, \
+        f"{out['gateway_5xx']} gateway 5xx leaked through degradation"
+    assert out["writer_exit"] == KILL_EXIT_CODE, out["writer_exit"]
+    assert out["replica_exit"] == KILL_EXIT_CODE, out["replica_exit"]
+    assert out["writer_restarts"] >= 1 and out["replica_restarts"] >= 1
+    assert out["recovery_s"] < RECOVERY_BOUND_S, out["recovery_s"]
+    assert out["bit_identical"], \
+        (out["stream_version_final"], out["stream_version_control"])
+
+    print_table(
+        "serving_faults: supervised kill-and-restart chaos cycle",
+        ["topology", "queries", "ok", "degraded", "5xx", "recovery_s",
+         "restarts", "bit_identical"],
+        [[f"{SHARDS}x{REPLICAS}", out["queries"], out["ok"],
+          out["degraded"], out["gateway_5xx"],
+          f"{out['recovery_s']:.2f}",
+          out["writer_restarts"] + out["replica_restarts"],
+          out["bit_identical"]]])
+    save_json(out_name, {"serving_faults": out})
+    return out
+
+
+def _probe_sv(cl) -> int:
+    try:
+        return int(cl.call("/health")["stream_version"])
+    except Exception:                          # noqa: BLE001 — dead yet
+        return -1
+
+
+if __name__ == "__main__":
+    run(scale=0.01)

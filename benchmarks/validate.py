@@ -54,14 +54,34 @@ SCALE_LOAD_KEYS = {"queries": int, "qps": (int, float), "write_ops": int}
 SCALE_FULL = 0.1
 MIN_DELTA_SPEEDUP = 5.0
 MIN_QPS_RATIO = 2.5
+#: chaos section (``benchmarks/chaos.py``): kill-and-restart cycles
+#: must surface zero gateway 5xx (degradation, never an error page),
+#: recover full coverage inside the bound, restart both injected
+#: victims with the distinctive injected exit code, and answer
+#: bit-identically to the uninterrupted control after recovery.
+FAULTS_KEYS = {"shards": int, "replicas": int, "queries": int,
+               "ok": int, "degraded": int, "gateway_5xx": int,
+               "recovery_s": (int, float), "writer_restarts": int,
+               "replica_restarts": int, "trickle_ops": int,
+               "stream_version_final": int}
+FAULTS_RECOVERY_BOUND_S = 30.0
+FAULTS_KILL_EXIT = 23
 
 
 def validate(doc: dict) -> list[str]:
     errs = []
-    if not isinstance(doc.get("scale"), (int, float)):
+    faults = doc.get("serving_faults")
+    if faults is not None:
+        errs.extend(_validate_serving_faults(faults))
+    # a chaos-only doc (results/chaos.json) carries just the
+    # serving_faults section — the mining-row schema does not apply
+    chaos_only = faults is not None and "rows" not in doc
+    if not chaos_only and not isinstance(doc.get("scale"), (int, float)):
         errs.append("missing/invalid top-level 'scale'")
     rows = doc.get("rows")
     if not isinstance(rows, list) or not rows:
+        if chaos_only:
+            return errs
         return errs + ["'rows' missing or empty"]
     for i, r in enumerate(rows):
         where = f"rows[{i}]"
@@ -258,6 +278,37 @@ def _validate_serving_scale(sec) -> list[str]:
     return errs
 
 
+def _validate_serving_faults(sec) -> list[str]:
+    errs = []
+    if not isinstance(sec, dict):
+        return ["'serving_faults' section is not a dict"]
+    for key, typ in FAULTS_KEYS.items():
+        if not isinstance(sec.get(key), typ) or isinstance(sec.get(key),
+                                                           bool):
+            errs.append(f"serving_faults: bad '{key}' ({sec.get(key)!r})")
+    if sec.get("gateway_5xx") != 0:
+        errs.append(f"serving_faults: {sec.get('gateway_5xx')!r} gateway "
+                    "5xx leaked through the kill-and-restart cycle "
+                    "(failures must degrade, never error)")
+    if sec.get("bit_identical") is not True:
+        errs.append("serving_faults: 'bit_identical' is not True — the "
+                    "recovered writer diverged from the uninterrupted "
+                    "control at the same stream version")
+    rec = sec.get("recovery_s")
+    if isinstance(rec, (int, float)) and rec >= FAULTS_RECOVERY_BOUND_S:
+        errs.append(f"serving_faults: recovery took {rec:.1f}s "
+                    f"(bound {FAULTS_RECOVERY_BOUND_S}s)")
+    for victim in ("writer", "replica"):
+        if isinstance(sec.get(f"{victim}_restarts"), int) \
+                and sec[f"{victim}_restarts"] < 1:
+            errs.append(f"serving_faults: {victim} was never restarted")
+        if sec.get(f"{victim}_exit") != FAULTS_KILL_EXIT:
+            errs.append(f"serving_faults: {victim} exit "
+                        f"{sec.get(f'{victim}_exit')!r} is not the "
+                        f"injected kill ({FAULTS_KILL_EXIT})")
+    return errs
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else os.path.join(RESULTS_DIR,
@@ -274,6 +325,12 @@ def main(argv=None):
             print(f"[validate] {e}")
         print(f"[validate] FAIL: {len(errs)} problem(s) in {path}")
         return 1
+    if "rows" not in doc:                     # chaos-only doc
+        f = doc["serving_faults"]
+        print(f"[validate] OK: serving_faults — {f['queries']} queries, "
+              f"{f['degraded']} degraded, 0 gateway 5xx, recovery "
+              f"{f['recovery_s']:.1f}s, bit_identical={f['bit_identical']}")
+        return 0
     n = len(doc["rows"])
     print(f"[validate] OK: {n} rows, scale={doc['scale']}"
           + (f", packed_speedup={doc['packed_speedup']}"

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # CI entry point: install dev deps, run the tier-1 suite (ROADMAP.md),
-# then three smoke steps:
+# then the smoke steps:
 #   * bench smoke — tiny-scale benchmark run (sort-path comparison,
 #     run-store section, calibration probe, serving load test) whose
 #     results/BENCH_smoke.json must pass the schema gate
@@ -8,6 +8,9 @@
 #   * serve smoke — boot launch/cluster_serve.py on an ephemeral port
 #     and drive it through scalar/batch/top-k/signature queries, an
 #     upsert, a version-advancing refresh and a clean shutdown;
+#   * chaos smoke — benchmarks/chaos.py kill-and-restart cycle through
+#     a supervised 2x2 plane: zero gateway 5xx, bounded recovery,
+#     bit-identical post-recovery answers (serving_faults schema gate);
 #   * trend smoke — render the calibration-normalised cross-PR trend
 #     report from the git history of results/BENCH_mining.json.
 # Usage: scripts/ci.sh [extra pytest args...]
@@ -54,6 +57,20 @@ python -m repro.launch.cluster_serve --smoke-client \
 wait "$SERVE_PID"
 trap - EXIT
 rm -f "$PORT_FILE"
+
+echo "== chaos smoke (supervised kill-and-restart, zero gateway 5xx) =="
+# 2x2 supervised plane; a seeded FaultPlan kills one shard writer
+# mid-trickle (checkpoint+WAL recovery) and one replica (shm
+# re-attach).  Gates: no query surfaces a gateway 5xx, full coverage
+# restored inside the bound, the recovered writer bit-identical to an
+# uninterrupted control — asserted in-run, then schema-gated.
+# smoke output goes to an untracked file (same convention as the
+# bench smoke): the committed full-scale results/chaos.json survives
+python - <<'EOF'
+from benchmarks.chaos import run
+run(scale=0.004, out_name="chaos_smoke.json")
+EOF
+python -m benchmarks.validate results/chaos_smoke.json
 
 echo "== trend smoke (calibration-normalised cross-PR report) =="
 python scripts/render_trend.py --limit 8

@@ -1,4 +1,4 @@
-"""Scan-aware post-optimisation HLO profiler (DESIGN.md §9).
+"""Scan-aware post-optimisation HLO profiler (DESIGN.md §10).
 
 ``compiled.as_text()`` of an SPMD executable is the *per-device* module:
 every shape literal is a shard shape and the SPMD partitioner has already

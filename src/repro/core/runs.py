@@ -513,3 +513,73 @@ class RunStore:
         else:
             store.runs, store.covered = [], 0   # lazy rebuild on absorb
         return store
+
+
+# -- durable checkpoints (crash recovery) -----------------------------------
+
+def save_checkpoint(blob: dict, path: str, meta: Optional[dict] = None
+                    ) -> None:
+    """Persist a :meth:`RunStore.checkpoint` blob to ``path`` as one
+    ``.npz`` (nested run arrays flattened to named entries), written
+    atomically — ``path.tmp`` then ``os.replace`` — so a crash mid-write
+    can never leave a half-checkpoint where a restart would read it.
+    ``meta`` rides along (JSON-encoded) for engine-level counters the
+    blob itself does not carry (e.g. the serving plane's
+    ``stream_version`` / publish version)."""
+    import json as _json
+    import os as _os
+    arrays = {"buffer": np.asarray(blob["buffer"], np.int32),
+              "scalars": np.asarray(
+                  [int(blob["count"]), int(blob.get("covered", 0)),
+                   int(bool(blob.get("incremental", True))),
+                   len(blob.get("runs") or ()),
+                   int(bool(blob.get("with_values", False)))], np.int64)}
+    if blob.get("values") is not None:
+        arrays["values"] = np.asarray(blob["values"], np.float32)
+    if blob.get("alive") is not None:
+        arrays["alive"] = np.asarray(blob["alive"], bool)
+    if "sizes" in blob:
+        arrays["sizes"] = np.asarray(blob["sizes"], np.int64)
+    for ri, r in enumerate(blob.get("runs") or ()):
+        for m, (k, i) in enumerate(zip(r["keys"], r["idx"])):
+            arrays[f"run{ri}_keys{m}"] = np.asarray(k, np.uint64)
+            arrays[f"run{ri}_idx{m}"] = np.asarray(i, np.int32)
+    arrays["meta_json"] = np.frombuffer(
+        _json.dumps(meta or {}).encode(), np.uint8)
+    tmp = f"{path}.tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        _os.fsync(f.fileno())
+    _os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> Tuple[dict, dict]:
+    """Inverse of :func:`save_checkpoint`: returns ``(blob, meta)``
+    ready for :meth:`RunStore.restore`."""
+    import json as _json
+    with np.load(path) as z:
+        count, covered, incremental, n_runs, with_values = (
+            int(v) for v in z["scalars"])
+        blob = {"buffer": z["buffer"], "count": count, "covered": covered,
+                "incremental": bool(incremental),
+                "with_values": bool(with_values)}
+        if "values" in z.files:
+            blob["values"] = z["values"]
+        if "alive" in z.files:
+            blob["alive"] = z["alive"]
+        if "sizes" in z.files:
+            blob["sizes"] = tuple(int(s) for s in z["sizes"])
+        runs = []
+        for ri in range(n_runs):
+            keys, idx = [], []
+            m = 0
+            while f"run{ri}_keys{m}" in z.files:
+                keys.append(z[f"run{ri}_keys{m}"])
+                idx.append(z[f"run{ri}_idx{m}"])
+                m += 1
+            runs.append({"keys": keys, "idx": idx})
+        blob["runs"] = runs
+        meta = _json.loads(bytes(z["meta_json"].tobytes()).decode()
+                           or "{}")
+    return blob, meta

@@ -28,9 +28,39 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import sys
 import tempfile
+import threading
 import time
+
+
+def _load_fault_plan(spec: str):
+    """``--fault-plan`` value: inline JSON, or a path (optionally
+    ``@``-prefixed) to a JSON file.  Returns a FaultPlan or None."""
+    if not spec:
+        return None
+    if spec.startswith("@"):
+        spec = spec[1:]
+    if os.path.exists(spec):
+        with open(spec) as f:
+            spec = f.read()
+    from ..serve.faults import FaultPlan
+    return FaultPlan.from_json(spec)
+
+
+def _install_sigterm(server, flag: dict) -> None:
+    """Graceful SIGTERM: mark the shutdown as supervisor-driven (shm
+    segments are *kept* so a successor can adopt the epoch watermark)
+    and unblock ``serve_forever`` — the caller's ``finally`` then
+    drains, checkpoints and closes."""
+    def _handler(signum, frame):
+        flag["unlink"] = False
+        threading.Thread(target=server.shutdown, daemon=True).start()
+    try:
+        signal.signal(signal.SIGTERM, _handler)
+    except ValueError:                       # not the main thread
+        pass
 
 
 def _serve(args) -> int:
@@ -43,22 +73,32 @@ def _serve(args) -> int:
     policy = RankingPolicy(w_density=args.w_density,
                            w_volume=args.w_volume,
                            w_recency=args.w_recency)
+    plan = _load_fault_plan(args.fault_plan)
+    inj = None if plan is None else plan.for_component("writer", 0)
     svc = TriclusterService(
         ctx.sizes, backend=args.backend, theta=args.theta,
         delta=args.delta, rho_min=args.rho_min, minsup=args.minsup,
         refresh_interval=args.refresh_interval,
         dirty_threshold=args.dirty_threshold, policy=policy,
-        delta_index=not args.no_delta_index, seed=args.seed or 0x5EED)
+        delta_index=not args.no_delta_index, seed=args.seed or 0x5EED,
+        recover_dir=args.recover_dir or None,
+        checkpoint_every=args.checkpoint_every, fault=inj)
     n = ctx.tuples.shape[0]
-    step = -(-n // max(1, args.preload_chunks))
-    for lo in range(0, n, step):
-        svc.add(ctx.tuples[lo:lo + step],
-                None if ctx.values is None or args.delta is None
-                else ctx.values[lo:lo + step])
+    if not svc.recovered:                    # a recovered store already
+        step = -(-n // max(1, args.preload_chunks))  # holds the data
+        for lo in range(0, n, step):
+            svc.add(ctx.tuples[lo:lo + step],
+                    None if ctx.values is None or args.delta is None
+                    else ctx.values[lo:lo + step])
     svc.start()
     server = make_server(svc, host=args.host, port=args.port,
                          allow_shutdown=not args.no_shutdown,
-                         verbose=args.verbose)
+                         verbose=args.verbose,
+                         health_max_staleness=(args.health_max_staleness
+                                               or None),
+                         fault=inj)
+    flag = {"unlink": True}
+    _install_sigterm(server, flag)
     if args.port_file:
         with open(args.port_file, "w") as f:
             f.write(str(server.port))
@@ -72,7 +112,12 @@ def _serve(args) -> int:
     except KeyboardInterrupt:
         pass
     finally:
+        server.drain_inflight(timeout=args.drain_timeout)
         server.server_close()
+        try:
+            svc.final_checkpoint()
+        except Exception:                    # noqa: BLE001 — teardown
+            pass
         svc.stop()
         print("[cluster-serve] stopped", flush=True)
     return 0
@@ -89,21 +134,57 @@ def _wait_port_file(path: str, timeout: float) -> int:
     raise TimeoutError(f"no port in {path} after {timeout}s")
 
 
+def _stable_port(cfg: dict) -> int:
+    """A restarted child must come back on the port the router already
+    holds a client for — reuse the port recorded by the previous
+    incarnation (0 = first boot, ephemeral)."""
+    try:
+        with open(cfg["port_file"]) as f:
+            return int(f.read().strip())
+    except (OSError, ValueError):
+        return 0
+
+
+def _bind_server(make, port: int, retries: int = 40,
+                 delay: float = 0.25):
+    """Bind, retrying EADDRINUSE when rebinding a predecessor's port —
+    its socket may linger for a moment after the crash."""
+    while True:
+        try:
+            return make(port)
+        except OSError:
+            if port == 0 or retries <= 0:
+                raise
+            retries -= 1
+            time.sleep(delay)
+
+
+def _child_injector(cfg: dict, role: str):
+    if not cfg.get("fault_plan"):
+        return None
+    from ..serve.faults import FaultPlan
+    return FaultPlan.from_json(cfg["fault_plan"]).for_component(
+        role, cfg.get("shard", 0), cfg.get("replica", -1))
+
+
 def _child_writer(cfg: dict) -> None:
     """Spawn target: one shard's writer — loads the dataset, keeps only
     the radix range this shard owns, publishes snapshots to shared
     memory (when replicas attach) and serves the write/query HTTP
-    surface on an ephemeral port."""
+    surface.  With a ``recover_dir`` a restart restores the checkpoint,
+    replays the WAL tail and skips the preload — restart *is*
+    recovery."""
     from ..serve.protocol import make_server
     from ..serve.ranking import RankingPolicy
     from ..serve.service import TriclusterService
     from .tricluster import load_dataset
 
+    inj = _child_injector(cfg, "writer")
     ctx = load_dataset(cfg["dataset"], cfg["n_tuples"], cfg["seed"])
     publisher = None
     if cfg["shm_prefix"]:
         from ..serve.shm import ShmPublisher
-        publisher = ShmPublisher(cfg["shm_prefix"])
+        publisher = ShmPublisher(cfg["shm_prefix"], fault=inj)
     svc = TriclusterService(
         ctx.sizes, backend=cfg["backend"], theta=cfg["theta"],
         delta=cfg["delta"], rho_min=cfg["rho_min"], minsup=cfg["minsup"],
@@ -111,53 +192,93 @@ def _child_writer(cfg: dict) -> None:
         dirty_threshold=cfg["dirty_threshold"],
         policy=RankingPolicy(*cfg["policy"]),
         delta_index=cfg["delta_index"], publisher=publisher,
-        seed=cfg["seed"] or 0x5EED)
-    tuples, values = ctx.tuples, ctx.values
-    if cfg["n_shards"] > 1:
-        # deterministic load (same dataset+seed in every writer), so
-        # each writer can compute ownership locally — no coordinator
-        from ..core import keys as K
-        from ..core import runs as RS
-        plan = K.plan_mode_key(ctx.sizes, 0, with_values=False)
-        own = RS.shard_of_rows(tuples, plan,
-                               cfg["n_shards"]) == cfg["shard"]
-        tuples = tuples[own]
-        values = None if values is None else values[own]
-    n = tuples.shape[0]
-    step = -(-max(n, 1) // max(1, cfg["preload_chunks"]))
-    for lo in range(0, n, step):
-        svc.add(tuples[lo:lo + step],
-                None if values is None or cfg["delta"] is None
-                else values[lo:lo + step])
+        seed=cfg["seed"] or 0x5EED,
+        recover_dir=cfg.get("recover_dir") or None,
+        checkpoint_every=cfg.get("checkpoint_every", 64),
+        version_base=(0 if publisher is None
+                      else publisher.resumed_version),
+        fault=inj)
+    if svc.recovered:
+        print(f"[shard-{cfg['shard']}] recovered {svc.recovered}",
+              flush=True)
+    else:
+        tuples, values = ctx.tuples, ctx.values
+        if cfg["n_shards"] > 1:
+            # deterministic load (same dataset+seed in every writer), so
+            # each writer can compute ownership locally — no coordinator
+            from ..core import keys as K
+            from ..core import runs as RS
+            plan = K.plan_mode_key(ctx.sizes, 0, with_values=False)
+            own = RS.shard_of_rows(tuples, plan,
+                                   cfg["n_shards"]) == cfg["shard"]
+            tuples = tuples[own]
+            values = None if values is None else values[own]
+        n = tuples.shape[0]
+        step = -(-max(n, 1) // max(1, cfg["preload_chunks"]))
+        for lo in range(0, n, step):
+            svc.add(tuples[lo:lo + step],
+                    None if values is None or cfg["delta"] is None
+                    else values[lo:lo + step])
     svc.start()
-    server = make_server(svc, host=cfg["host"], port=0,
-                         verbose=cfg["verbose"])
+    server = _bind_server(
+        lambda p: make_server(
+            svc, host=cfg["host"], port=p, verbose=cfg["verbose"],
+            health_max_staleness=cfg.get("health_max_staleness"),
+            fault=inj),
+        _stable_port(cfg))
+    flag = {"unlink": True}
+    _install_sigterm(server, flag)
     with open(cfg["port_file"], "w") as f:
         f.write(str(server.port))
-    print(f"[shard-{cfg['shard']}] |I|={n} version={svc.version} "
+    print(f"[shard-{cfg['shard']}] version={svc.version} "
           f"clusters={svc.stats()['clusters']} port={server.port}",
           flush=True)
     try:
         server.serve_forever()
     finally:
+        server.drain_inflight(timeout=cfg.get("drain_timeout", 5.0))
         server.server_close()
+        try:
+            svc.final_checkpoint()
+        except Exception:                    # noqa: BLE001 — teardown
+            pass
         svc.stop()
         if publisher is not None:
-            publisher.close()
+            # SIGTERM (supervisor restart): keep segments so the
+            # successor adopts the epoch; /shutdown: full unlink
+            publisher.close(unlink=flag["unlink"])
 
 
 def _child_replica(cfg: dict) -> None:
     """Spawn target: one zero-copy replica reader — attaches the
     shard's shared-memory snapshot bundles (never imports jax, never
-    mines) and serves the read-only HTTP surface."""
+    mines) and serves the read-only HTTP surface.  When the stuck-odd
+    seqlock protocol declares the shard's writer dead, drops a restart
+    flag for the supervisor."""
     from ..serve.protocol import make_server
     from ..serve.shm import ReplicaService
 
+    inj = _child_injector(cfg, "replica")
+    on_dead = None
+    if cfg.get("flag_dir"):
+        from ..serve.supervise import write_restart_flag
+
+        def on_dead(err, _cfg=cfg):
+            write_restart_flag(_cfg["flag_dir"],
+                               f"shard-{_cfg['shard']}")
     svc = ReplicaService(cfg["shm_prefix"],
-                         connect_timeout=cfg["timeout"])
+                         connect_timeout=cfg["timeout"],
+                         seqlock_spin_s=cfg.get("seqlock_spin_s", 1.0),
+                         on_writer_dead=on_dead)
     svc.start(first_snapshot_timeout=cfg["timeout"])
-    server = make_server(svc, host=cfg["host"], port=0,
-                         verbose=cfg["verbose"])
+    server = _bind_server(
+        lambda p: make_server(
+            svc, host=cfg["host"], port=p, verbose=cfg["verbose"],
+            health_max_staleness=cfg.get("health_max_staleness"),
+            fault=inj),
+        _stable_port(cfg))
+    flag = {"unlink": True}
+    _install_sigterm(server, flag)
     with open(cfg["port_file"], "w") as f:
         f.write(str(server.port))
     print(f"[replica-{cfg['shard']}.{cfg['replica']}] attached "
@@ -165,19 +286,28 @@ def _child_replica(cfg: dict) -> None:
     try:
         server.serve_forever()
     finally:
+        server.drain_inflight(timeout=cfg.get("drain_timeout", 5.0))
         server.server_close()
         svc.stop()
 
 
 def _serve_topology(args) -> int:
     """Boot ``--shards`` writer processes (+ ``--replicas`` zero-copy
-    readers each) and front them with a router endpoint."""
+    readers each) under a :class:`serve.supervise.Supervisor` and front
+    them with a router endpoint.  A crashed child is restarted with
+    backoff; writers recover their stream from checkpoint+WAL; replicas
+    that detect a dead writer (stuck-odd seqlock) flag it for restart."""
     import multiprocessing as mp
 
     from ..serve.router import RouterService, Shard, make_router_server
+    from ..serve.supervise import Supervisor
 
     mp_ctx = mp.get_context("spawn")          # fork is unsafe under jax
     tmp = tempfile.mkdtemp(prefix="cluster-serve-")
+    recover_base = args.recover_dir or os.path.join(tmp, "recover")
+    plan_json = ""
+    if args.fault_plan:
+        plan_json = _load_fault_plan(args.fault_plan).to_json()
     base_cfg = {
         "dataset": args.dataset, "n_tuples": args.n_tuples,
         "seed": args.seed, "backend": args.backend, "theta": args.theta,
@@ -189,30 +319,40 @@ def _serve_topology(args) -> int:
         "delta_index": not args.no_delta_index,
         "preload_chunks": args.preload_chunks, "host": args.host,
         "verbose": args.verbose, "n_shards": args.shards,
-        "timeout": args.timeout,
+        "timeout": args.timeout, "fault_plan": plan_json,
+        "checkpoint_every": args.checkpoint_every,
+        "health_max_staleness": args.health_max_staleness or None,
+        "drain_timeout": args.drain_timeout,
+        "flag_dir": "" if args.no_supervise else tmp,
     }
-    procs, shard_specs = [], []
+    sup = Supervisor(flag_dir=tmp,
+                     restart_backoff=args.restart_backoff,
+                     max_restarts=args.max_restarts)
+    shard_specs = []
     try:
         for s in range(args.shards):
             prefix = (f"cs{os.getpid()}s{s}" if args.replicas else "")
             wcfg = dict(base_cfg, shard=s, shm_prefix=prefix,
+                        recover_dir=os.path.join(recover_base, f"s{s}"),
                         port_file=os.path.join(tmp, f"w{s}.port"))
-            p = mp_ctx.Process(target=_child_writer, args=(wcfg,),
-                               daemon=True, name=f"shard-{s}")
-            p.start()
-            procs.append(p)
+            os.makedirs(wcfg["recover_dir"], exist_ok=True)
+            sup.add(f"shard-{s}",
+                    lambda cfg=wcfg, s=s: _start_proc(
+                        mp_ctx, _child_writer, cfg, f"shard-{s}"))
             rfiles = []
             for r in range(args.replicas):
                 rcfg = dict(base_cfg, shard=s, replica=r,
                             shm_prefix=prefix,
                             port_file=os.path.join(tmp,
                                                    f"r{s}.{r}.port"))
-                p = mp_ctx.Process(target=_child_replica, args=(rcfg,),
-                                   daemon=True, name=f"replica-{s}.{r}")
-                p.start()
-                procs.append(p)
+                sup.add(f"replica-{s}.{r}",
+                        lambda cfg=rcfg, s=s, r=r: _start_proc(
+                            mp_ctx, _child_replica, cfg,
+                            f"replica-{s}.{r}"))
                 rfiles.append(rcfg["port_file"])
             shard_specs.append((wcfg["port_file"], rfiles))
+        if not args.no_supervise:
+            sup.start()
 
         shards = []
         for wf, rfiles in shard_specs:
@@ -221,7 +361,7 @@ def _serve_topology(args) -> int:
             shards.append(Shard(
                 f"http://{args.host}:{wp}",
                 [f"http://{args.host}:{rp}" for rp in rps]))
-        router = RouterService(shards)
+        router = RouterService(shards, timeout=args.router_timeout)
         server = make_router_server(
             router, host=args.host, port=args.port,
             allow_shutdown=not args.no_shutdown,
@@ -232,9 +372,11 @@ def _serve_topology(args) -> int:
         h = router.health()
         print(f"[cluster-serve] router over {args.shards} shard(s) x "
               f"{args.replicas} replica(s): clusters={h['clusters']} "
-              f"shard_versions={h['shard_versions']}", flush=True)
+              f"shard_versions={h['shard_versions']} "
+              f"supervised={not args.no_supervise}", flush=True)
         print(f"[cluster-serve] listening on "
               f"http://{args.host}:{server.port}", flush=True)
+        _install_sigterm(server, {"unlink": False})
         try:
             server.serve_forever()
         except KeyboardInterrupt:
@@ -242,16 +384,29 @@ def _serve_topology(args) -> int:
         finally:
             server.server_close()
             router.shutdown_backends()
+            # let the children drain to clean exits before the
+            # supervisor terminates anything: SIGTERM mid-drain flips a
+            # writer to keep-segments mode (supervisor-restart
+            # semantics) and would leak its shm namespace on what is a
+            # full plane shutdown
+            deadline = time.monotonic() + 15
+            while time.monotonic() < deadline and any(
+                    c["alive"] for c in
+                    sup.stats()["children"].values()):
+                time.sleep(0.1)
             router.close()
     finally:
-        deadline = time.monotonic() + 10
-        for p in procs:
-            p.join(timeout=max(0.1, deadline - time.monotonic()))
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
-        print("[cluster-serve] stopped", flush=True)
+        sup.stop(terminate=True)
+        print("[cluster-serve] stopped "
+              f"(supervisor: {sup.stats()['children']})", flush=True)
     return 0
+
+
+def _start_proc(mp_ctx, target, cfg: dict, name: str):
+    p = mp_ctx.Process(target=target, args=(cfg,), daemon=True,
+                       name=name)
+    p.start()
+    return p
 
 
 def _smoke_client(args) -> int:
@@ -379,6 +534,30 @@ def main(argv=None):
                     help="disable the POST /shutdown endpoint")
     ap.add_argument("--verbose", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-plan", default="",
+                    help="serve.faults.FaultPlan JSON (inline, or a "
+                         "path / @path) injected into the plane's "
+                         "components — the chaos harness")
+    ap.add_argument("--recover-dir", default="",
+                    help="checkpoint+WAL directory (topology mode: one "
+                         "subdir per shard; default: a run-scoped tmp "
+                         "dir, so supervisor restarts recover)")
+    ap.add_argument("--checkpoint-every", type=int, default=64,
+                    help="persist a RunStore checkpoint each N writes")
+    ap.add_argument("--health-max-staleness", type=float, default=0.0,
+                    help=">0: /health answers 503 once the snapshot is "
+                         "older than this with writes outstanding")
+    ap.add_argument("--drain-timeout", type=float, default=5.0,
+                    help="graceful-shutdown in-flight drain bound (s)")
+    ap.add_argument("--no-supervise", action="store_true",
+                    help="topology mode: no supervisor restarts")
+    ap.add_argument("--restart-backoff", type=float, default=0.2,
+                    help="supervisor restart backoff base (s)")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="crash-loop bound per restart window")
+    ap.add_argument("--router-timeout", type=float, default=15.0,
+                    help="router per-request deadline budget (s) — "
+                         "shard retries + degradation live under this")
     ap.add_argument("--smoke-client", action="store_true",
                     help="run the CI smoke sequence against a running "
                          "server and exit (needs --port or --port-file)")

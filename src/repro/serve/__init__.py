@@ -3,9 +3,10 @@ snapshot-swapped :class:`TriclusterService` (``serve.service``), ranked
 and batched lookups (``serve.ranking``), the cluster-query index with
 delta maintenance (``serve.clusters``), the stdlib HTTP
 endpoint/client (``serve.protocol``), zero-copy shared-memory snapshot
-replicas (``serve.shm``) and the sharded query router
-(``serve.router``) — plus the LM-side batched prefill+decode engine
-(``serve.engine``).
+replicas (``serve.shm``), the sharded query router (``serve.router``),
+the fault-tolerance layer — deterministic fault injection
+(``serve.faults``) and process supervision (``serve.supervise``) —
+plus the LM-side batched prefill+decode engine (``serve.engine``).
 
 ``serve.engine`` is the only jax-dependent module here, so it is
 imported lazily: replica readers and routers import ``repro.serve``
@@ -13,16 +14,21 @@ without paying (or needing) the accelerator stack.
 """
 from .clusters import (ClusterIndex, ClusterView, cluster_query,
                        pack_sig_words)
+from .faults import (KILL_EXIT_CODE, DropRequest, Fault, FaultInjector,
+                     FaultPlan)
 from .protocol import (ClusterClient, ClusterServeServer, health_doc,
                        make_server)
 from .ranking import (BatchQuerier, RankingPolicy, cluster_scores,
                       pack_signatures, rank_views, top_clusters,
                       top_from_scores)
-from .router import (PooledClient, RouterServer, RouterService, Shard,
+from .router import (CircuitBreaker, GatewayTimeout, PooledClient,
+                     RouterServer, RouterService, Shard,
                      make_router_server)
 from .service import (QueryResult, Snapshot, TriclusterService,
                       snapshot_query, snapshot_query_batch)
-from .shm import ReplicaService, ShmPublisher, ShmReplica, SnapshotBundle
+from .shm import (ReplicaService, ShmPublisher, ShmReplica,
+                  SnapshotBundle, WriterDeadError)
+from .supervise import Supervisor, write_restart_flag
 
 __all__ = [
     # cluster-query surface
@@ -36,9 +42,13 @@ __all__ = [
     "ClusterClient", "ClusterServeServer", "make_server", "health_doc",
     # zero-copy shared-memory replicas
     "ShmPublisher", "ShmReplica", "ReplicaService", "SnapshotBundle",
+    "WriterDeadError",
     # sharded query router
     "RouterService", "RouterServer", "Shard", "PooledClient",
-    "make_router_server",
+    "make_router_server", "CircuitBreaker", "GatewayTimeout",
+    # fault tolerance: injection + supervision
+    "FaultPlan", "FaultInjector", "Fault", "DropRequest",
+    "KILL_EXIT_CODE", "Supervisor", "write_restart_flag",
     # LM serving engine (lazy: jax)
     "ServeEngine", "GenerationResult",
 ]

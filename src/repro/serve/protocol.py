@@ -53,6 +53,7 @@ a ``serve.router`` fan-out over several shards) is balanced on two
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import threading
 import time
@@ -61,24 +62,44 @@ from typing import Optional
 from urllib import error as _uerror
 from urllib import request as _urequest
 
+from .faults import DropRequest
 from .service import QueryResult, TriclusterService
 
 
-def health_doc(svc) -> dict:
+def health_doc(svc, max_staleness_s: Optional[float] = None) -> dict:
     """The /health body for any service-shaped object (in-process
-    writer or shared-memory replica)."""
+    writer or shared-memory replica).  ``healthy`` goes False — and the
+    HTTP route answers **503** — when the background thread (miner on a
+    writer, attach loop on a replica) has died, or when
+    ``max_staleness_s`` is set and the served snapshot is older than
+    that with writes outstanding: both mean a balancer must eject the
+    backend, and a 200 would keep it in rotation."""
     snap = getattr(svc, "_snap", None)
     stale = svc.staleness_s() if hasattr(svc, "staleness_s") else None
     if stale is not None and stale == float("inf"):
         stale = None
-    return {"version": svc.version,
-            "stream_version": svc.stream_version,
-            "clusters": 0 if snap is None else len(snap.index),
-            "dirty": svc.dirty,
-            "dirty_clusters": int(getattr(svc, "dirty_clusters", 0)),
-            "staleness_s": stale,
-            "role": ("replica" if getattr(svc, "read_only", False)
-                     else "writer")}
+    alive = bool(getattr(svc, "thread_alive", True))
+    doc = {"version": svc.version,
+           "stream_version": svc.stream_version,
+           "clusters": 0 if snap is None else len(snap.index),
+           "dirty": svc.dirty,
+           "dirty_clusters": int(getattr(svc, "dirty_clusters", 0)),
+           "staleness_s": stale,
+           "thread_alive": alive,
+           "role": ("replica" if getattr(svc, "read_only", False)
+                    else "writer")}
+    healthy, why = True, None
+    if not alive:
+        healthy, why = False, "background thread died"
+    elif (max_staleness_s is not None and stale is not None
+            and stale > max_staleness_s and doc["dirty"] > 0):
+        healthy, why = False, (f"stale snapshot: {stale:.1f}s > "
+                               f"{max_staleness_s:.1f}s with "
+                               f"dirty={doc['dirty']}")
+    doc["healthy"] = healthy
+    if why is not None:
+        doc["error"] = why
+    return doc
 
 
 def hit_doc(view, score: float, include_components: bool = False) -> dict:
@@ -120,16 +141,42 @@ class _Handler(BaseHTTPRequestHandler):
     def _service(self) -> TriclusterService:
         return self.server.service
 
+    def _enter(self) -> bool:
+        """Per-request entry: fire the ``request`` fault site (the
+        chaos plane's drop/slow/hang injection point) and register the
+        request for drain accounting.  Returns False when the request
+        must be severed with no response bytes (an injected torn
+        backend) — the caller just returns."""
+        inj = getattr(self.server, "fault", None)
+        if inj is not None:
+            try:
+                inj.fire("request")
+            except DropRequest:
+                self.close_connection = True
+                return False
+        return True
+
     def do_GET(self):
-        svc = self._service()
-        if self.path == "/health":
-            self._reply(health_doc(svc))
-        elif self.path == "/stats":
-            self._reply(svc.stats())
-        else:
-            self._reply({"error": f"unknown path {self.path}"}, 404)
+        if not self._enter():
+            return
+        with self.server.track_request():
+            svc = self._service()
+            if self.path == "/health":
+                doc = health_doc(
+                    svc, getattr(self.server, "health_max_staleness", None))
+                self._reply(doc, 200 if doc["healthy"] else 503)
+            elif self.path == "/stats":
+                self._reply(svc.stats())
+            else:
+                self._reply({"error": f"unknown path {self.path}"}, 404)
 
     def do_POST(self):
+        if not self._enter():
+            return
+        with self.server.track_request():
+            self._post()
+
+    def _post(self):
         svc = self._service()
         try:
             n = int(self.headers.get("Content-Length") or 0)
@@ -207,28 +254,69 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 class ClusterServeServer(ThreadingHTTPServer):
-    """HTTP front-end bound to one :class:`TriclusterService`."""
+    """HTTP front-end bound to one :class:`TriclusterService`.
+
+    Tracks in-flight requests so a graceful shutdown can *drain*: stop
+    accepting (``shutdown()``), then :meth:`drain_inflight` with a
+    deadline, then checkpoint/close — the SIGTERM sequence in
+    ``launch/cluster_serve.py``."""
     daemon_threads = True
 
     def __init__(self, service: TriclusterService, addr=("127.0.0.1", 0),
-                 allow_shutdown: bool = True, verbose: bool = False):
+                 allow_shutdown: bool = True, verbose: bool = False,
+                 health_max_staleness: Optional[float] = None,
+                 fault=None):
         super().__init__(addr, _Handler)
         self.service = service
         self.allow_shutdown = allow_shutdown
         self.verbose = verbose
+        self.health_max_staleness = health_max_staleness
+        self.fault = fault
+        self._inflight = 0
+        self._idle = threading.Condition()
 
     @property
     def port(self) -> int:
         return self.server_address[1]
 
+    @contextlib.contextmanager
+    def track_request(self):
+        with self._idle:
+            self._inflight += 1
+        try:
+            yield
+        finally:
+            with self._idle:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._idle.notify_all()
+
+    @property
+    def inflight(self) -> int:
+        with self._idle:
+            return self._inflight
+
+    def drain_inflight(self, timeout: float = 10.0) -> bool:
+        """Wait (bounded) for in-flight requests to complete.  Call
+        after ``shutdown()`` so no new requests are being accepted;
+        returns False if stragglers remain at the deadline (the caller
+        proceeds with teardown anyway — a bounded drain, not a hang)."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout)
+
 
 def make_server(service: TriclusterService, host: str = "127.0.0.1",
                 port: int = 0, allow_shutdown: bool = True,
-                verbose: bool = False) -> ClusterServeServer:
+                verbose: bool = False,
+                health_max_staleness: Optional[float] = None,
+                fault=None) -> ClusterServeServer:
     """Bind (port 0 = ephemeral; read ``server.port``) without serving;
     call ``serve_forever()`` — typically on a thread — to go live."""
     return ClusterServeServer(service, (host, port),
-                              allow_shutdown=allow_shutdown, verbose=verbose)
+                              allow_shutdown=allow_shutdown, verbose=verbose,
+                              health_max_staleness=health_max_staleness,
+                              fault=fault)
 
 
 def _version_token(v):
@@ -247,7 +335,8 @@ class ClusterClient:
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
 
-    def _call(self, path: str, doc: Optional[dict] = None) -> dict:
+    def _call(self, path: str, doc: Optional[dict] = None,
+              accept_statuses: tuple = ()) -> dict:
         req = _urequest.Request(
             self.base_url + path,
             data=None if doc is None else json.dumps(doc).encode(),
@@ -258,13 +347,22 @@ class ClusterClient:
                 return json.loads(r.read())
         except _uerror.HTTPError as e:
             try:
-                msg = json.loads(e.read()).get("error", str(e))
+                body = json.loads(e.read())
             except Exception:
-                msg = str(e)
+                body = None
+            if e.code in accept_statuses and isinstance(body, dict):
+                body["http_status"] = e.code
+                return body
+            msg = (body.get("error", str(e))
+                   if isinstance(body, dict) else str(e))
             raise RuntimeError(f"{path}: {msg}") from None
 
     def health(self) -> dict:
-        return self._call("/health")
+        """The /health doc.  A sick backend (HTTP 503) still returns
+        its body — with ``healthy: false``, the ``error`` reason and
+        ``http_status: 503`` — instead of raising, so balancers and
+        tests can inspect *why* a backend is being ejected."""
+        return self._call("/health", accept_statuses=(503,))
 
     def stats(self) -> dict:
         return self._call("/stats")
@@ -279,7 +377,8 @@ class ClusterClient:
         while time.monotonic() < deadline:
             try:
                 h = self.health()
-                if h.get("version", 0) >= min_version:
+                if h.get("version", 0) >= min_version and \
+                        h.get("healthy", True):
                     return h
                 last = h
             except (OSError, RuntimeError) as e:
@@ -301,6 +400,7 @@ class ClusterClient:
                 h = self.health()
                 stale = h.get("staleness_s")
                 if (h.get("version", 0) >= 1 and h.get("dirty", 0) == 0
+                        and h.get("healthy", True)
                         and stale is not None
                         and stale <= max_staleness_s):
                     return h
@@ -316,8 +416,12 @@ class ClusterClient:
               mode: Optional[int] = None, signature=None, k: int = 10,
               at_least_version: Optional[int] = None,
               timeout: Optional[float] = None,
-              include_components: bool = False) -> dict:
+              include_components: bool = False,
+              require_all: bool = False) -> dict:
         doc = {"k": k, "include_components": include_components}
+        if require_all:
+            # router endpoints only: refuse degraded partial coverage
+            doc["require_all"] = True
         if entity is not None:
             doc["entity"] = int(entity)
         if mode is not None:
@@ -333,9 +437,12 @@ class ClusterClient:
                     k: int = 10,
                     at_least_version: Optional[int] = None,
                     timeout: Optional[float] = None,
-                    include_components: bool = False) -> dict:
+                    include_components: bool = False,
+                    require_all: bool = False) -> dict:
         doc = {"entities": [int(e) for e in entities], "k": k,
                "include_components": include_components}
+        if require_all:
+            doc["require_all"] = True
         if mode is not None:
             doc["mode"] = int(mode)
         if at_least_version is not None:

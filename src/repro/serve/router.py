@@ -35,6 +35,18 @@ The router speaks the same HTTP/JSON dialect as ``serve.protocol`` —
 ``ClusterClient`` works unchanged against a router endpoint — and
 keeps per-worker-thread persistent connections to every backend, so
 its fan-out adds no per-query TCP setup.
+
+**Failure handling** (DESIGN.md §9).  Every backend endpoint carries a
+:class:`CircuitBreaker`; per-shard calls retry with capped exponential
+backoff under one per-request deadline budget, migrating off ejected
+replicas, while a background loop re-probes open circuits with
+/health.  When a shard stays unreachable past its budget, queries
+*degrade*: the router merges the live shards and stamps the response
+``degraded: true`` with a ``coverage`` list of answering shards —
+never a 502 for a partial outage (pass ``require_all`` to restore
+all-or-nothing).  Writes are never degraded: a partially-applied
+scatter would silently lose ranges, so write failures still propagate
+after their retry budget.
 """
 from __future__ import annotations
 
@@ -52,12 +64,97 @@ import http.client
 import numpy as np
 
 
+class GatewayTimeout(TimeoutError):
+    """HTTP 504 from a backend: the backend is *alive* — it answered —
+    but could not satisfy the freshness token in time.  Distinct from a
+    transport ``TimeoutError`` so the retry/circuit-breaker layer does
+    not punish a live backend for a client-requested wait."""
+
+
+class CircuitBreaker:
+    """Per-endpoint ejection: ``threshold`` consecutive transport
+    failures open the circuit for ``cooldown`` seconds (doubling per
+    re-trip, capped), after which exactly one caller at a time gets a
+    half-open probe slot; one success closes it.  Thread-safe — one
+    breaker per endpoint, shared by all router worker threads."""
+
+    def __init__(self, threshold: int = 3, cooldown: float = 0.5,
+                 cooldown_max: float = 8.0):
+        self.threshold = int(threshold)
+        self.cooldown = float(cooldown)
+        self.cooldown_max = float(cooldown_max)
+        self._lock = threading.Lock()
+        self._fails = 0
+        self._cd = self.cooldown
+        self._open_until = 0.0
+        self.trips = 0
+
+    def allow(self) -> bool:
+        """May a request be sent now?  True while closed; when open,
+        True only for the first caller past the cooldown (the half-open
+        probe — the slot is pushed forward so concurrent callers do not
+        stampede a struggling backend)."""
+        with self._lock:
+            if self._fails < self.threshold:
+                return True
+            now = time.monotonic()
+            if now >= self._open_until:
+                self._open_until = now + self._cd
+                return True
+            return False
+
+    def probe_due(self) -> bool:
+        """Like :meth:`allow` but only for *open* circuits — the
+        background re-probe loop's gate (never touches healthy
+        endpoints)."""
+        with self._lock:
+            if self._fails < self.threshold:
+                return False
+            now = time.monotonic()
+            if now < self._open_until:
+                return False
+            self._open_until = now + self._cd
+            return True
+
+    def ok(self) -> None:
+        with self._lock:
+            self._fails = 0
+            self._cd = self.cooldown
+
+    def fail(self) -> None:
+        with self._lock:
+            self._fails += 1
+            if self._fails >= self.threshold:
+                if self._fails == self.threshold:
+                    self.trips += 1
+                self._open_until = time.monotonic() + self._cd
+                self._cd = min(self._cd * 2, self.cooldown_max)
+
+    @property
+    def is_open(self) -> bool:
+        with self._lock:
+            return self._fails >= self.threshold
+
+    def state(self) -> str:
+        with self._lock:
+            if self._fails < self.threshold:
+                return "closed"
+            return ("half-open"
+                    if time.monotonic() >= self._open_until else "open")
+
+
 class PooledClient:
     """Minimal JSON-over-HTTP client with one persistent connection per
-    calling thread (stdlib ``http.client``; reconnects once on a stale
-    keep-alive socket)."""
+    calling thread (stdlib ``http.client``).  A request failing on a
+    *reused* keep-alive socket (backend restarted between requests:
+    ``ConnectionResetError`` / ``BadStatusLine`` / a torn empty
+    response) is retried exactly once on a fresh connection before the
+    backend is declared down; transport timeouts are deadlines and are
+    never retried here.  Carries the endpoint's :class:`CircuitBreaker`
+    (state shared across all threads)."""
 
-    def __init__(self, base_url: str, timeout: float = 30.0):
+    def __init__(self, base_url: str, timeout: float = 30.0,
+                 breaker: Optional[CircuitBreaker] = None):
         base = base_url.rstrip("/")
         if base.startswith("http://"):
             base = base[len("http://"):]
@@ -65,6 +162,7 @@ class PooledClient:
         host, _, port = base.partition(":")
         self.host, self.port = host, int(port or 80)
         self.timeout = timeout
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
         self._local = threading.local()
 
     def _conn(self) -> http.client.HTTPConnection:
@@ -81,17 +179,28 @@ class PooledClient:
             c.close()
         self._local.conn = None
 
-    def call(self, path: str, doc: Optional[dict] = None) -> dict:
+    def call(self, path: str, doc: Optional[dict] = None,
+             timeout: Optional[float] = None) -> dict:
         body = None if doc is None else json.dumps(doc).encode()
         method = "GET" if doc is None else "POST"
+        t = self.timeout if timeout is None else max(0.01, float(timeout))
         for attempt in (0, 1):
             try:
                 c = self._conn()
+                if c.timeout != t:
+                    c.timeout = t
+                    if c.sock is not None:
+                        c.sock.settimeout(t)
                 c.request(method, path, body=body,
                           headers={"Content-Type": "application/json"})
                 r = c.getresponse()
                 data = r.read()
                 break
+            except TimeoutError:
+                # a deadline, not a stale socket: retrying would double
+                # the caller's wait — surface it
+                self._drop()
+                raise
             except (http.client.HTTPException, ConnectionError,
                     OSError):
                 self._drop()
@@ -99,7 +208,7 @@ class PooledClient:
                     raise
         out = json.loads(data) if data else {}
         if r.status == 504:
-            raise TimeoutError(out.get("error", "gateway timeout"))
+            raise GatewayTimeout(out.get("error", "gateway timeout"))
         if r.status >= 400:
             raise RuntimeError(f"{path}: "
                                f"{out.get('error', f'HTTP {r.status}')}")
@@ -108,8 +217,11 @@ class PooledClient:
 
 class Shard:
     """One radix range: a writer endpoint plus its replica readers.
-    Queries round-robin over the replicas (falling back to the writer
-    when there are none); writes always go to the writer."""
+    Queries round-robin over the replicas whose circuit breakers admit
+    traffic (falling back to the writer when none do, and to the
+    round-robin pick as a last resort — a fully-ejected shard still
+    gets its half-open probes through); writes always go to the
+    writer."""
 
     def __init__(self, writer: str, replicas: Sequence[str] = (),
                  timeout: float = 30.0):
@@ -118,9 +230,15 @@ class Shard:
         self._rr = itertools.count()
 
     def reader(self) -> PooledClient:
-        if not self.replicas:
+        cands = self.replicas if self.replicas else [self.writer]
+        start = next(self._rr)
+        for j in range(len(cands)):
+            c = cands[(start + j) % len(cands)]
+            if c.breaker.allow():
+                return c
+        if self.replicas and self.writer.breaker.allow():
             return self.writer
-        return self.replicas[next(self._rr) % len(self.replicas)]
+        return cands[start % len(cands)]
 
     def endpoints(self) -> List[PooledClient]:
         return [self.writer, *self.replicas]
@@ -151,11 +269,18 @@ class RouterService:
     these methods, and they are equally usable in-process."""
 
     def __init__(self, shards: Sequence[Shard], sizes=None,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, retry_base: float = 0.05,
+                 retry_cap: float = 0.5, probe_interval: float = 0.25,
+                 probe_timeout: float = 1.0):
         if not shards:
             raise ValueError("router needs at least one shard")
         self.shards = list(shards)
         self.timeout = timeout
+        #: capped exponential backoff between per-shard retries, all
+        #: under one per-request deadline budget (``timeout``)
+        self.retry_base = float(retry_base)
+        self.retry_cap = float(retry_cap)
+        self.probe_timeout = float(probe_timeout)
         self._pool = ThreadPoolExecutor(
             max_workers=max(2, len(self.shards) * 2),
             thread_name_prefix="router-fan")
@@ -163,6 +288,32 @@ class RouterService:
                                                        for s in sizes)
         self._id_plan = None
         self._lock = threading.Lock()
+        self._stats = {"retries": 0, "degraded_responses": 0,
+                       "shard_failures": 0, "probes": 0,
+                       "probe_recoveries": 0}
+        # background re-probe: open circuits get /health probes so an
+        # ejected backend rejoins without waiting for query traffic to
+        # half-open it
+        self.probe_interval = float(probe_interval)
+        self._stop_probe = threading.Event()
+        self._probe_thread = threading.Thread(
+            target=self._probe_loop, name="router-probe", daemon=True)
+        if self.probe_interval > 0:
+            self._probe_thread.start()
+
+    def _probe_loop(self) -> None:
+        while not self._stop_probe.wait(max(self.probe_interval, 0.01)):
+            for sh in self.shards:
+                for c in sh.endpoints():
+                    if not c.breaker.probe_due():
+                        continue
+                    self._stats["probes"] += 1
+                    try:
+                        c.call("/health", timeout=self.probe_timeout)
+                        c.breaker.ok()
+                        self._stats["probe_recoveries"] += 1
+                    except Exception:        # noqa: BLE001 — stays open
+                        c.breaker.fail()
 
     # -- partitioning --------------------------------------------------------
 
@@ -198,6 +349,46 @@ class RouterService:
                 for c, path, doc in calls]
         return [f.result(timeout=self.timeout + 5) for f in futs]
 
+    def _retrying(self, pick, path: str, doc, budget: float) -> dict:
+        """One logical backend call under a deadline budget: transport
+        failures retry with capped exponential backoff against whatever
+        endpoint ``pick()`` currently favours (breaker-aware, so
+        retries migrate off an ejected replica).  A :class:`GatewayTimeout`
+        (HTTP 504 — live backend, unmet freshness token) and HTTP-level
+        errors propagate immediately: the backend answered."""
+        deadline = time.monotonic() + budget
+        delay = self.retry_base
+        last: Optional[BaseException] = None
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise (last if last is not None
+                       else TimeoutError(f"{path}: retry budget "
+                                         f"({budget:.1f}s) exhausted"))
+            c = pick()
+            try:
+                # per-attempt timeout: the endpoint's own bound, capped
+                # by the remaining budget — one hung backend must not
+                # swallow the whole deadline in a single attempt
+                out = c.call(path, doc, timeout=min(remaining, c.timeout))
+                c.breaker.ok()
+                return out
+            except GatewayTimeout:
+                c.breaker.ok()               # it answered — alive
+                raise
+            except RuntimeError:
+                c.breaker.ok()               # HTTP error from a live
+                raise                        # backend, not a transport
+            except (TimeoutError, ConnectionError,
+                    http.client.HTTPException, OSError) as e:
+                c.breaker.fail()
+                last = e
+            if time.monotonic() + delay >= deadline:
+                raise last
+            self._stats["retries"] += 1
+            time.sleep(delay)
+            delay = min(delay * 2, self.retry_cap)
+
     def _tokens(self, at_least_version) -> List[Optional[int]]:
         n = len(self.shards)
         if at_least_version is None:
@@ -214,7 +405,8 @@ class RouterService:
 
     def query(self, entity=None, mode=None, signature=None, k: int = 10,
               at_least_version=None, timeout=None,
-              include_components: bool = False) -> dict:
+              include_components: bool = False,
+              require_all: bool = False) -> dict:
         doc = {"k": int(k), "include_components": bool(include_components)}
         if entity is not None:
             doc["entity"] = int(entity)
@@ -222,39 +414,80 @@ class RouterService:
             doc["mode"] = int(mode)
         if signature is not None:
             doc["signature"] = [int(signature[0]), int(signature[1])]
-        res = self._fan_query(doc, at_least_version, timeout)
-        hits = _merge_hits([r["hits"] for r in res], int(k))
+        res = self._fan_query(doc, at_least_version, timeout, require_all)
+        hits = _merge_hits([r["hits"] for r in res if r is not None],
+                           int(k))
         return self._doc(res, hits)
 
     def query_batch(self, entities, mode=None, k: int = 10,
                     at_least_version=None, timeout=None,
-                    include_components: bool = False) -> dict:
+                    include_components: bool = False,
+                    require_all: bool = False) -> dict:
         doc = {"entities": [int(e) for e in entities], "k": int(k),
                "include_components": bool(include_components)}
         if mode is not None:
             doc["mode"] = int(mode)
-        res = self._fan_query(doc, at_least_version, timeout)
-        hits = [_merge_hits([r["hits"][i] for r in res], int(k))
+        res = self._fan_query(doc, at_least_version, timeout, require_all)
+        hits = [_merge_hits([r["hits"][i] for r in res if r is not None],
+                            int(k))
                 for i in range(len(doc["entities"]))]
         return self._doc(res, hits)
 
-    def _fan_query(self, doc: dict, at_least_version, timeout) -> list:
+    def _fan_query(self, doc: dict, at_least_version, timeout,
+                   require_all: bool = False) -> list:
+        """Fan a /query to every shard with per-shard retry under the
+        deadline budget.  Returns one response per shard, ``None`` for
+        a shard whose retry budget was exhausted — **degraded partial
+        results**, unless ``require_all`` (then the first shard failure
+        propagates, restoring all-or-nothing).  Every shard down is
+        always an error; a live shard's 504 (unmet freshness token)
+        always propagates — the token was a promise."""
         tokens = self._tokens(at_least_version)
-        calls = []
+        budget = float(timeout) if timeout is not None else self.timeout
+        futs = []
         for sh, tok in zip(self.shards, tokens):
             d = dict(doc)
             if tok is not None:
                 d["at_least_version"] = tok
                 d["timeout"] = timeout
-            calls.append((sh.reader(), "/query", d))
-        return self._fan(calls)
+            futs.append(self._pool.submit(
+                self._retrying, sh.reader, "/query", d, budget))
+        res: List[Optional[dict]] = []
+        first_err: Optional[BaseException] = None
+        for f in futs:
+            try:
+                res.append(f.result(timeout=budget + 5))
+            except GatewayTimeout:
+                raise
+            except Exception as e:           # noqa: BLE001 — transport
+                self._stats["shard_failures"] += 1
+                if first_err is None:
+                    first_err = e
+                res.append(None)
+        if all(r is None for r in res):
+            raise RuntimeError(f"all {len(self.shards)} shards "
+                               f"unreachable: {first_err!r}")
+        if require_all and first_err is not None:
+            raise first_err
+        return res
 
     def _doc(self, res: list, hits) -> dict:
-        vers = [int(r["version"]) for r in res]
-        return {"version": min(vers), "shard_versions": vers,
+        """Merge per-shard responses (``None`` = shard down) into the
+        router doc.  ``coverage`` lists the shards that answered;
+        ``degraded`` flags a partial answer; a down shard reports
+        version 0 in ``shard_versions`` (no read-your-writes guarantee
+        for its range)."""
+        coverage = [s for s, r in enumerate(res) if r is not None]
+        live = [r for r in res if r is not None]
+        degraded = len(coverage) < len(res)
+        if degraded:
+            self._stats["degraded_responses"] += 1
+        vers = [0 if r is None else int(r["version"]) for r in res]
+        return {"version": min(int(r["version"]) for r in live),
+                "shard_versions": vers,
                 "stream_version": min(int(r["stream_version"])
-                                      for r in res),
-                "hits": hits}
+                                      for r in live),
+                "hits": hits, "degraded": degraded, "coverage": coverage}
 
     # -- writes --------------------------------------------------------------
 
@@ -273,7 +506,14 @@ class RouterService:
                 doc["values"] = [float(values[int(i)]) for i in idx]
             calls.append((sh.writer, f"/{op}", doc))
             touched.append(s)
-        res = self._fan(calls)
+        # writes stay all-or-nothing — a partially-applied scatter would
+        # silently lose ranges — but each shard's call retries under the
+        # deadline budget, so a writer mid-restart absorbs the write
+        # once its supervisor brings it back
+        futs = [self._pool.submit(self._retrying,
+                                  (lambda c=c: c), path, doc, self.timeout)
+                for c, path, doc in calls]
+        res = [f.result(timeout=self.timeout + 5) for f in futs]
         svs = [0] * len(self.shards)
         dirty = [0] * len(self.shards)
         for s, r in zip(touched, res):
@@ -300,29 +540,66 @@ class RouterService:
     # -- health / lifecycle --------------------------------------------------
 
     def health(self) -> dict:
-        res = self._fan([(c, "/health", None)
-                         for sh in self.shards for c in sh.endpoints()])
+        """Plane health, tolerant of down backends: an unreachable
+        endpoint becomes a ``down`` entry instead of failing the whole
+        doc (a router that 502s its own /health while a shard restarts
+        would get *itself* ejected).  Raises only when every endpoint
+        of every shard is unreachable."""
+        clients = [(s, c) for s, sh in enumerate(self.shards)
+                   for c in sh.endpoints()]
+        futs = [self._pool.submit(c.call, "/health", None,
+                                  min(self.probe_timeout * 2,
+                                      self.timeout))
+                for _, c in clients]
+        docs: List[Optional[dict]] = []
+        down: List[str] = []
+        for (s, c), f in zip(clients, futs):
+            try:
+                docs.append(f.result(timeout=self.timeout + 5))
+            except Exception:                # noqa: BLE001 — down
+                docs.append(None)
+                down.append(c.base_url)
         per_shard, i = [], 0
         for sh in self.shards:
-            ends = res[i:i + 1 + len(sh.replicas)]
-            i += len(ends)
-            per_shard.append(ends)
-        vers = [min(int(e["version"]) for e in ends)
+            n = 1 + len(sh.replicas)
+            per_shard.append([d for d in docs[i:i + n] if d is not None])
+            i += n
+        live = [ends for ends in per_shard if ends]
+        if not live:
+            raise RuntimeError("all backends unreachable")
+        vers = [min(int(e["version"]) for e in ends) if ends else 0
                 for ends in per_shard]
         stale = [e.get("staleness_s") for ends in per_shard for e in ends]
         stale = [s for s in stale if s is not None]
-        return {"role": "router", "version": min(vers),
+        return {"role": "router",
+                "version": min(v for v, ends in zip(vers, per_shard)
+                               if ends),
                 "shard_versions": vers,
                 "stream_version": min(int(ends[0]["stream_version"])
-                                      for ends in per_shard),
+                                      for ends in live),
                 "clusters": sum(int(ends[0]["clusters"])
-                                for ends in per_shard),
-                "dirty": sum(int(ends[0]["dirty"]) for ends in per_shard),
+                                for ends in live),
+                "dirty": sum(int(ends[0]["dirty"]) for ends in live),
                 "dirty_clusters": sum(int(ends[0].get("dirty_clusters", 0))
-                                      for ends in per_shard),
+                                      for ends in live),
                 "staleness_s": max(stale) if stale else None,
                 "shards": len(self.shards),
-                "replicas": [len(sh.replicas) for sh in self.shards]}
+                "replicas": [len(sh.replicas) for sh in self.shards],
+                "down": down,
+                "coverage": [s for s, ends in enumerate(per_shard)
+                             if ends],
+                "degraded": bool(down)}
+
+    def resilience_stats(self) -> dict:
+        """Router-local failure-handling counters + per-endpoint
+        breaker states (no backend round-trips)."""
+        out = dict(self._stats)
+        out["breakers"] = [
+            {"shard": s, "endpoint": c.base_url,
+             "state": c.breaker.state(), "trips": c.breaker.trips}
+            for s, sh in enumerate(self.shards)
+            for c in sh.endpoints()]
+        return out
 
     def stats(self) -> dict:
         res = self._fan([(sh.writer, "/stats", None)
@@ -330,6 +607,7 @@ class RouterService:
         out = self.health()
         out["sizes"] = res[0].get("sizes")
         out["shard_stats"] = res
+        out["resilience"] = self.resilience_stats()
         return out
 
     def shutdown_backends(self) -> None:
@@ -343,6 +621,9 @@ class RouterService:
                     pass
 
     def close(self) -> None:
+        self._stop_probe.set()
+        if self._probe_thread.is_alive():
+            self._probe_thread.join(timeout=5)
         self._pool.shutdown(wait=False)
 
 
@@ -390,7 +671,8 @@ class _RouterHandler(BaseHTTPRequestHandler):
                         at_least_version=doc.get("at_least_version"),
                         timeout=doc.get("timeout"),
                         include_components=bool(
-                            doc.get("include_components", False)))
+                            doc.get("include_components", False)),
+                        require_all=bool(doc.get("require_all", False)))
                 else:
                     sig = doc.get("signature")
                     out = router.query(
@@ -401,7 +683,8 @@ class _RouterHandler(BaseHTTPRequestHandler):
                         at_least_version=doc.get("at_least_version"),
                         timeout=doc.get("timeout"),
                         include_components=bool(
-                            doc.get("include_components", False)))
+                            doc.get("include_components", False)),
+                        require_all=bool(doc.get("require_all", False)))
                 out["server_ms"] = (time.perf_counter() - t0) * 1e3
                 self._reply(out)
             elif self.path == "/upsert":

@@ -41,12 +41,15 @@ per-cluster timestamps in the mining pipeline.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import threading
 import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import runs as RS
 from . import ranking as R
 from .clusters import ClusterIndex, ClusterView
 
@@ -121,6 +124,9 @@ class TriclusterService:
                  policy: R.RankingPolicy = R.DEFAULT_POLICY,
                  min_density: float = 0.0, recency_horizon: int = 512,
                  delta_index: bool = True, publisher=None,
+                 recover_dir: Optional[str] = None,
+                 checkpoint_every: int = 64, fsync_wal: bool = False,
+                 version_base: int = 0, fault=None,
                  mesh=None, miner=None, **miner_kw):
         self.sizes = tuple(int(s) for s in sizes)
         self.refresh_interval = float(refresh_interval)
@@ -168,6 +174,30 @@ class TriclusterService:
         if hasattr(self.miner, "track_dirty_sigs"):
             self.miner.track_dirty_sigs = True
         self._ingest = getattr(self.miner, "ingest", None) or self.miner.add
+        #: fault injector (``serve.faults``) — fires the ``write`` site
+        #: with every new stream version; shared with the publisher's
+        #: ``publish``/``torn`` sites unless it carries its own
+        self._fault = fault
+        if (fault is not None and publisher is not None
+                and getattr(publisher, "fault", None) is None):
+            publisher.fault = fault
+        #: publish-version floor: the first published snapshot gets
+        #: ``version_base + 1``, so a restarted writer's versions (and
+        #: the read-your-writes tokens minted before the crash) stay
+        #: monotone across the restart
+        self.version_base = max(0, int(version_base))
+        #: durable recovery (``recover_dir``): every write is appended
+        #: to a WAL *before* it is applied; on publish cadence the run
+        #: store's checkpoint blob is persisted (atomic replace) and the
+        #: WAL truncated to the tail it does not cover.  Construction
+        #: with an existing recover_dir restores + replays (see
+        #: :meth:`_recover`).
+        self.recover_dir = recover_dir
+        self.checkpoint_every = max(1, int(checkpoint_every))
+        self.fsync_wal = bool(fsync_wal)
+        self._wal = None
+        self._writes_since_ckpt = 0
+        self._recovered = {}
         self._wlock = threading.Lock()      # miner store + dirty counter
         self._remine_lock = threading.Lock()  # one re-mine at a time
         self._cv = threading.Condition()    # snapshot publication + waits
@@ -181,12 +211,126 @@ class TriclusterService:
         self._stats = {"writes": 0, "publishes": 0, "mine_errors": 0,
                        "last_mine_ms": 0.0, "total_mine_ms": 0.0,
                        "delta_builds": 0, "full_builds": 0,
-                       "last_index_build_ms": 0.0, "publish_errors": 0}
+                       "last_index_build_ms": 0.0, "publish_errors": 0,
+                       "checkpoints": 0, "wal_records": 0,
+                       "recovered_ops": 0}
+        if self.recover_dir:
+            self._recover()
+
+    # -- durable recovery (checkpoint + WAL) ---------------------------------
+
+    @property
+    def _ckpt_path(self) -> str:
+        return os.path.join(self.recover_dir, "ckpt.npz")
+
+    @property
+    def _wal_path(self) -> str:
+        return os.path.join(self.recover_dir, "wal.jsonl")
+
+    def _wal_append(self, op: str, rows, values, sv: int) -> None:
+        if self._wal is None:
+            self._wal = open(self._wal_path, "a", encoding="utf-8")
+        rec = {"op": op, "rows": np.asarray(rows).tolist(), "sv": int(sv)}
+        if values is not None:
+            rec["values"] = np.asarray(values, np.float64).tolist()
+        self._wal.write(json.dumps(rec) + "\n")
+        self._wal.flush()
+        if self.fsync_wal:
+            os.fsync(self._wal.fileno())
+        self._stats["wal_records"] += 1
+
+    def _checkpoint_locked(self, version: int) -> bool:
+        """Persist the run store (atomic) and truncate the WAL to the
+        uncovered tail.  Caller holds ``_wlock``.  Returns False when
+        the miner has no checkpointable run store (then the WAL alone
+        carries the whole stream — recovery replays from op 1)."""
+        state = getattr(self.miner, "state", None)
+        if not isinstance(state, RS.RunStore):
+            return False
+        sv = int(self.miner.stream_version)
+        RS.save_checkpoint(state.checkpoint(), self._ckpt_path,
+                           meta={"stream_version": sv,
+                                 "version": int(version)})
+        # the checkpoint covers every op ≤ sv: start a fresh WAL
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+        with open(self._wal_path, "w", encoding="utf-8"):
+            pass
+        self._writes_since_ckpt = 0
+        self._stats["checkpoints"] += 1
+        return True
+
+    def final_checkpoint(self) -> bool:
+        """Graceful-shutdown hook: persist the store so the next boot
+        restores instead of replaying (no-op without a recover_dir)."""
+        if not self.recover_dir:
+            return False
+        with self._wlock:
+            return self._checkpoint_locked(self.version)
+
+    def _recover(self) -> None:
+        """Restore the store from the last checkpoint, replay the WAL
+        tail through the miner, and floor the publish version — the
+        crashed predecessor's writes and read-your-writes tokens
+        survive into this incarnation."""
+        os.makedirs(self.recover_dir, exist_ok=True)
+        ckpt_sv = 0
+        if os.path.exists(self._ckpt_path):
+            blob, meta = RS.load_checkpoint(self._ckpt_path)
+            store = RS.RunStore.restore(blob)
+            self.miner.state = store
+            ckpt_sv = int(meta.get("stream_version", 0))
+            self.miner.stream_version = ckpt_sv
+            self.version_base = max(self.version_base,
+                                    int(meta.get("version", 0)))
+            # re-adopt plans/stats (and validate) through the miner
+            if hasattr(self.miner, "_store"):
+                self.miner._store()
+        replayed = 0
+        if os.path.exists(self._wal_path):
+            with open(self._wal_path, encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        break                # torn tail record: stop
+                    if int(rec.get("sv", 0)) <= ckpt_sv:
+                        continue
+                    rows = np.asarray(rec["rows"])
+                    vals = rec.get("values")
+                    op = rec.get("op", "add")
+                    if op == "delete":
+                        self.miner.delete(rows)
+                    elif op == "upsert":
+                        self.miner.upsert(rows, vals)
+                    else:
+                        self._ingest(rows, vals)
+                    # replay lands exactly at the logged version even
+                    # if an op maps to a different number of bumps
+                    self.miner.stream_version = int(rec["sv"])
+                    replayed += 1
+        self._stats["recovered_ops"] = replayed
+        if ckpt_sv or replayed:
+            self._dirty = 1                  # force a publish on start()
+            self._recovered = {"checkpoint_stream_version": ckpt_sv,
+                               "replayed_ops": replayed,
+                               "stream_version": self.miner.stream_version,
+                               "version_base": self.version_base}
 
     # -- writer path ---------------------------------------------------------
 
-    def _write(self, op, rows, values=None) -> int:
+    def _write(self, op, rows, values=None, name: str = "add") -> int:
         with self._wlock:
+            if self.recover_dir:
+                # write-ahead: the record is durable before the store
+                # mutates, so a crash at any later point replays it
+                self._wal_append(name, rows, values,
+                                 self.miner.stream_version + 1)
+                self._writes_since_ckpt += 1
             if values is None:
                 op(rows)
             else:
@@ -200,17 +344,25 @@ class TriclusterService:
                 self.publisher.update_dirty(self._dirty)
             except Exception:          # noqa: BLE001 — never fail a write
                 pass
+        if self._fault is not None:
+            self._fault.fire("write", v)
         return v
 
     def add(self, rows, values=None) -> int:
         """Append a chunk; returns the miner's new stream_version."""
-        return self._write(self._ingest, rows, values)
+        return self._write(self._ingest, rows, values, name="add")
 
     def upsert(self, rows, values=None) -> int:
-        return self._write(self.miner.upsert, rows, values)
+        return self._write(self.miner.upsert, rows, values, name="upsert")
 
     def delete(self, rows) -> int:
-        return self._write(self.miner.delete, rows)
+        return self._write(self.miner.delete, rows, name="delete")
+
+    @property
+    def recovered(self) -> dict:
+        """Recovery summary when this service restored a predecessor's
+        checkpoint/WAL at construction; empty on a fresh boot."""
+        return dict(self._recovered)
 
     @property
     def dirty(self) -> int:
@@ -242,6 +394,16 @@ class TriclusterService:
             return float("inf")
         return max(0.0, time.monotonic() - snap.published_at)
 
+    @property
+    def thread_alive(self) -> bool:
+        """False only when the re-mine thread was started and died (it
+        is written to survive exceptions, so death means something
+        catastrophic) — the /health 503 condition."""
+        if not getattr(self, "_started", False) or self._stop_evt.is_set():
+            return True
+        t = self._thread
+        return t is not None and t.is_alive()
+
     def stats(self) -> dict:
         out = dict(self._stats)
         snap = self._snap
@@ -250,7 +412,10 @@ class TriclusterService:
                    clusters=0 if snap is None else len(snap.index),
                    dirty_clusters=self.dirty_clusters,
                    staleness_s=self.staleness_s(),
+                   thread_alive=self.thread_alive,
                    sizes=list(self.sizes))
+        if self._recovered:
+            out["recovered"] = dict(self._recovered)
         return out
 
     # -- mining / publication ------------------------------------------------
@@ -294,7 +459,8 @@ class TriclusterService:
                 self._stats["full_builds"] += 1
             self._stats["last_index_build_ms"] = \
                 (time.perf_counter() - t1) * 1e3
-            version = (0 if self._snap is None else self._snap.version) + 1
+            version = (self.version_base if self._snap is None
+                       else self._snap.version) + 1
             fs = self._first_seen
             ages = []
             # signature keys straight off the stats arrays — this loop
@@ -341,6 +507,20 @@ class TriclusterService:
             with self._cv:
                 self._snap = snap            # THE atomic swap
                 self._cv.notify_all()
+            # durable checkpoint on publish cadence: the blob covers
+            # everything this snapshot covers, the WAL shrinks to the
+            # writes that landed during the mine
+            if (self.recover_dir
+                    and self._writes_since_ckpt >= self.checkpoint_every):
+                try:
+                    with self._wlock:
+                        self._checkpoint_locked(version)
+                except Exception as e:       # noqa: BLE001 — serving
+                    # must outlive a checkpoint failure (disk full…);
+                    # recovery falls back to a longer WAL replay
+                    self._stats["checkpoint_errors"] = \
+                        self._stats.get("checkpoint_errors", 0) + 1
+                    self._stats["last_checkpoint_error"] = repr(e)
             return snap
 
     def _loop(self):
@@ -379,6 +559,7 @@ class TriclusterService:
                                         name="tricluster-remine",
                                         daemon=True)
         self._thread.start()
+        self._started = True
         return self
 
     def stop(self) -> None:
@@ -387,6 +568,9 @@ class TriclusterService:
         if self._thread is not None:
             self._thread.join(timeout=30)
             self._thread = None
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
 
     def __enter__(self) -> "TriclusterService":
         return self.start()

@@ -43,6 +43,7 @@ where available, else explicit unregister).
 from __future__ import annotations
 
 import json
+import os
 import struct
 import threading
 import time
@@ -52,12 +53,42 @@ from typing import Optional
 import numpy as np
 
 CTL_SIZE = 4096
-_CTL_FMT = "<QQQdQQ"     # seq, version, stream_version, wall, n, name_len
+# seq, epoch, version, stream_version, wall, n, name_len — ``epoch``
+# increments each time a (re)started writer adopts the prefix, so a
+# restarted writer's first publish is unambiguous to readers even if
+# its version numbering restarted (bundle identity is (epoch, version))
+_CTL_FMT = "<QQQQdQQ"
 _CTL_PAYLOAD = struct.calcsize(_CTL_FMT)
 _NAME_OFF = _CTL_PAYLOAD
 _NAME_MAX = 200
 _DIRTY_OFF = 512         # outside the seqlock payload (see module doc)
+_PID_OFF = 520           # writer pid — the reader-side liveness probe
 _ALIGN = 64
+
+
+class WriterDeadError(RuntimeError):
+    """The seqlock stayed odd past the spin bound and (re-attach
+    confirmed) the writer cannot finish the swing: it crashed
+    mid-publish, or is alive but wedged.  Readers keep serving their
+    held snapshot; whoever supervises the writer should restart it."""
+
+    def __init__(self, prefix: str, pid: int, alive: bool):
+        state = ("alive but stuck" if alive else "dead")
+        super().__init__(f"publisher of {prefix!r} is {state} "
+                         f"(pid {pid}): seqlock stuck odd")
+        self.prefix, self.pid, self.alive = prefix, pid, alive
+
+
+def _pid_alive(pid: int) -> bool:
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+        return True
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
 
 
 class _Segment(shared_memory.SharedMemory):
@@ -73,6 +104,17 @@ class _Segment(shared_memory.SharedMemory):
             pass
 
 
+def _untrack(name: str) -> None:
+    """Detach a segment from this process's ``resource_tracker`` (the
+    tracker would unlink it when the process dies — wrong for segments
+    whose lifetime must span a crash)."""
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister(name, "shared_memory")
+    except Exception:                        # noqa: BLE001 — advisory
+        pass
+
+
 def attach_segment(name: str) -> shared_memory.SharedMemory:
     """Attach an existing segment *without* resource-tracker ownership
     (the writer owns unlink; a tracked reader would destroy live
@@ -81,11 +123,7 @@ def attach_segment(name: str) -> shared_memory.SharedMemory:
         return _Segment(name=name, track=False)
     except TypeError:                        # Python < 3.13: no track=
         seg = _Segment(name=name)
-        try:
-            from multiprocessing import resource_tracker
-            resource_tracker.unregister(seg._name, "shared_memory")
-        except Exception:                    # noqa: BLE001 — advisory
-            pass
+        _untrack(seg._name)
         return seg
 
 
@@ -120,6 +158,7 @@ class SnapshotBundle:
         head = json.loads(bytes(seg.buf[8:8 + hlen]))
         self.meta: dict = head["meta"]
         self.version: int = int(self.meta["version"])
+        self.epoch: int = int(self.meta.get("epoch", 1))
         self.stream_version: int = int(self.meta["stream_version"])
         self.published_wall: float = float(self.meta["published_wall"])
         self.arrays: dict = {}
@@ -133,21 +172,65 @@ class SnapshotBundle:
 
 class ShmPublisher:
     """Writer side: owns the control block, publishes one data segment
-    per snapshot, unlinks the previous one after each swap."""
+    per snapshot, unlinks the previous one after each swap.
 
-    def __init__(self, prefix: str):
+    Crash safety: adopting a dead predecessor's control block bumps the
+    **epoch** (readers see an unambiguous new writer), records the last
+    version the predecessor named (``resumed_version`` — the restart's
+    version floor), garbage-collects every orphaned ``{prefix}.v*``
+    data segment the crash leaked, and stamps this process's pid into
+    the control block for the readers' stuck-odd liveness probe."""
+
+    def __init__(self, prefix: str, fault=None):
         if len(prefix) + 16 > _NAME_MAX:
             raise ValueError(f"prefix too long: {prefix!r}")
         self.prefix = prefix
+        self.fault = fault
         self._seq = 0
+        self.epoch = 1
+        self.resumed_version = 0
         self._data: Optional[shared_memory.SharedMemory] = None
         try:
             self._ctl = _Segment(
                 name=f"{prefix}.ctl", create=True, size=CTL_SIZE)
+            # the control block is the crash-durable rendezvous — it
+            # carries the epoch watermark a restarted writer must read,
+            # so the resource tracker must not unlink it on crash
+            _untrack(self._ctl._name)
         except FileExistsError:
-            # a stale control block from a dead writer: adopt and reset
+            # a stale control block from a dead writer: adopt, recover
+            # its (epoch, version) watermark — possibly written by a
+            # crash mid-swing, hence read raw, no seqlock — and reset
             self._ctl = attach_segment(f"{prefix}.ctl")
+            _, epoch, ver, *_ = struct.unpack_from(_CTL_FMT,
+                                                   self._ctl.buf, 0)
+            self.epoch = int(epoch) + 1
+            self.resumed_version = int(ver)
         self._ctl.buf[:CTL_SIZE] = b"\0" * CTL_SIZE
+        struct.pack_into("<Q", self._ctl.buf, _PID_OFF, os.getpid())
+        self.reclaimed = self._gc_orphans()
+
+    def _gc_orphans(self) -> int:
+        """Unlink every leftover ``{prefix}.v*`` data segment of a dead
+        predecessor (readers still mapping one keep it alive — unlink
+        only removes the name).  Without this, a restart that republishes
+        a version number its predecessor already used would collide with
+        the orphan and crash-loop."""
+        n = 0
+        shm_dir = "/dev/shm"                 # POSIX shm namespace; the
+        if not os.path.isdir(shm_dir):       # only portable way to list
+            return 0
+        for entry in os.listdir(shm_dir):
+            if not entry.startswith(f"{self.prefix}.v"):
+                continue
+            try:
+                seg = attach_segment(entry)
+                seg.close()
+                _unlink_segment(seg)
+                n += 1
+            except FileNotFoundError:
+                pass
+        return n
 
     def publish(self, version: int, stream_version: int,
                 arrays: dict, meta: Optional[dict] = None,
@@ -155,6 +238,8 @@ class ShmPublisher:
         """Write ``arrays`` into a fresh ``{prefix}.v{version}`` segment
         and swing the control block to it; then unlink the previous
         segment (readers still mapping it keep it alive)."""
+        if self.fault is not None:
+            self.fault.fire("publish", int(version))
         wall = time.time() if published_wall is None else published_wall
         manifest, offset = [], 0
         items = [(k, np.ascontiguousarray(v)) for k, v in arrays.items()]
@@ -171,7 +256,7 @@ class ShmPublisher:
             offset = _pad(offset + v.nbytes)
         m = dict(meta or {})
         m.update(version=int(version), stream_version=int(stream_version),
-                 published_wall=wall)
+                 published_wall=wall, epoch=int(self.epoch))
         head = json.dumps({"meta": m, "arrays": manifest}).encode()
         if 8 + len(head) > data_off:
             raise ValueError("header overflow")          # 4 KiB slack
@@ -226,9 +311,14 @@ class ShmPublisher:
         self._seq += 1                                   # odd: writing
         struct.pack_into("<Q", self._ctl.buf, 0, self._seq)
         struct.pack_into(_CTL_FMT, self._ctl.buf, 0, self._seq,
-                         int(version), int(stream_version), float(wall),
+                         int(self.epoch), int(version),
+                         int(stream_version), float(wall),
                          int(n), len(nb))
         self._ctl.buf[_NAME_OFF:_NAME_OFF + len(nb)] = nb
+        if self.fault is not None:
+            # the torn-publish site: a "kill" armed here dies with the
+            # seqlock odd and the new segment orphaned
+            self.fault.fire("torn", int(version))
         self._seq += 1                                   # even: stable
         struct.pack_into("<Q", self._ctl.buf, 0, self._seq)
 
@@ -253,8 +343,12 @@ class ShmReplica:
     attach with swap-race retry.  Thread-safe; meant to back one
     replica process's query surface (``ReplicaService``)."""
 
-    def __init__(self, prefix: str, connect_timeout: float = 60.0):
+    def __init__(self, prefix: str, connect_timeout: float = 60.0,
+                 seqlock_spin_s: float = 1.0):
         self.prefix = prefix
+        #: bounded-spin budget for an odd seqlock before the stuck-odd
+        #: protocol (re-attach, probe the writer pid, declare it dead)
+        self.seqlock_spin_s = float(seqlock_spin_s)
         self._lock = threading.Lock()
         self._bundle: Optional[SnapshotBundle] = None
         deadline = time.monotonic() + connect_timeout
@@ -269,40 +363,71 @@ class ShmReplica:
                         f"after {connect_timeout}s") from None
                 time.sleep(0.05)
 
+    def _reattach_ctl(self) -> None:
+        """Drop and re-open the control mapping — a restarted writer
+        may have replaced the segment behind the old name."""
+        old = self._ctl
+        self._ctl = attach_segment(f"{self.prefix}.ctl")
+        old.close()
+
     def read_control(self) -> dict:
-        """One seqlock-consistent control read (never torn)."""
-        buf = self._ctl.buf
+        """One seqlock-consistent control read (never torn).
+
+        A writer normally holds the lock odd for microseconds; odd past
+        ``seqlock_spin_s`` means the writer died (or wedged) mid-swing.
+        The stuck-odd protocol then runs: re-attach the control block
+        (it may have been recreated), give it one more spin budget, and
+        if still odd raise :class:`WriterDeadError` carrying the
+        writer-pid liveness probe — the caller keeps serving its held
+        snapshot and signals the supervisor."""
+        reattached = False
+        deadline = time.monotonic() + self.seqlock_spin_s
         while True:
+            buf = self._ctl.buf
             (s1,) = struct.unpack_from("<Q", buf, 0)
             if s1 % 2:                       # writer mid-swing
+                if time.monotonic() >= deadline:
+                    if not reattached:
+                        reattached = True
+                        self._reattach_ctl()
+                        deadline = (time.monotonic()
+                                    + self.seqlock_spin_s)
+                        continue
+                    (pid,) = struct.unpack_from("<Q", buf, _PID_OFF)
+                    raise WriterDeadError(self.prefix, int(pid),
+                                          _pid_alive(int(pid)))
                 time.sleep(0.0002)
                 continue
-            seq, ver, sv, wall, n, nlen = struct.unpack_from(
+            seq, epoch, ver, sv, wall, n, nlen = struct.unpack_from(
                 _CTL_FMT, buf, 0)
             name = bytes(buf[_NAME_OFF:_NAME_OFF + nlen]).decode()
             (dirty,) = struct.unpack_from("<Q", buf, _DIRTY_OFF)
+            (pid,) = struct.unpack_from("<Q", buf, _PID_OFF)
             (s2,) = struct.unpack_from("<Q", buf, 0)
             if s1 == s2:
-                return {"version": ver, "stream_version": sv,
+                return {"version": ver, "epoch": epoch,
+                        "stream_version": sv,
                         "published_wall": wall, "clusters": n,
-                        "segment": name, "dirty": dirty}
+                        "segment": name, "dirty": dirty,
+                        "writer_pid": pid}
 
     def current(self) -> Optional[SnapshotBundle]:
         """The bundle for the control block's current snapshot,
-        (re-)attaching on version change; None until the writer has
-        published anything.  Losing the attach race to a concurrent
-        swap (segment already unlinked) retries off the fresh control
-        block."""
+        (re-)attaching on (epoch, version) change; None until the
+        writer has published anything.  Losing the attach race to a
+        concurrent swap (segment already unlinked) retries off the
+        fresh control block."""
         while True:
             ctl = self.read_control()
             if ctl["version"] == 0:
                 return None
+            ident = (ctl["epoch"], ctl["version"])
             b = self._bundle
-            if b is not None and b.version == ctl["version"]:
+            if b is not None and (b.epoch, b.version) == ident:
                 return b
             with self._lock:
                 b = self._bundle
-                if b is not None and b.version == ctl["version"]:
+                if b is not None and (b.epoch, b.version) == ident:
                     return b
                 try:
                     seg = attach_segment(ctl["segment"])
@@ -349,15 +474,27 @@ class ReplicaService:
     read_only = True
 
     def __init__(self, prefix: str, poll_interval: float = 0.005,
-                 connect_timeout: float = 60.0):
-        self.replica = ShmReplica(prefix, connect_timeout=connect_timeout)
+                 connect_timeout: float = 60.0,
+                 seqlock_spin_s: float = 1.0, on_writer_dead=None,
+                 dead_signal_cooldown: float = 5.0):
+        self.replica = ShmReplica(prefix, connect_timeout=connect_timeout,
+                                  seqlock_spin_s=seqlock_spin_s)
         self.poll_interval = float(poll_interval)
+        #: called (with the WriterDeadError) when the stuck-odd
+        #: protocol declares the publisher dead — the supervisor signal
+        #: (``launch/cluster_serve.py`` wires a restart-flag file here);
+        #: rate-limited by ``dead_signal_cooldown``
+        self.on_writer_dead = on_writer_dead
+        self.dead_signal_cooldown = float(dead_signal_cooldown)
+        self._last_dead_signal = -float("inf")
+        self._ident = (0, 0)                  # (epoch, version) served
         self._cv = threading.Condition()
         self._snap = None
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._started = False
         self._stats = {"attaches": 0, "attach_errors": 0,
-                       "last_attach_ms": 0.0}
+                       "last_attach_ms": 0.0, "writer_dead_signals": 0}
 
     # -- snapshot maintenance ------------------------------------------------
 
@@ -384,17 +521,38 @@ class ReplicaService:
         self._stats["last_attach_ms"] = (time.perf_counter() - t0) * 1e3
         return snap
 
+    def _writer_dead(self, err: WriterDeadError) -> None:
+        self._stats["writer_dead_signals"] += 1
+        self._stats["last_writer_dead"] = repr(err)
+        cb = self.on_writer_dead
+        now = time.monotonic()
+        if (cb is not None and now - self._last_dead_signal
+                >= self.dead_signal_cooldown):
+            self._last_dead_signal = now
+            try:
+                cb(err)
+            except Exception:                # noqa: BLE001 — advisory
+                pass
+
     def _maybe_attach(self) -> None:
-        snap = self._snap
-        ctl = self.replica.read_control()
-        if ctl["version"] == 0 or (snap is not None
-                                   and snap.version >= ctl["version"]):
+        try:
+            ctl = self.replica.read_control()
+        except WriterDeadError as e:
+            # keep serving the held snapshot; surface the death to the
+            # supervisor and move on — recovery is the writer's problem
+            self._writer_dead(e)
+            return
+        ident = (ctl["epoch"], ctl["version"])
+        if ctl["version"] == 0 or ident == self._ident:
             return
         bundle = self.replica.current()
-        if bundle is None or (snap is not None
-                              and bundle.version <= snap.version):
+        if bundle is None:
+            return
+        ident = (bundle.epoch, bundle.version)
+        if ident == self._ident:
             return
         snap = self._build(bundle)
+        self._ident = ident
         with self._cv:
             self._snap = snap                # the replica's atomic swap
             self._cv.notify_all()
@@ -426,6 +584,7 @@ class ReplicaService:
         self._thread = threading.Thread(target=self._loop,
                                         name="replica-attach", daemon=True)
         self._thread.start()
+        self._started = True
         return self
 
     def stop(self) -> None:
@@ -452,6 +611,22 @@ class ReplicaService:
     def stream_version(self) -> int:
         snap = self._snap
         return 0 if snap is None else snap.stream_version
+
+    @property
+    def epoch(self) -> int:
+        """Writer epoch of the served snapshot (bumps on writer
+        restart)."""
+        return int(self._ident[0])
+
+    @property
+    def thread_alive(self) -> bool:
+        """False only when the attach thread was started and died — the
+        /health 503 condition (a replica that cannot follow the writer
+        any more must be ejected by the balancer)."""
+        if not self._started or self._stop_evt.is_set():
+            return True
+        t = self._thread
+        return t is not None and t.is_alive()
 
     @property
     def dirty(self) -> int:
@@ -481,9 +656,10 @@ class ReplicaService:
         out = dict(self._stats)
         snap = self._snap
         out.update(role="replica", version=self.version,
-                   stream_version=self.stream_version,
+                   stream_version=self.stream_version, epoch=self.epoch,
                    clusters=0 if snap is None else len(snap.index),
                    dirty=self.dirty, staleness_s=self.staleness_s(),
+                   thread_alive=self.thread_alive,
                    sizes=list(self._meta_sizes()))
         return out
 

@@ -1,0 +1,653 @@
+"""Fault-tolerant serving plane (ISSUE 7): deterministic fault
+injection, degraded router fan-out, circuit-break + re-probe, crash-safe
+shm recovery, checkpoint+WAL writer recovery, and process supervision.
+
+Every fault here triggers on a logical counter (seeded ``FaultPlan``),
+and every assertion synchronises on an observable state transition with
+a bounded wait — never on a bare sleep.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import StreamingMiner
+from repro.serve.clusters import ClusterIndex
+from repro.serve.faults import (KILL_EXIT_CODE, DropRequest, Fault,
+                                FaultInjector, FaultPlan)
+from repro.serve.protocol import ClusterClient, health_doc, make_server
+from repro.serve.router import RouterService, Shard
+from repro.serve.service import TriclusterService
+from repro.serve.supervise import Supervisor, write_restart_flag
+
+SIZES = (24, 12, 8)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    return env
+
+
+def _wait_for(cond, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"{what} not reached in {timeout}s")
+        time.sleep(0.01)
+
+
+def _service(seed=3, n=160, **kw):
+    rng = np.random.default_rng(seed)
+    svc = TriclusterService(SIZES, refresh_interval=0.05,
+                            dirty_threshold=4, seed=seed, **kw)
+    svc.add(rng.integers(0, SIZES, size=(n, 3)).astype(np.int64))
+    return svc
+
+
+def _serve(svc, fault=None, health_max_staleness=None):
+    server = make_server(svc, port=0, fault=fault,
+                         health_max_staleness=health_max_staleness)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    return server
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_json_round_trip_and_scoping(self):
+        plan = FaultPlan.build(
+            FaultPlan.kill_writer(1, 7),
+            FaultPlan.hang_replica(0, 2, 5, for_s=0.5),
+            FaultPlan.drop_requests("replica", -1, at=3),
+            seed=42)
+        again = FaultPlan.from_json(plan.to_json())
+        assert again == plan
+        # scoping: the writer fault only reaches writer shard 1
+        assert len(plan.for_component("writer", 1).faults) == 1
+        assert len(plan.for_component("writer", 0).faults) == 0
+        # replica faults: the wildcard drop hits every replica; the
+        # hang only (0, 2)
+        assert len(plan.for_component("replica", 0, 2).faults) == 2
+        assert len(plan.for_component("replica", 1, 0).faults) == 1
+
+    def test_scattered_is_seed_deterministic(self):
+        a = FaultPlan.scattered(7, "replica", 0, window=100,
+                                n_drop=3, n_slow=2)
+        b = FaultPlan.scattered(7, "replica", 0, window=100,
+                                n_drop=3, n_slow=2)
+        c = FaultPlan.scattered(8, "replica", 0, window=100,
+                                n_drop=3, n_slow=2)
+        assert a == b
+        assert a != c
+        ats = [f.at for f in a.faults]
+        assert len(set(ats)) == 5 and all(1 <= o <= 100 for o in ats)
+
+    def test_counter_trigger_once_and_every(self):
+        inj = FaultInjector([
+            Fault("drop", "request", at=3),
+            Fault("drop", "request", at=10, every=5, count=2)])
+        fired = []
+        for i in range(1, 21):
+            try:
+                inj.fire("request", i)
+            except DropRequest:
+                fired.append(i)
+        assert fired == [3, 10, 15]          # once at 3; 10,15 then
+        assert inj.fired("request") == 3     # count=2 exhausted
+
+    def test_clear_disarms(self):
+        inj = FaultInjector([Fault("drop", "request", at=1, every=1,
+                                   count=0)])
+        with pytest.raises(DropRequest):
+            inj.fire("request", 1)
+        inj.clear("request")
+        inj.fire("request", 2)               # no raise
+
+
+# ---------------------------------------------------------------------------
+# /health 503 + drain (satellites)
+# ---------------------------------------------------------------------------
+
+class _StubService:
+    """Service-shaped object with scriptable health inputs."""
+    read_only = True
+    version = 3
+    stream_version = 5
+    dirty = 2
+    dirty_clusters = 0
+    _snap = None
+
+    def __init__(self):
+        self.thread_alive = True
+        self.stale = 0.1
+        self.block = None
+
+    def staleness_s(self):
+        return self.stale
+
+    def stats(self):
+        return {"role": "stub"}
+
+    def query(self, **kw):
+        if self.block is not None:
+            self.block.wait(10)
+        from repro.serve.service import QueryResult
+        return QueryResult(self.version, self.stream_version, [])
+
+
+class TestHealth503AndDrain:
+    def test_health_503_on_dead_thread_and_staleness(self):
+        svc = _StubService()
+        server = _serve(svc, health_max_staleness=5.0)
+        try:
+            cl = ClusterClient(f"http://127.0.0.1:{server.port}",
+                               timeout=10)
+            h = cl.health()
+            assert h["healthy"] and "http_status" not in h
+            # staleness past the threshold with a write backlog: sick
+            svc.stale = 60.0
+            h = cl.health()
+            assert h["http_status"] == 503 and not h["healthy"]
+            assert "stale" in h["error"]
+            # dead background thread: sick regardless of staleness
+            svc.stale = 0.1
+            svc.thread_alive = False
+            h = cl.health()
+            assert h["http_status"] == 503
+            assert "thread" in h["error"]
+        finally:
+            server.shutdown()
+            server.server_close()
+
+    def test_health_doc_thresholds(self):
+        svc = _StubService()
+        assert health_doc(svc)["healthy"]
+        svc.stale = 99.0
+        assert health_doc(svc)["healthy"]          # no threshold set
+        assert not health_doc(svc, max_staleness_s=1.0)["healthy"]
+        svc.dirty = 0                              # drained: stale is
+        assert health_doc(svc, max_staleness_s=1.0)["healthy"]  # fine
+
+    def test_drain_waits_for_inflight(self):
+        svc = _StubService()
+        svc.block = threading.Event()
+        server = _serve(svc)
+        cl = ClusterClient(f"http://127.0.0.1:{server.port}", timeout=30)
+        res = {}
+        t = threading.Thread(
+            target=lambda: res.update(cl.query(entity=0)), daemon=True)
+        t.start()
+        _wait_for(lambda: server.inflight == 1, what="in-flight request")
+        server.shutdown()                    # stop accepting
+        assert not server.drain_inflight(timeout=0.2)   # still held
+        svc.block.set()
+        assert server.drain_inflight(timeout=10)
+        t.join(timeout=10)
+        assert res["version"] == 3
+        server.server_close()
+
+    def test_injected_drop_severs_connection(self):
+        svc = _StubService()
+        inj = FaultPlan.build(
+            FaultPlan.drop_requests("replica", -1, at=2)
+        ).for_component("replica", 0)
+        server = _serve(svc, fault=inj)
+        try:
+            cl = ClusterClient(f"http://127.0.0.1:{server.port}",
+                               timeout=5)
+            assert cl.health()["version"] == 3       # request 1 fine
+            with pytest.raises(OSError):
+                cl.health()                          # request 2 severed
+            assert cl.health()["version"] == 3       # request 3 fine
+        finally:
+            server.shutdown()
+            server.server_close()
+
+
+# ---------------------------------------------------------------------------
+# Router: shard crash → degraded merge; replica hang → breaker + re-probe
+# ---------------------------------------------------------------------------
+
+class TestRouterDegradation:
+    def _plane(self, **router_kw):
+        svcs = [_service(seed=s).start() for s in (3, 4)]
+        servers = [_serve(s) for s in svcs]
+        shards = [Shard(f"http://127.0.0.1:{sv.port}", timeout=2.0)
+                  for sv in servers]
+        router = RouterService(shards, timeout=2.0, **router_kw)
+        return svcs, servers, router
+
+    def test_shard_down_degrades_instead_of_502(self):
+        svcs, servers, router = self._plane()
+        try:
+            full = router.query(k=5)
+            assert not full["degraded"] and full["coverage"] == [0, 1]
+            # kill shard 1's endpoint entirely
+            servers[1].shutdown()
+            servers[1].server_close()
+            deg = router.query(k=5, timeout=1.0)
+            assert deg["degraded"] and deg["coverage"] == [0]
+            assert deg["shard_versions"][1] == 0
+            # the degraded merge is exactly the live shard's ranked list
+            local = [(int(v.signature[0]), int(v.signature[1]))
+                     for v, _ in svcs[0].query(k=5).hits]
+            assert [tuple(h["signature"]) for h in deg["hits"]] == local
+            # batch degrades the same way
+            degb = router.query_batch([0, 1], k=3, timeout=1.0)
+            assert degb["degraded"] and len(degb["hits"]) == 2
+            # all-or-nothing stays available
+            with pytest.raises((RuntimeError, OSError, TimeoutError)):
+                router.query(k=5, timeout=1.0, require_all=True)
+            # tolerant health: the down endpoint is reported, not fatal
+            h = router.health()
+            assert h["degraded"] and len(h["down"]) == 1
+            assert h["coverage"] == [0]
+        finally:
+            router.close()
+            for sv in servers:
+                sv.shutdown()
+                sv.server_close()
+            for s in svcs:
+                s.stop()
+
+    def test_every_shard_down_is_an_error(self):
+        svcs, servers, router = self._plane()
+        try:
+            for sv in servers:
+                sv.shutdown()
+                sv.server_close()
+            with pytest.raises(RuntimeError, match="unreachable"):
+                router.query(k=3, timeout=0.5)
+        finally:
+            router.close()
+            for s in svcs:
+                s.stop()
+
+    def test_hung_replica_circuit_breaks_then_reprobes(self):
+        svc = _service(seed=5).start()
+        writer_srv = _serve(svc)
+        # the "replica": same service behind a faulted endpoint that
+        # hangs its first 3 requests longer than the client timeout
+        plan = FaultPlan.build(
+            Fault("hang", "request", role="replica", at=1, every=1,
+                  count=3, param=5.0))
+        hang_inj = plan.for_component("replica", 0, 0)
+        replica_srv = _serve(svc, fault=hang_inj)
+        sh = Shard(f"http://127.0.0.1:{writer_srv.port}",
+                   [f"http://127.0.0.1:{replica_srv.port}"], timeout=0.4)
+        router = RouterService([sh], timeout=3.0, probe_interval=0.05,
+                               probe_timeout=0.4)
+        try:
+            replica = sh.replicas[0]
+            # queries keep succeeding end-to-end: retries time out on
+            # the hung replica, the breaker opens, traffic fails over
+            # to the writer — no 5xx, no degradation
+            out = router.query(k=3)
+            assert not out["degraded"]
+            _wait_for(lambda: replica.breaker.is_open, timeout=15,
+                      what="replica circuit open")
+            assert sh.reader() is sh.writer  # ejected → writer serves
+            # hang budget (count=3) exhausts via query retries and the
+            # background /health re-probe; the breaker must close again
+            # without any query traffic forcing it
+            _wait_for(lambda: not replica.breaker.is_open, timeout=30,
+                      what="replica circuit re-closed")
+            stats = router.resilience_stats()
+            assert stats["probes"] >= 1
+            assert any(b["trips"] >= 1 for b in stats["breakers"])
+            out = router.query(k=3)
+            assert not out["degraded"] and out["coverage"] == [0]
+        finally:
+            router.close()
+            for sv in (writer_srv, replica_srv):
+                sv.shutdown()
+                sv.server_close()
+            svc.stop()
+
+    def test_stale_keepalive_retries_once_on_fresh_connection(self):
+        """PooledClient satellite: a backend restart between requests
+        leaves a dead keep-alive socket; the next call must transparently
+        reconnect instead of failing."""
+        svc = _service(seed=6).start()
+        server = _serve(svc)
+        port = server.port
+        sh = Shard(f"http://127.0.0.1:{port}", timeout=5.0)
+        try:
+            assert sh.writer.call("/health")["version"] >= 1
+            server.shutdown()
+            server.server_close()            # keep-alive now stale
+            server = make_server(svc, port=port)   # same port, new srv
+            threading.Thread(target=server.serve_forever,
+                             daemon=True).start()
+            assert sh.writer.call("/health")["version"] >= 1
+            assert not sh.writer.breaker.is_open
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# Writer crash → checkpoint + WAL recovery (monotone stream_version,
+# bit-identical answers)
+# ---------------------------------------------------------------------------
+
+def _top_sigs(svc, k=8):
+    out = svc.query(k=k)
+    return [(int(v.signature[0]), int(v.signature[1]),
+             round(float(s), 12)) for v, s in out.hits]
+
+
+class TestWriterRecovery:
+    def test_checkpoint_wal_replay_bit_identical(self, tmp_path):
+        rec = str(tmp_path / "rec")
+        os.makedirs(rec)
+        rng = np.random.default_rng(11)
+        base = rng.integers(0, SIZES, size=(150, 3)).astype(np.int64)
+        extra = rng.integers(0, SIZES, size=(5, 4, 3)).astype(np.int64)
+
+        # uninterrupted control
+        ctl = TriclusterService(SIZES, seed=11)
+        ctl.add(base)
+        for chunk in extra:
+            ctl.add(chunk)
+        ctl.refresh()
+
+        # victim: checkpoint after every write, then "crash" (drop the
+        # instance with no stop/final_checkpoint)
+        vic = TriclusterService(SIZES, seed=11, recover_dir=rec,
+                                checkpoint_every=3)
+        vic.add(base)
+        vic.refresh()
+        v_before = vic.version
+        for chunk in extra[:3]:
+            vic.add(chunk)
+        vic.refresh()                        # cadence checkpoint ran
+        sv_crash = vic.stream_version
+        assert vic.stats()["checkpoints"] >= 1
+        del vic                              # crash: no graceful stop
+
+        successor = TriclusterService(SIZES, seed=11, recover_dir=rec,
+                                      checkpoint_every=3)
+        r = successor.recovered
+        assert r["stream_version"] == sv_crash          # monotone
+        assert successor.stream_version == sv_crash
+        for chunk in extra[3:]:
+            successor.add(chunk)
+        successor.refresh()
+        assert successor.version > v_before             # version floor
+        assert successor.stream_version == ctl.stream_version
+        assert _top_sigs(successor) == _top_sigs(ctl)   # bit-identical
+        ctl.stop()
+        successor.stop()
+
+    def test_wal_alone_recovers_without_checkpoint(self, tmp_path):
+        rec = str(tmp_path / "rec2")
+        os.makedirs(rec)
+        rng = np.random.default_rng(13)
+        rows = rng.integers(0, SIZES, size=(60, 3)).astype(np.int64)
+        vic = TriclusterService(SIZES, seed=13, recover_dir=rec,
+                                checkpoint_every=10**6)
+        vic.add(rows[:40])
+        vic.upsert(rows[40:55])
+        vic.delete(rows[:5])
+        sv = vic.stream_version
+        del vic                              # crash before any ckpt
+
+        ctl = TriclusterService(SIZES, seed=13)
+        ctl.add(rows[:40])
+        ctl.upsert(rows[40:55])
+        ctl.delete(rows[:5])
+
+        successor = TriclusterService(SIZES, seed=13, recover_dir=rec)
+        assert successor.recovered["replayed_ops"] == 3
+        assert successor.stream_version == sv == ctl.stream_version
+        successor.refresh()
+        ctl.refresh()
+        assert _top_sigs(successor) == _top_sigs(ctl)
+        ctl.stop()
+        successor.stop()
+
+    def test_injected_kill_at_stream_version(self, tmp_path):
+        """The kill-shard-at-version-N fault: a child process dies with
+        KILL_EXIT_CODE exactly after its N-th write lands in the WAL;
+        its successor recovers every logged op."""
+        rec = str(tmp_path / "reckill")
+        os.makedirs(rec)
+        child = f"""
+import sys, numpy as np
+sys.path.insert(0, "src")
+from repro.serve.faults import FaultPlan
+from repro.serve.service import TriclusterService
+plan = FaultPlan.build(FaultPlan.kill_writer(0, at_stream_version=3))
+svc = TriclusterService({SIZES!r}, seed=2, recover_dir={rec!r},
+                        fault=plan.for_component("writer", 0))
+rng = np.random.default_rng(2)
+for i in range(5):
+    svc.add(rng.integers(0, {SIZES!r}, size=(4, 3)).astype(np.int64))
+raise SystemExit("unreachable: kill fault must fire at sv=3")
+"""
+        proc = subprocess.run([sys.executable, "-c", child],
+                              cwd=os.getcwd(), env=_env(), timeout=300,
+                              capture_output=True, text=True)
+        assert proc.returncode == KILL_EXIT_CODE, proc.stderr
+        successor = TriclusterService(SIZES, seed=2, recover_dir=rec)
+        # the fault fires *after* write 3 commits: all 3 ops recovered
+        assert successor.stream_version == 3
+        assert successor.recovered["replayed_ops"] == 3
+        successor.stop()
+
+
+# ---------------------------------------------------------------------------
+# Supervision: restart on crash, crash-loop cap, restart flags
+# ---------------------------------------------------------------------------
+
+class _Popen:
+    """multiprocessing-Process-shaped adapter over subprocess.Popen —
+    keeps supervisor tests free of spawn-import pickling concerns."""
+
+    def __init__(self, argv):
+        self._p = subprocess.Popen(argv, env=_env(),
+                                   stdout=subprocess.DEVNULL,
+                                   stderr=subprocess.DEVNULL)
+
+    @property
+    def pid(self):
+        return self._p.pid
+
+    @property
+    def exitcode(self):
+        return self._p.returncode
+
+    def is_alive(self):
+        return self._p.poll() is None
+
+    def terminate(self):
+        self._p.terminate()
+
+    def join(self, timeout=None):
+        try:
+            self._p.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            pass
+
+
+def _sleeper():
+    return _Popen([sys.executable, "-c",
+                   "import time; time.sleep(600)"])
+
+
+def _crasher():
+    return _Popen([sys.executable, "-c", "import sys; sys.exit(23)"])
+
+
+class TestSupervisor:
+    def test_restart_then_crash_loop_failure(self):
+        sup = Supervisor(restart_backoff=0.02, backoff_max=0.1,
+                         max_restarts=3, restart_window=60.0,
+                         poll_interval=0.02)
+        sup.add("loop", _crasher)
+        sup.add("ok", _sleeper)
+        with sup:
+            assert sup.wait_state("loop", ("failed",),
+                                  timeout=30) == "failed"
+            st = sup.stats()["children"]
+            assert st["loop"]["restarts"] >= 3
+            assert st["loop"]["last_exit"] == 23
+            assert st["ok"]["state"] == "running" and st["ok"]["alive"]
+        events = [e for n, e, _ in sup.events if n == "loop"]
+        assert events.count("restarting") >= 3
+        assert events[-1] == "failed"
+
+    def test_clean_exit_is_not_restarted(self):
+        sup = Supervisor(poll_interval=0.02)
+        sup.add("oneshot",
+                lambda: _Popen([sys.executable, "-c", "pass"]))
+        with sup:
+            assert sup.wait_state("oneshot", ("stopped",),
+                                  timeout=30) == "stopped"
+        assert sup.stats()["children"]["oneshot"]["restarts"] == 0
+
+    def test_restart_flag_recycles_hung_child(self, tmp_path):
+        flag_dir = str(tmp_path)
+        sup = Supervisor(restart_backoff=0.02, poll_interval=0.02,
+                         flag_dir=flag_dir)
+        sup.add("writer", _sleeper)
+        with sup:
+            pid0 = sup.stats()["children"]["writer"]["pid"]
+            write_restart_flag(flag_dir, "writer")
+            _wait_for(lambda: (sup.stats()["children"]["writer"]
+                               ["restarts"]) == 1, timeout=30,
+                      what="flagged restart")
+            sup.wait_state("writer", ("running",), timeout=30)
+            st = sup.stats()["children"]["writer"]
+            assert st["alive"] and st["pid"] != pid0
+            assert not os.path.exists(
+                os.path.join(flag_dir, "writer.restart"))
+        assert ("writer", "flagged", "restart flag") in sup.events
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe shm: torn publish → stuck-odd → adopt + GC + epoch republish
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"),
+                    reason="POSIX shm namespace required")
+class TestShmCrashSafety:
+    def test_torn_publish_adopt_gc_epoch(self):
+        from repro.serve.shm import (ShmPublisher, ShmReplica,
+                                     WriterDeadError, _Segment, _untrack)
+        prefix = f"tfault{os.getpid()}"
+        # boot-time GC: a leaked (untracked) orphan data segment from a
+        # kill-9'd writer is reclaimed, and republishing its version
+        # number does not collide
+        orphan = _Segment(name=f"{prefix}.v7", create=True, size=4096)
+        _untrack(orphan._name)
+        orphan.close()
+        pub = ShmPublisher(prefix)
+        try:
+            assert pub.reclaimed >= 1
+            pub.publish(1, 1, {"a": np.arange(6.)})
+            rep = ShmReplica(prefix, connect_timeout=10,
+                             seqlock_spin_s=0.15)
+            held = rep.current()
+            assert (held.epoch, held.version) == (1, 1)
+
+            # child adopts the prefix and dies mid-seqlock-swing
+            child = f"""
+import sys; sys.path.insert(0, "src")
+import numpy as np
+from repro.serve.faults import FaultPlan
+from repro.serve.shm import ShmPublisher
+plan = FaultPlan.build(FaultPlan.torn_publish(0, at_version=2))
+p = ShmPublisher({prefix!r},
+                 fault=plan.for_component("writer", 0))
+p.publish(2, 9, {{"a": np.arange(8.)}})
+raise SystemExit("unreachable")
+"""
+            proc = subprocess.run([sys.executable, "-c", child],
+                                  env=_env(), capture_output=True,
+                                  text=True, timeout=300)
+            assert proc.returncode == KILL_EXIT_CODE, proc.stderr
+
+            # stuck-odd protocol: bounded spin → re-attach → declared
+            # dead with a pid liveness probe; the held snapshot stays
+            # bit-identical all along
+            with pytest.raises(WriterDeadError) as ei:
+                rep.read_control()
+            assert not ei.value.alive
+            assert np.array_equal(held.arrays["a"], np.arange(6.))
+
+            # restart: adopt (epoch chain continues through the dead
+            # child's own adoption), republish the same version number
+            pub2 = ShmPublisher(prefix)
+            assert pub2.epoch >= 3           # 1 → child 2 → us 3
+            assert pub2.resumed_version == 2
+            pub2.publish(2, 9, {"a": np.full(8, 5.0)})
+            got = rep.current()
+            assert (got.epoch, got.version) == (pub2.epoch, 2)
+            assert np.array_equal(got.arrays["a"], np.full(8, 5.0))
+            rep.close()
+            pub2.close()
+        finally:
+            try:
+                pub.close(unlink=False)
+            except Exception:
+                pass
+
+    def test_replica_service_signals_writer_dead(self):
+        from repro.serve.shm import ReplicaService, ShmPublisher
+        prefix = f"tdead{os.getpid()}"
+        pub = ShmPublisher(prefix)
+        rng = np.random.default_rng(1)
+        m = StreamingMiner(SIZES, seed=1)
+        m.upsert(rng.integers(0, SIZES, size=(80, 3)).astype(np.int64))
+        idx = ClusterIndex.from_result(m.snapshot())
+        arrays = {"packed_sigs": idx.packed_sigs,
+                  "any_pairs": idx.any_pairs,
+                  "scores": np.zeros(len(idx)),
+                  "ages": np.zeros(len(idx)),
+                  "density": np.asarray(idx.density, np.float64),
+                  "gen_count": np.asarray(idx.gen_count, np.int64),
+                  "volume": np.asarray(idx.volume, np.float64)}
+        for k in range(idx.arity):
+            arrays[f"mode_pairs_{k}"] = idx.mode_pairs[k]
+            arrays[f"comp_ents_{k}"] = idx.comp_ents[k]
+            arrays[f"comp_bounds_{k}"] = idx.comp_bounds[k]
+        pub.publish(1, 1, arrays, meta={"n_modes": idx.arity})
+        deaths = []
+        svc = ReplicaService(prefix, poll_interval=0.01,
+                             connect_timeout=10, seqlock_spin_s=0.1,
+                             on_writer_dead=deaths.append,
+                             dead_signal_cooldown=0.0)
+        svc.start(first_snapshot_timeout=30)
+        try:
+            v = svc.version
+            # wedge the seqlock odd by hand — a writer dead mid-swing
+            import struct
+            pub._seq += 1
+            struct.pack_into("<Q", pub._ctl.buf, 0, pub._seq)
+            _wait_for(lambda: len(deaths) >= 1, timeout=30,
+                      what="writer-dead signal")
+            # the replica keeps serving its held snapshot and its
+            # /health stays alive (thread_alive True — the attach loop
+            # survived the WriterDeadError)
+            assert svc.version == v and svc.thread_alive
+            assert svc.stats()["writer_dead_signals"] >= 1
+            # writer finishes the swing: the replica recovers silently
+            pub._seq += 1
+            struct.pack_into("<Q", pub._ctl.buf, 0, pub._seq)
+            assert svc.query(entity=0, k=2).version == v
+        finally:
+            svc.stop()
+            pub.close()

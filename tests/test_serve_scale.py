@@ -146,6 +146,82 @@ def test_replica_process_observes_exact_writer_arrays(tmp_path):
     assert got["hashes"] == want
 
 
+def test_reader_waits_out_in_progress_publish(tmp_path):
+    """A reader that catches the seqlock odd (writer mid-swing) spins
+    — bounded — and completes with a consistent control read the moment
+    the writer lands the even sequence; it must never return a torn
+    (odd-observed) control block."""
+    import struct
+    import threading
+
+    shm = pytest.importorskip("repro.serve.shm")
+    prefix = f"trs-odd-{os.getpid()}"
+    pub = shm.ShmPublisher(prefix)
+    try:
+        pub.publish(1, 5, {"a": np.arange(4.0)})
+        rep = shm.ShmReplica(prefix, connect_timeout=10.0,
+                             seqlock_spin_s=30.0)
+        # wedge the seqlock odd by hand: a publish in progress
+        pub._seq += 1
+        struct.pack_into("<Q", pub._ctl.buf, 0, pub._seq)
+        out = {}
+        started = threading.Event()
+
+        def read():
+            started.set()
+            out["ctl"] = rep.read_control()
+
+        t = threading.Thread(target=read, daemon=True)
+        t.start()
+        started.wait(10)
+        assert t.is_alive()                  # spinning on the odd seq
+        # writer completes the swing: new payload, then even sequence
+        struct.pack_into(shm._CTL_FMT, pub._ctl.buf, 0, pub._seq,
+                         pub.epoch, 2, 9, 0.0, 0, 0)
+        pub._seq += 1
+        struct.pack_into("<Q", pub._ctl.buf, 0, pub._seq)
+        t.join(timeout=10)
+        assert not t.is_alive()
+        # the reader saw the *completed* publish, never the torn state
+        assert out["ctl"]["version"] == 2
+        assert out["ctl"]["stream_version"] == 9
+        rep.close()
+    finally:
+        pub.close()
+
+
+def test_held_bundle_survives_unlink_bit_identical(tmp_path):
+    """The single-reference swap contract: after the writer publishes
+    v2 and unlinks v1, a reader still holding v1's bundle answers
+    bit-identically from the (name-unlinked, memory-held) segment."""
+    shm = pytest.importorskip("repro.serve.shm")
+    prefix = f"trs-unlink-{os.getpid()}"
+    a1 = {"a": np.arange(32, dtype=np.float64),
+          "b": np.arange(8, dtype=np.int64) * 3}
+    want = {k: hashlib.sha256(v.tobytes()).hexdigest()
+            for k, v in a1.items()}
+    pub = shm.ShmPublisher(prefix)
+    try:
+        pub.publish(1, 1, a1)
+        rep = shm.ShmReplica(prefix, connect_timeout=10.0)
+        held = rep.current()
+        assert held.version == 1
+        pub.publish(2, 2, {"a": np.zeros(32), "b": np.zeros(8, np.int64)})
+        # v1's name is gone from the namespace...
+        assert not os.path.exists(f"/dev/shm/{prefix}.v1") \
+            or not os.path.isdir("/dev/shm")
+        # ...but the held mapping still reads back byte-for-byte
+        got = {k: hashlib.sha256(v.tobytes()).hexdigest()
+               for k, v in held.arrays.items()}
+        assert got == want
+        # and the replica's next attach follows the swap to v2
+        cur = rep.current()
+        assert cur.version == 2 and float(cur.arrays["a"].sum()) == 0.0
+        rep.close()
+    finally:
+        pub.close()
+
+
 def test_router_merge_ranks_dedups_truncates():
     from repro.serve.router import _merge_hits
 
