@@ -33,6 +33,16 @@ Gates (asserted here and schema-checked by ``benchmarks/validate.py``):
   injected crash, not a bug) for both victims.
 
 Emits the ``serving_faults`` section (``results/chaos.json``).
+
+``run_integrity`` is the fail-silent half (ISSUE 8): seeded bit rot
+injected at every persistence surface — an interior WAL record, the
+current checkpoint generation, a published shm segment — with the gate
+that **every** corruption is detected (CRC frames / manifest checksums
+refuse the bytes, never serve them), recovery is bit-identical to an
+uninterrupted control, and zero answers were silently wrong along the
+way.  The clean-path cost of the defence (checksumming one snapshot's
+arrays) is measured against the snapshot-swap latency and bounded.
+Emits the ``serving_integrity`` section (``results/integrity.json``).
 """
 from __future__ import annotations
 
@@ -335,5 +345,271 @@ def _probe_sv(cl) -> int:
         return -1
 
 
+# ---------------------------------------------------------------------------
+# Corruption chaos (ISSUE 8): injected bit rot at every persistence
+# surface, gated on zero silently-wrong answers
+# ---------------------------------------------------------------------------
+
+N_CHUNKS = 12                 # stream ops per corruption scenario
+WAL_FLIP_SV = N_CHUNKS - 3    # interior: verified records follow it
+OVERHEAD_REPS = 9
+OVERHEAD_BOUND_PCT = 5.0      # crc cost vs snapshot-swap latency
+
+
+def _quiesced(sizes, seed, **kw):
+    """An in-process service with background refresh effectively off —
+    every state transition in the scenarios is explicit."""
+    from repro.serve.ranking import RankingPolicy
+    from repro.serve.service import TriclusterService
+    return TriclusterService(sizes, backend="streaming",
+                             refresh_interval=60.0,
+                             dirty_threshold=1 << 30,
+                             policy=RankingPolicy(1.0, 0.0, 0.0),
+                             seed=seed or 0x5EED, **kw)
+
+
+def _sigs(svc):
+    return [(int(v.signature[0]), int(v.signature[1]),
+             round(float(s), 12))
+            for v, s in svc.query(k=TOP_K).hits]
+
+
+def _scenario_wal_flip(ctx, chunks, seed, tmp) -> dict:
+    """One interior WAL record rots after its CRC was taken.  The
+    successor must quarantine the file, replay exactly the verified
+    prefix, and answer bit-identically to a control fed that prefix."""
+    rec = os.path.join(tmp, "wal")
+    os.makedirs(rec, exist_ok=True)
+    plan = FaultPlan.build(
+        FaultPlan.flip_wal_byte(0, at_stream_version=WAL_FLIP_SV),
+        seed=seed)
+    vic = _quiesced(ctx.sizes, seed, recover_dir=rec,
+                    checkpoint_every=10**9,
+                    fault=plan.for_component("writer", 0))
+    for c in chunks:
+        vic.add(c)
+    assert vic.stream_version == len(chunks)   # the victim never knows
+    del vic                                    # crash
+
+    successor = _quiesced(ctx.sizes, seed, recover_dir=rec,
+                          checkpoint_every=10**9)
+    r = dict(successor.recovered or {})
+    detected = (r.get("wal_crc_errors", 0) >= 1
+                and bool(r.get("wal_quarantined")))
+    ctl = _quiesced(ctx.sizes, seed)
+    for c in chunks[:WAL_FLIP_SV - 1]:
+        ctl.add(c)
+    successor.refresh()
+    ctl.refresh()
+    bit = (_sigs(successor) == _sigs(ctl)
+           and successor.stream_version == ctl.stream_version
+           == WAL_FLIP_SV - 1)
+    out = {"injected": 1, "detected": bool(detected),
+           "bit_identical": bool(bit),
+           "silent_wrong": 0 if bit and detected else 1,
+           "recovered_sv": int(successor.stream_version),
+           "replayed_ops": int(r.get("replayed_ops", 0)),
+           "quarantined": str(r.get("wal_quarantined", ""))}
+    successor.stop()
+    ctl.stop()
+    return out
+
+
+def _scenario_ckpt_truncate(ctx, chunks, seed, tmp) -> dict:
+    """The current checkpoint generation is truncated on disk after its
+    frame was written.  Recovery must refuse it, quarantine it, restore
+    the rotated previous generation and replay the WAL tail — data loss
+    bounded to the ops between the two generations."""
+    rec = os.path.join(tmp, "ckpt")
+    os.makedirs(rec, exist_ok=True)
+    plan = FaultPlan.build(
+        FaultPlan.truncate_checkpoint(0, at_version=2), seed=seed)
+    vic = _quiesced(ctx.sizes, seed, recover_dir=rec,
+                    checkpoint_every=2,
+                    fault=plan.for_component("writer", 0))
+    vic.add(chunks[0])
+    vic.add(chunks[1])
+    vic.refresh()                              # generation 1 (sv=2)
+    vic.add(chunks[2])
+    vic.add(chunks[3])
+    vic.refresh()                              # generation 2 — truncated
+    vic.add(chunks[4])                         # WAL tail: sv=5
+    assert vic.stats()["checkpoints"] == 2
+    del vic                                    # crash
+
+    successor = _quiesced(ctx.sizes, seed, recover_dir=rec,
+                          checkpoint_every=10**9)
+    r = dict(successor.recovered or {})
+    detected = (r.get("checkpoint_quarantined", 0) >= 1
+                and r.get("checkpoint_generation") == "previous")
+    ctl = _quiesced(ctx.sizes, seed)
+    ctl.add(chunks[0])
+    ctl.add(chunks[1])
+    ctl.add(chunks[4])                         # chunks 2/3 are the loss
+    successor.refresh()
+    ctl.refresh()
+    bit = (_sigs(successor) == _sigs(ctl)
+           and successor.stream_version == 5)
+    out = {"injected": 1, "detected": bool(detected),
+           "bit_identical": bool(bit),
+           "silent_wrong": 0 if bit and detected else 1,
+           "recovered_sv": int(successor.stream_version),
+           "generation": str(r.get("checkpoint_generation", "")),
+           "replayed_ops": int(r.get("replayed_ops", 0))}
+    successor.stop()
+    ctl.stop()
+    return out
+
+
+def _scenario_shm_flip(ctx, chunks, seed, tmp):
+    """One aligned word of a published shm segment is inverted after
+    the manifest checksums were recorded.  The replica must refuse the
+    segment at attach (serving its held snapshot, bit-identical, the
+    whole time), escalate, and recover on the next clean publish."""
+    if not os.path.isdir("/dev/shm"):
+        return None
+    from repro.serve.shm import ReplicaService, ShmPublisher
+
+    prefix = f"ci{os.getpid()}"
+    plan = FaultPlan.build(FaultPlan.flip_shm_word(0, at_version=2),
+                           seed=seed)
+    pub = ShmPublisher(prefix, fault=plan.for_component("writer", 0))
+    svc = _quiesced(ctx.sizes, seed, publisher=pub)
+    rep = None
+    try:
+        for c in chunks[:4]:
+            svc.add(c)
+        svc.refresh()                          # v1 published clean
+        rep = ReplicaService(prefix, poll_interval=0.005,
+                             connect_timeout=60, seqlock_spin_s=0.5,
+                             dead_signal_cooldown=0.0,
+                             scrub_interval=0.02)
+        rep.start(first_snapshot_timeout=60)
+        held = _sigs(rep)
+        svc.add(chunks[4])
+        svc.refresh()                          # v2 — word inverted
+        _wait(lambda: rep.resilience_stats()["shm_corruptions"] >= 1,
+              30.0, "corrupt segment refused")
+        # the silently-wrong-answer counter: while the rotted v2 is
+        # refused, every replica answer must be the held v1 snapshot
+        wrong = 0
+        for _ in range(20):
+            if rep.version != 1 or _sigs(rep) != held:
+                wrong += 1
+        detected = rep.resilience_stats()["shm_corruptions"] >= 1
+        svc.add(chunks[5])
+        svc.refresh()                          # v3 — clean (fault spent)
+        _wait(lambda: rep.version == svc.version, 30.0,
+              "clean republish attached")
+        bit = _sigs(rep) == _sigs(svc) and wrong == 0
+        return {"injected": 1, "detected": bool(detected),
+                "bit_identical": bool(bit),
+                "silent_wrong": int(wrong),
+                "corruptions_seen":
+                    int(rep.resilience_stats()["shm_corruptions"]),
+                "recovered_version": int(rep.version)}
+    finally:
+        if rep is not None:
+            rep.stop()
+        svc.stop()
+        pub.close()
+
+
+def _checksum_overhead(ctx, chunks, seed) -> dict:
+    """Clean-path cost of the defence: the median time to checksum one
+    snapshot's published arrays (``shm.checksum64`` — the only
+    checksum on the swap path; WAL/checkpoint CRC32s are write-side
+    and amortised) vs the median snapshot-swap (write + re-mine +
+    publish) latency it rides on."""
+    from repro.serve.shm import checksum64
+
+    svc = _quiesced(ctx.sizes, seed)
+    for c in chunks[:4]:
+        svc.add(c)
+    svc.refresh()                              # warm the miner
+    wrng = np.random.default_rng(seed + 5)
+    swap_ms, crc_ms = [], []
+    for _ in range(OVERHEAD_REPS):
+        rows = wrng.integers(0, ctx.sizes,
+                             (4, len(ctx.sizes))).astype(np.int64)
+        svc.upsert(rows)
+        t0 = time.perf_counter()
+        svc.refresh()
+        swap_ms.append((time.perf_counter() - t0) * 1e3)
+        snap = svc._snap
+        idx = snap.index
+        arrays = [idx.packed_sigs, idx.any_pairs, snap.querier.scores,
+                  np.asarray(snap.ages, np.float64),
+                  np.asarray(idx.density, np.float64),
+                  np.asarray(idx.gen_count, np.int64),
+                  np.asarray(idx.volume, np.float64)]
+        for k in range(len(idx.mode_pairs)):
+            arrays += [idx.mode_pairs[k], idx.comp_ents[k],
+                       idx.comp_bounds[k]]
+        # the publish path materialises contiguous arrays whether or
+        # not checksums are on — the defence's incremental cost is the
+        # checksum pass alone, so that is what the gate times
+        arrays = [np.ascontiguousarray(a) for a in arrays]
+        t0 = time.perf_counter()
+        for a in arrays:
+            checksum64(a)
+        crc_ms.append((time.perf_counter() - t0) * 1e3)
+    svc.stop()
+    crc, swap = float(np.median(crc_ms)), float(np.median(swap_ms))
+    return {"checksum_ms": crc, "swap_ms": swap,
+            "overhead_pct": 100.0 * crc / max(swap, 1e-9)}
+
+
+def run_integrity(scale: float = 0.02, seed: int = 11,
+                  out_name: str = "integrity.json") -> dict:
+    from repro.launch.tricluster import load_dataset
+
+    n = max(2_000, int(1_000_000 * scale))
+    ctx = load_dataset("movielens", n, seed)
+    step = -(-ctx.tuples.shape[0] // N_CHUNKS)
+    chunks = [ctx.tuples[lo:lo + step]
+              for lo in range(0, ctx.tuples.shape[0], step)][:N_CHUNKS]
+    tmp = tempfile.mkdtemp(prefix="bench-integrity-")
+    sites = {"wal_interior": _scenario_wal_flip(ctx, chunks, seed, tmp),
+             "checkpoint": _scenario_ckpt_truncate(ctx, chunks, seed,
+                                                   tmp)}
+    shm = _scenario_shm_flip(ctx, chunks, seed, tmp)
+    if shm is not None:
+        sites["shm"] = shm
+    overhead = _checksum_overhead(ctx, chunks, seed)
+
+    out = {"n_tuples": int(ctx.tuples.shape[0]), "seed": int(seed),
+           "scale": float(scale),
+           "injected": int(sum(s["injected"] for s in sites.values())),
+           "detected": int(sum(s["injected"] for s in sites.values()
+                               if s["detected"])),
+           "silent_wrong": int(sum(s["silent_wrong"]
+                                   for s in sites.values())),
+           "sites": sites, "checksum_overhead": overhead}
+
+    # ---- the gates this benchmark exists for ------------------------
+    assert out["detected"] == out["injected"], out
+    assert out["silent_wrong"] == 0, \
+        f"{out['silent_wrong']} silently-wrong answers served"
+    for name, s in sites.items():
+        assert s["detected"], f"{name}: corruption served undetected"
+        assert s["bit_identical"], f"{name}: recovery diverged ({s})"
+    assert overhead["overhead_pct"] <= OVERHEAD_BOUND_PCT, overhead
+
+    print_table(
+        "serving_integrity: injected bit rot detected + recovered",
+        ["site", "injected", "detected", "bit_identical",
+         "silent_wrong"],
+        [[name, s["injected"], s["detected"], s["bit_identical"],
+          s["silent_wrong"]] for name, s in sites.items()])
+    print(f"  checksum overhead: sum64 {overhead['checksum_ms']:.3f}ms "
+          f"/ swap {overhead['swap_ms']:.1f}ms = "
+          f"{overhead['overhead_pct']:.2f}% "
+          f"(bound {OVERHEAD_BOUND_PCT}%)")
+    save_json(out_name, {"serving_integrity": out})
+    return out
+
+
 if __name__ == "__main__":
     run(scale=0.01)
+    run_integrity(scale=0.01)

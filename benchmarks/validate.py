@@ -66,6 +66,18 @@ FAULTS_KEYS = {"shards": int, "replicas": int, "queries": int,
                "stream_version_final": int}
 FAULTS_RECOVERY_BOUND_S = 30.0
 FAULTS_KILL_EXIT = 23
+#: integrity section (``benchmarks/chaos.py`` run_integrity): every
+#: injected corruption must be *detected* (never served as a wrong
+#: answer), recovery must be bit-identical to the uninterrupted
+#: control, and the clean-path checksum pass must cost <= 5% of the
+#: snapshot-swap latency it rides on (DESIGN.md §9).
+INTEGRITY_KEYS = {"n_tuples": int, "seed": int, "injected": int,
+                  "detected": int, "silent_wrong": int}
+INTEGRITY_REQUIRED_SITES = {"wal_interior", "checkpoint"}
+INTEGRITY_OVERHEAD_KEYS = {"checksum_ms": (int, float),
+                           "swap_ms": (int, float),
+                           "overhead_pct": (int, float)}
+INTEGRITY_OVERHEAD_BOUND_PCT = 5.0
 
 
 def validate(doc: dict) -> list[str]:
@@ -73,9 +85,14 @@ def validate(doc: dict) -> list[str]:
     faults = doc.get("serving_faults")
     if faults is not None:
         errs.extend(_validate_serving_faults(faults))
-    # a chaos-only doc (results/chaos.json) carries just the
-    # serving_faults section — the mining-row schema does not apply
-    chaos_only = faults is not None and "rows" not in doc
+    integ = doc.get("serving_integrity")
+    if integ is not None:
+        errs.extend(_validate_serving_integrity(integ))
+    # a chaos-only doc (results/chaos.json, results/integrity.json)
+    # carries just its fault/integrity section — the mining-row schema
+    # does not apply
+    chaos_only = (faults is not None or integ is not None) \
+        and "rows" not in doc
     if not chaos_only and not isinstance(doc.get("scale"), (int, float)):
         errs.append("missing/invalid top-level 'scale'")
     rows = doc.get("rows")
@@ -309,6 +326,68 @@ def _validate_serving_faults(sec) -> list[str]:
     return errs
 
 
+def _validate_serving_integrity(sec) -> list[str]:
+    errs = []
+    if not isinstance(sec, dict):
+        return ["'serving_integrity' section is not a dict"]
+    for key, typ in INTEGRITY_KEYS.items():
+        if not isinstance(sec.get(key), typ) or isinstance(sec.get(key),
+                                                           bool):
+            errs.append(f"serving_integrity: bad '{key}' "
+                        f"({sec.get(key)!r})")
+    inj, det = sec.get("injected"), sec.get("detected")
+    if isinstance(inj, int) and isinstance(det, int):
+        if inj < 1:
+            errs.append("serving_integrity: no corruption was injected")
+        if det != inj:
+            errs.append(f"serving_integrity: {inj - det} of {inj} "
+                        "injected corruptions went undetected")
+    if sec.get("silent_wrong") != 0:
+        errs.append(f"serving_integrity: {sec.get('silent_wrong')!r} "
+                    "silently-wrong answers served (corruption must be "
+                    "detected, never returned)")
+    sites = sec.get("sites")
+    if not isinstance(sites, dict) or not sites:
+        errs.append("serving_integrity: 'sites' missing or empty")
+    else:
+        missing = INTEGRITY_REQUIRED_SITES - set(sites)
+        if missing:
+            errs.append(f"serving_integrity: sites missing "
+                        f"{sorted(missing)} (shm is optional — needs "
+                        "/dev/shm)")
+        for name, s in sites.items():
+            if not isinstance(s, dict):
+                errs.append(f"serving_integrity.sites[{name}]: not a "
+                            "dict")
+                continue
+            if s.get("detected") is not True:
+                errs.append(f"serving_integrity.sites[{name}]: "
+                            "corruption served undetected")
+            if s.get("bit_identical") is not True:
+                errs.append(f"serving_integrity.sites[{name}]: recovery "
+                            "diverged from the uninterrupted control")
+            if s.get("silent_wrong") != 0:
+                errs.append(f"serving_integrity.sites[{name}]: "
+                            f"{s.get('silent_wrong')!r} silently-wrong "
+                            "answers")
+    ovh = sec.get("checksum_overhead")
+    if not isinstance(ovh, dict):
+        errs.append("serving_integrity: 'checksum_overhead' missing")
+    else:
+        for key, typ in INTEGRITY_OVERHEAD_KEYS.items():
+            if not isinstance(ovh.get(key), typ) \
+                    or isinstance(ovh.get(key), bool):
+                errs.append(f"serving_integrity.checksum_overhead: bad "
+                            f"'{key}' ({ovh.get(key)!r})")
+        pct = ovh.get("overhead_pct")
+        if isinstance(pct, (int, float)) \
+                and pct > INTEGRITY_OVERHEAD_BOUND_PCT:
+            errs.append(f"serving_integrity: clean-path checksum cost "
+                        f"{pct:.2f}% of a snapshot swap (bound "
+                        f"{INTEGRITY_OVERHEAD_BOUND_PCT}%)")
+    return errs
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else os.path.join(RESULTS_DIR,
@@ -326,10 +405,19 @@ def main(argv=None):
         print(f"[validate] FAIL: {len(errs)} problem(s) in {path}")
         return 1
     if "rows" not in doc:                     # chaos-only doc
-        f = doc["serving_faults"]
-        print(f"[validate] OK: serving_faults — {f['queries']} queries, "
-              f"{f['degraded']} degraded, 0 gateway 5xx, recovery "
-              f"{f['recovery_s']:.1f}s, bit_identical={f['bit_identical']}")
+        if "serving_faults" in doc:
+            f = doc["serving_faults"]
+            print(f"[validate] OK: serving_faults — {f['queries']} "
+                  f"queries, {f['degraded']} degraded, 0 gateway 5xx, "
+                  f"recovery {f['recovery_s']:.1f}s, "
+                  f"bit_identical={f['bit_identical']}")
+        if "serving_integrity" in doc:
+            g = doc["serving_integrity"]
+            print(f"[validate] OK: serving_integrity — "
+                  f"{g['detected']}/{g['injected']} corruptions "
+                  f"detected over {sorted(g['sites'])}, 0 silent-wrong, "
+                  f"checksum overhead "
+                  f"{g['checksum_overhead']['overhead_pct']:.2f}%")
         return 0
     n = len(doc["rows"])
     print(f"[validate] OK: {n} rows, scale={doc['scale']}"

@@ -11,6 +11,11 @@
 #   * chaos smoke — benchmarks/chaos.py kill-and-restart cycle through
 #     a supervised 2x2 plane: zero gateway 5xx, bounded recovery,
 #     bit-identical post-recovery answers (serving_faults schema gate);
+#   * integrity smoke — benchmarks/chaos.py corruption drill: inject
+#     WAL bit rot, checkpoint truncation and shm word flips; every
+#     corruption must be detected (zero silently-wrong answers),
+#     recovery bit-identical, clean-path checksum cost <= 5% of a
+#     snapshot swap (serving_integrity schema gate);
 #   * trend smoke — render the calibration-normalised cross-PR trend
 #     report from the git history of results/BENCH_mining.json.
 # Usage: scripts/ci.sh [extra pytest args...]
@@ -71,6 +76,21 @@ from benchmarks.chaos import run
 run(scale=0.004, out_name="chaos_smoke.json")
 EOF
 python -m benchmarks.validate results/chaos_smoke.json
+
+echo "== integrity smoke (injected corruption detected + recovered) =="
+# corruption drill over every durable surface: flip a WAL byte at a
+# committed record (interior poison -> quarantine + forced
+# checkpoint), truncate the newest checkpoint generation (fall back to
+# the previous one + WAL replay), flip a word in a published shm
+# segment (replica refuses the attach, keeps its held snapshot).
+# Gates asserted in-run and then schema-checked: detected == injected,
+# zero silently-wrong answers, bit-identical recovery, and the
+# clean-path checksum pass <= 5% of the snapshot-swap it defends
+python - <<'EOF'
+from benchmarks.chaos import run_integrity
+run_integrity(scale=0.004, out_name="integrity_smoke.json")
+EOF
+python -m benchmarks.validate results/integrity_smoke.json
 
 echo "== trend smoke (calibration-normalised cross-PR report) =="
 python scripts/render_trend.py --limit 8

@@ -55,6 +55,7 @@ amortised once per row over the stream.
 from __future__ import annotations
 
 import dataclasses
+import struct
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -517,17 +518,35 @@ class RunStore:
 
 # -- durable checkpoints (crash recovery) -----------------------------------
 
+#: checkpoint frame: magic + ``<QI`` (payload length, CRC32 of payload),
+#: followed by the ``.npz`` payload.  Files without the magic are
+#: legacy plain-npz checkpoints and load without verification.
+CKPT_MAGIC = b"RCK1"
+_CKPT_HDR = struct.Struct("<QI")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A framed checkpoint failed its length/CRC check: the bytes on
+    disk are not the bytes that were persisted.  Callers quarantine the
+    file and fall back to the previous generation (DESIGN.md §9)."""
+
+
 def save_checkpoint(blob: dict, path: str, meta: Optional[dict] = None
                     ) -> None:
-    """Persist a :meth:`RunStore.checkpoint` blob to ``path`` as one
-    ``.npz`` (nested run arrays flattened to named entries), written
-    atomically — ``path.tmp`` then ``os.replace`` — so a crash mid-write
-    can never leave a half-checkpoint where a restart would read it.
-    ``meta`` rides along (JSON-encoded) for engine-level counters the
-    blob itself does not carry (e.g. the serving plane's
-    ``stream_version`` / publish version)."""
+    """Persist a :meth:`RunStore.checkpoint` blob to ``path`` as a
+    CRC32-framed ``.npz`` (nested run arrays flattened to named
+    entries), written atomically — ``path.tmp`` then ``os.replace`` —
+    so a crash mid-write can never leave a half-checkpoint where a
+    restart would read it; the :data:`CKPT_MAGIC` header carries the
+    payload length and checksum so :func:`load_checkpoint` can tell
+    bit rot or truncation from a valid blob.  ``meta`` rides along
+    (JSON-encoded) for engine-level counters the blob itself does not
+    carry (e.g. the serving plane's ``stream_version`` / publish
+    version)."""
+    import io as _io
     import json as _json
     import os as _os
+    import zlib as _zlib
     arrays = {"buffer": np.asarray(blob["buffer"], np.int32),
               "scalars": np.asarray(
                   [int(blob["count"]), int(blob.get("covered", 0)),
@@ -546,9 +565,14 @@ def save_checkpoint(blob: dict, path: str, meta: Optional[dict] = None
             arrays[f"run{ri}_idx{m}"] = np.asarray(i, np.int32)
     arrays["meta_json"] = np.frombuffer(
         _json.dumps(meta or {}).encode(), np.uint8)
+    buf = _io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
     tmp = f"{path}.tmp"
     with open(tmp, "wb") as f:
-        np.savez(f, **arrays)
+        f.write(CKPT_MAGIC)
+        f.write(_CKPT_HDR.pack(len(payload), _zlib.crc32(payload)))
+        f.write(payload)
         f.flush()
         _os.fsync(f.fileno())
     _os.replace(tmp, path)
@@ -556,9 +580,33 @@ def save_checkpoint(blob: dict, path: str, meta: Optional[dict] = None
 
 def load_checkpoint(path: str) -> Tuple[dict, dict]:
     """Inverse of :func:`save_checkpoint`: returns ``(blob, meta)``
-    ready for :meth:`RunStore.restore`."""
+    ready for :meth:`RunStore.restore`.  Framed checkpoints are
+    verified against their recorded length and CRC32 first — a
+    truncated or bit-rotted file raises
+    :class:`CheckpointCorruptError` instead of restoring garbage."""
+    import io as _io
     import json as _json
-    with np.load(path) as z:
+    import zlib as _zlib
+    with open(path, "rb") as f:
+        head = f.read(len(CKPT_MAGIC))
+        if head == CKPT_MAGIC:
+            hdr = f.read(_CKPT_HDR.size)
+            if len(hdr) < _CKPT_HDR.size:
+                raise CheckpointCorruptError(
+                    f"{path}: truncated frame header")
+            length, crc = _CKPT_HDR.unpack(hdr)
+            payload = f.read(length + 1)  # +1 detects trailing bytes
+            if len(payload) != length:
+                raise CheckpointCorruptError(
+                    f"{path}: payload is {len(payload)} bytes, "
+                    f"frame promised {length}")
+            if _zlib.crc32(payload) != crc:
+                raise CheckpointCorruptError(
+                    f"{path}: payload CRC mismatch")
+            src = _io.BytesIO(payload)
+        else:
+            src = path      # legacy plain .npz: no frame to verify
+    with np.load(src) as z:
         count, covered, incremental, n_runs, with_values = (
             int(v) for v in z["scalars"])
         blob = {"buffer": z["buffer"], "count": count, "covered": covered,

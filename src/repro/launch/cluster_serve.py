@@ -82,7 +82,8 @@ def _serve(args) -> int:
         dirty_threshold=args.dirty_threshold, policy=policy,
         delta_index=not args.no_delta_index, seed=args.seed or 0x5EED,
         recover_dir=args.recover_dir or None,
-        checkpoint_every=args.checkpoint_every, fault=inj)
+        checkpoint_every=args.checkpoint_every,
+        scrub_interval=args.scrub_interval, fault=inj)
     n = ctx.tuples.shape[0]
     if not svc.recovered:                    # a recovered store already
         step = -(-n // max(1, args.preload_chunks))  # holds the data
@@ -96,6 +97,7 @@ def _serve(args) -> int:
                          verbose=args.verbose,
                          health_max_staleness=(args.health_max_staleness
                                                or None),
+                         max_write_backlog=args.max_write_backlog,
                          fault=inj)
     flag = {"unlink": True}
     _install_sigterm(server, flag)
@@ -195,6 +197,9 @@ def _child_writer(cfg: dict) -> None:
         seed=cfg["seed"] or 0x5EED,
         recover_dir=cfg.get("recover_dir") or None,
         checkpoint_every=cfg.get("checkpoint_every", 64),
+        scrub_interval=cfg.get("scrub_interval", 0.5),
+        event_dir=cfg.get("flag_dir") or None,
+        event_name=f"shard-{cfg['shard']}",
         version_base=(0 if publisher is None
                       else publisher.resumed_version),
         fault=inj)
@@ -224,6 +229,7 @@ def _child_writer(cfg: dict) -> None:
         lambda p: make_server(
             svc, host=cfg["host"], port=p, verbose=cfg["verbose"],
             health_max_staleness=cfg.get("health_max_staleness"),
+            max_write_backlog=cfg.get("max_write_backlog", 0),
             fault=inj),
         _stable_port(cfg))
     flag = {"unlink": True}
@@ -269,6 +275,7 @@ def _child_replica(cfg: dict) -> None:
     svc = ReplicaService(cfg["shm_prefix"],
                          connect_timeout=cfg["timeout"],
                          seqlock_spin_s=cfg.get("seqlock_spin_s", 1.0),
+                         scrub_interval=cfg.get("scrub_interval", 0.5),
                          on_writer_dead=on_dead)
     svc.start(first_snapshot_timeout=cfg["timeout"])
     server = _bind_server(
@@ -323,6 +330,8 @@ def _serve_topology(args) -> int:
         "checkpoint_every": args.checkpoint_every,
         "health_max_staleness": args.health_max_staleness or None,
         "drain_timeout": args.drain_timeout,
+        "max_write_backlog": args.max_write_backlog,
+        "scrub_interval": args.scrub_interval,
         "flag_dir": "" if args.no_supervise else tmp,
     }
     sup = Supervisor(flag_dir=tmp,
@@ -544,6 +553,12 @@ def main(argv=None):
                          "dir, so supervisor restarts recover)")
     ap.add_argument("--checkpoint-every", type=int, default=64,
                     help="persist a RunStore checkpoint each N writes")
+    ap.add_argument("--max-write-backlog", type=int, default=0,
+                    help=">0: answer 429 + Retry-After on writes once "
+                         "this many are pending a re-mine (0 = off)")
+    ap.add_argument("--scrub-interval", type=float, default=0.5,
+                    help="background integrity-scrub cadence (s); "
+                         "0 disables the scrubber thread")
     ap.add_argument("--health-max-staleness", type=float, default=0.0,
                     help=">0: /health answers 503 once the snapshot is "
                          "older than this with writes outstanding")

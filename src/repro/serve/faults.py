@@ -25,6 +25,22 @@ Fault sites (the strings instrumented code fires):
   and ``hang`` delay it (``hang`` defaults to effectively forever —
   the circuit-breaker fixture).
 
+**Corruption sites** (the fail-silent half — DESIGN.md §9): three
+sites are *polled* via :meth:`FaultInjector.corrupt` instead of fired,
+because the corruption itself must be enacted by the code that owns
+the bytes, **after** the protecting checksum was computed — so the
+integrity plane's detection, not luck, is what the chaos run gates:
+
+* ``wal``        — polled by ``TriclusterService._wal_append`` with
+  the record's stream version: ``flip`` rots one byte of the framed
+  payload on disk (the in-memory apply is untouched — silent at-rest
+  corruption).
+* ``checkpoint`` — polled after ``RunStore`` checkpoint persistence
+  with the publish version: ``truncate`` cuts the blob in half.
+* ``shm``        — polled by ``ShmPublisher.publish`` after the
+  arrays are written: ``flip`` inverts one aligned word of the first
+  sizeable array in the segment.
+
 Plans are scoped per component: ``plan.for_component(role, shard,
 replica)`` returns the :class:`FaultInjector` holding exactly the
 faults aimed at that component (``-1`` fields are wildcards), so one
@@ -44,9 +60,13 @@ from typing import List, Optional, Sequence, Tuple
 #: tests can tell an injected crash from a genuine one.
 KILL_EXIT_CODE = 23
 
-KINDS = ("kill", "hang", "drop", "slow")
-SITES = ("write", "publish", "torn", "request")
+KINDS = ("kill", "hang", "drop", "slow", "flip", "truncate")
+SITES = ("write", "publish", "torn", "request", "wal", "checkpoint", "shm")
 ROLES = ("writer", "replica", "router", "*")
+
+#: kinds enacted by the *call site* via :meth:`FaultInjector.corrupt`
+#: rather than by :meth:`FaultInjector.fire`
+CORRUPT_KINDS = ("flip", "truncate")
 
 
 class DropRequest(Exception):
@@ -59,8 +79,8 @@ class Fault:
     """One armed fault.  ``at`` is compared against the counter the
     site fires with; ``every`` re-arms periodically past ``at``;
     ``count`` caps total firings (0 = unlimited)."""
-    kind: str                 # kill | hang | drop | slow
-    site: str                 # write | publish | torn | request
+    kind: str                 # kill | hang | drop | slow | flip | truncate
+    site: str                 # write | publish | torn | request | wal | checkpoint | shm
     role: str = "*"           # writer | replica | router | *
     shard: int = -1           # -1 = any
     replica: int = -1         # -1 = any
@@ -145,6 +165,33 @@ class FaultPlan:
         return Fault("hang", "request", role="replica", shard=shard,
                      replica=replica, at=int(at_request),
                      count=int(count), param=float(for_s))
+
+    @staticmethod
+    def flip_wal_byte(shard: int, at_stream_version: int,
+                      count: int = 1) -> Fault:
+        """Rot one byte of the WAL record framed at stream version N —
+        after its CRC was computed, so only replay-time verification
+        can catch it (the victim's in-memory state is untouched)."""
+        return Fault("flip", "wal", role="writer", shard=shard,
+                     at=int(at_stream_version), count=int(count))
+
+    @staticmethod
+    def truncate_checkpoint(shard: int, at_version: int,
+                            count: int = 1) -> Fault:
+        """Cut the checkpoint blob persisted at publish version N in
+        half on disk — the framed length/CRC header must reject it and
+        recovery must fall back to the previous generation."""
+        return Fault("truncate", "checkpoint", role="writer",
+                     shard=shard, at=int(at_version), count=int(count))
+
+    @staticmethod
+    def flip_shm_word(shard: int, at_version: int,
+                      count: int = 1) -> Fault:
+        """Invert one aligned 8-byte word inside the data segment of
+        snapshot version N, after the manifest checksums were taken —
+        replicas must refuse the segment at attach-time verify."""
+        return Fault("flip", "shm", role="writer", shard=shard,
+                     at=int(at_version), count=int(count))
 
     @staticmethod
     def drop_requests(role: str, shard: int, at: int, every: int = 0,
@@ -254,7 +301,7 @@ class FaultInjector:
                 value = self._counters.get(site, 0) + 1
                 self._counters[site] = value
             for i, f in enumerate(self.faults):
-                if f.site != site:
+                if f.site != site or f.kind in CORRUPT_KINDS:
                     continue
                 if f.due(int(value), self._fired[i]):
                     self._fired[i] += 1
@@ -273,6 +320,23 @@ class FaultInjector:
                 os._exit(KILL_EXIT_CODE)
         if drop:
             raise DropRequest(f"injected drop at {site}#{value}")
+
+    def corrupt(self, site: str, value: int) -> Optional[Fault]:
+        """Poll the corruption sites: return the armed ``flip`` /
+        ``truncate`` fault due at ``value`` (marking it fired), else
+        ``None``.  Unlike :meth:`fire`, the *caller* enacts the damage
+        — it owns the bytes being rotted and must do so after the
+        protecting checksum was computed."""
+        if not self.faults:
+            return None
+        with self._lock:
+            for i, f in enumerate(self.faults):
+                if f.site != site or f.kind not in CORRUPT_KINDS:
+                    continue
+                if f.due(int(value), self._fired[i]):
+                    self._fired[i] += 1
+                    return f
+        return None
 
 
 #: shared no-op injector for call sites that want an always-valid object

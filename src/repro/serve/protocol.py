@@ -26,7 +26,12 @@ Routes (all bodies/responses JSON):
   ``{stream_version, dirty}`` (the background thread picks the write up
   on its cadence/threshold; follow with ``/refresh`` to force).
   **501** on a read-only replica (``serve.shm.ReplicaService``) —
-  writes go to the shard's writer endpoint
+  writes go to the shard's writer endpoint.  **429** + ``Retry-After``
+  when the server was built with ``max_write_backlog`` and the
+  pending-write backlog (writes since the last published snapshot) has
+  reached it — write backpressure: the miner is behind, keep accepting
+  and it degrades unboundedly.  :class:`ClusterClient` honours
+  ``Retry-After`` once before surfacing the error
 * ``POST /refresh`` — synchronous re-mine + swap; returns the new
   ``{version, stream_version, clusters}`` (**501** on a replica)
 * ``POST /shutdown`` — stop serving (enabled by default; pass
@@ -70,15 +75,19 @@ def health_doc(svc, max_staleness_s: Optional[float] = None) -> dict:
     """The /health body for any service-shaped object (in-process
     writer or shared-memory replica).  ``healthy`` goes False — and the
     HTTP route answers **503** — when the background thread (miner on a
-    writer, attach loop on a replica) has died, or when
-    ``max_staleness_s`` is set and the served snapshot is older than
-    that with writes outstanding: both mean a balancer must eject the
-    backend, and a 200 would keep it in rotation."""
+    writer, attach loop on a replica) has died, when the integrity
+    scrubber found corruption in the served snapshot (``scrub_clean``
+    False — serving known-bad structures would be silently wrong
+    answers), or when ``max_staleness_s`` is set and the served
+    snapshot is older than that with writes outstanding: all mean a
+    balancer must eject the backend, and a 200 would keep it in
+    rotation."""
     snap = getattr(svc, "_snap", None)
     stale = svc.staleness_s() if hasattr(svc, "staleness_s") else None
     if stale is not None and stale == float("inf"):
         stale = None
     alive = bool(getattr(svc, "thread_alive", True))
+    scrub_ok = bool(getattr(svc, "scrub_clean", True))
     doc = {"version": svc.version,
            "stream_version": svc.stream_version,
            "clusters": 0 if snap is None else len(snap.index),
@@ -86,11 +95,17 @@ def health_doc(svc, max_staleness_s: Optional[float] = None) -> dict:
            "dirty_clusters": int(getattr(svc, "dirty_clusters", 0)),
            "staleness_s": stale,
            "thread_alive": alive,
+           "scrub_clean": scrub_ok,
            "role": ("replica" if getattr(svc, "read_only", False)
                     else "writer")}
     healthy, why = True, None
     if not alive:
         healthy, why = False, "background thread died"
+    elif not scrub_ok:
+        # the integrity scrubber found corruption in the served
+        # structures: wrong answers are worse than no answers — eject
+        healthy, why = False, "integrity scrub failed: corruption " \
+            "detected in served snapshot"
     elif (max_staleness_s is not None and stale is not None
             and stale > max_staleness_s and doc["dirty"] > 0):
         healthy, why = False, (f"stale snapshot: {stale:.1f}s > "
@@ -130,11 +145,14 @@ class _Handler(BaseHTTPRequestHandler):
         if getattr(self.server, "verbose", False):
             super().log_message(fmt, *args)
 
-    def _reply(self, doc: dict, status: int = 200) -> None:
+    def _reply(self, doc: dict, status: int = 200,
+               headers: Optional[dict] = None) -> None:
         body = json.dumps(doc).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, str(v))
         self.end_headers()
         self.wfile.write(body)
 
@@ -192,7 +210,7 @@ class _Handler(BaseHTTPRequestHandler):
                              "replica — send writes to the shard's "
                              "writer endpoint"}, 501)
             elif self.path in ("/upsert", "/delete"):
-                self._reply(self._mutate(svc, doc, self.path[1:]))
+                self._mutate(svc, doc, self.path[1:])
             elif self.path == "/refresh":
                 snap = svc.refresh()
                 self._reply({"version": snap.version,
@@ -242,15 +260,32 @@ class _Handler(BaseHTTPRequestHandler):
         out["server_ms"] = (time.perf_counter() - t0) * 1e3
         return out
 
-    def _mutate(self, svc: TriclusterService, doc: dict, op: str) -> dict:
+    def _mutate(self, svc: TriclusterService, doc: dict,
+                op: str) -> None:
         rows = doc.get("rows")
         if not rows:
             raise ValueError(f"/{op} needs non-empty 'rows'")
+        limit = int(getattr(self.server, "max_write_backlog", 0) or 0)
+        if limit and svc.dirty >= limit:
+            # write backpressure: the miner is `limit` writes behind
+            # the published snapshot — admitting more just grows the
+            # backlog unboundedly.  429 + Retry-After sized to the
+            # re-mine cadence tells well-behaved clients when the
+            # backlog plausibly drained
+            retry_s = max(2 * float(getattr(svc, "refresh_interval",
+                                            0.25)), 0.05)
+            self.server.throttled_writes += 1
+            return self._reply(
+                {"error": f"write backlog {svc.dirty} >= "
+                          f"max_write_backlog {limit} — retry after "
+                          f"the next snapshot swap",
+                 "retry_after_s": retry_s, "dirty": svc.dirty},
+                429, headers={"Retry-After": f"{retry_s:.3f}"})
         if op == "delete":
             sv = svc.delete(rows)
         else:
             sv = svc.upsert(rows, doc.get("values"))
-        return {"stream_version": sv, "dirty": svc.dirty}
+        self._reply({"stream_version": sv, "dirty": svc.dirty})
 
 
 class ClusterServeServer(ThreadingHTTPServer):
@@ -265,13 +300,17 @@ class ClusterServeServer(ThreadingHTTPServer):
     def __init__(self, service: TriclusterService, addr=("127.0.0.1", 0),
                  allow_shutdown: bool = True, verbose: bool = False,
                  health_max_staleness: Optional[float] = None,
-                 fault=None):
+                 fault=None, max_write_backlog: int = 0):
         super().__init__(addr, _Handler)
         self.service = service
         self.allow_shutdown = allow_shutdown
         self.verbose = verbose
         self.health_max_staleness = health_max_staleness
         self.fault = fault
+        #: write backpressure bound: /upsert//delete answer 429 once
+        #: ``service.dirty`` reaches this (0 = unbounded)
+        self.max_write_backlog = int(max_write_backlog)
+        self.throttled_writes = 0
         self._inflight = 0
         self._idle = threading.Condition()
 
@@ -310,13 +349,15 @@ def make_server(service: TriclusterService, host: str = "127.0.0.1",
                 port: int = 0, allow_shutdown: bool = True,
                 verbose: bool = False,
                 health_max_staleness: Optional[float] = None,
-                fault=None) -> ClusterServeServer:
+                fault=None,
+                max_write_backlog: int = 0) -> ClusterServeServer:
     """Bind (port 0 = ephemeral; read ``server.port``) without serving;
     call ``serve_forever()`` — typically on a thread — to go live."""
     return ClusterServeServer(service, (host, port),
                               allow_shutdown=allow_shutdown, verbose=verbose,
                               health_max_staleness=health_max_staleness,
-                              fault=fault)
+                              fault=fault,
+                              max_write_backlog=max_write_backlog)
 
 
 def _version_token(v):
@@ -337,25 +378,40 @@ class ClusterClient:
 
     def _call(self, path: str, doc: Optional[dict] = None,
               accept_statuses: tuple = ()) -> dict:
-        req = _urequest.Request(
-            self.base_url + path,
-            data=None if doc is None else json.dumps(doc).encode(),
-            headers={"Content-Type": "application/json"},
-            method="GET" if doc is None else "POST")
-        try:
-            with _urequest.urlopen(req, timeout=self.timeout) as r:
-                return json.loads(r.read())
-        except _uerror.HTTPError as e:
+        for attempt in (0, 1):
+            req = _urequest.Request(
+                self.base_url + path,
+                data=None if doc is None else json.dumps(doc).encode(),
+                headers={"Content-Type": "application/json"},
+                method="GET" if doc is None else "POST")
             try:
-                body = json.loads(e.read())
-            except Exception:
-                body = None
-            if e.code in accept_statuses and isinstance(body, dict):
-                body["http_status"] = e.code
-                return body
-            msg = (body.get("error", str(e))
-                   if isinstance(body, dict) else str(e))
-            raise RuntimeError(f"{path}: {msg}") from None
+                with _urequest.urlopen(req, timeout=self.timeout) as r:
+                    return json.loads(r.read())
+            except _uerror.HTTPError as e:
+                try:
+                    body = json.loads(e.read())
+                except Exception:
+                    body = None
+                if (e.code == 429 and attempt == 0
+                        and 429 not in accept_statuses):
+                    # write backpressure: honour Retry-After exactly
+                    # once, then surface the error to the caller
+                    ra = e.headers.get("Retry-After") if e.headers \
+                        else None
+                    if ra is None and isinstance(body, dict):
+                        ra = body.get("retry_after_s")
+                    try:
+                        delay = min(max(float(ra), 0.0), 30.0)
+                    except (TypeError, ValueError):
+                        delay = 0.5
+                    time.sleep(delay)
+                    continue
+                if e.code in accept_statuses and isinstance(body, dict):
+                    body["http_status"] = e.code
+                    return body
+                msg = (body.get("error", str(e))
+                       if isinstance(body, dict) else str(e))
+                raise RuntimeError(f"{path}: {msg}") from None
 
     def health(self) -> dict:
         """The /health doc.  A sick backend (HTTP 503) still returns

@@ -45,13 +45,14 @@ import json
 import os
 import threading
 import time
+import zlib
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import runs as RS
 from . import ranking as R
-from .clusters import ClusterIndex, ClusterView
+from .clusters import ClusterIndex, ClusterView, pack_sig_words
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +128,9 @@ class TriclusterService:
                  recover_dir: Optional[str] = None,
                  checkpoint_every: int = 64, fsync_wal: bool = False,
                  version_base: int = 0, fault=None,
+                 scrub_interval: float = 0.5,
+                 event_dir: Optional[str] = None,
+                 event_name: str = "writer",
                  mesh=None, miner=None, **miner_kw):
         self.sizes = tuple(int(s) for s in sizes)
         self.refresh_interval = float(refresh_interval)
@@ -198,6 +202,16 @@ class TriclusterService:
         self._wal = None
         self._writes_since_ckpt = 0
         self._recovered = {}
+        #: background scrubber cadence (s); 0 disables the thread.  The
+        #: scrubber walks each newly published snapshot verifying
+        #: cross-structure invariants (see :meth:`scrub`)
+        self.scrub_interval = float(scrub_interval)
+        self._scrub_thread: Optional[threading.Thread] = None
+        #: integrity events are mirrored to ``{event_dir}/{event_name}
+        #: .events`` for the supervisor to adopt into its log
+        #: (``serve.supervise.write_event``); None keeps them local
+        self.event_dir = event_dir
+        self.event_name = event_name
         self._wlock = threading.Lock()      # miner store + dirty counter
         self._remine_lock = threading.Lock()  # one re-mine at a time
         self._cv = threading.Condition()    # snapshot publication + waits
@@ -213,7 +227,14 @@ class TriclusterService:
                        "delta_builds": 0, "full_builds": 0,
                        "last_index_build_ms": 0.0, "publish_errors": 0,
                        "checkpoints": 0, "wal_records": 0,
-                       "recovered_ops": 0}
+                       "recovered_ops": 0,
+                       # integrity plane (DESIGN.md §9, fail-silent half)
+                       "wal_crc_errors": 0, "wal_torn_tail": 0,
+                       "wal_quarantined": 0, "checkpoint_quarantined": 0,
+                       "checkpoint_generation_fallbacks": 0,
+                       "scrubs": 0, "scrub_errors": 0,
+                       "last_scrub_ms": 0.0, "last_scrub_version": 0,
+                       "scrub_violations": []}
         if self.recover_dir:
             self._recover()
 
@@ -224,8 +245,42 @@ class TriclusterService:
         return os.path.join(self.recover_dir, "ckpt.npz")
 
     @property
+    def _ckpt_prev_path(self) -> str:
+        # previous checkpoint generation (N=2 policy): rotated into
+        # place right before a new blob is persisted, so a corrupt or
+        # torn current generation always has a verified fallback
+        return os.path.join(self.recover_dir, "ckpt.prev.npz")
+
+    @property
     def _wal_path(self) -> str:
         return os.path.join(self.recover_dir, "wal.jsonl")
+
+    def _quarantine(self, path: str) -> str:
+        """Move a poisoned file aside as ``{path}.quarantine.<epoch>``
+        (never clobbering an earlier quarantine) and return the new
+        path — the evidence survives for post-mortem, and recovery
+        never re-reads it."""
+        epoch = int(time.time())
+        q = f"{path}.quarantine.{epoch}"
+        n = 0
+        while os.path.exists(q):
+            n += 1
+            q = f"{path}.quarantine.{epoch}.{n}"
+        os.replace(path, q)
+        return q
+
+    def _integrity_event(self, event: str, detail: str) -> None:
+        """Record a corruption/scrub event locally and mirror it to the
+        supervisor's event log when this writer runs supervised."""
+        self._stats.setdefault("integrity_events", []).append(
+            [event, detail])
+        if self.event_dir:
+            try:
+                from .supervise import write_event
+                write_event(self.event_dir, self.event_name, event,
+                            detail)
+            except Exception:   # noqa: BLE001 — reporting must never
+                pass            # take the data path down
 
     def _wal_append(self, op: str, rows, values, sv: int) -> None:
         if self._wal is None:
@@ -233,24 +288,49 @@ class TriclusterService:
         rec = {"op": op, "rows": np.asarray(rows).tolist(), "sv": int(sv)}
         if values is not None:
             rec["values"] = np.asarray(values, np.float64).tolist()
-        self._wal.write(json.dumps(rec) + "\n")
+        payload = json.dumps(rec)
+        crc = zlib.crc32(payload.encode("utf-8"))
+        if self._fault is not None:
+            f = self._fault.corrupt("wal", int(sv))
+            if f is not None:
+                # injected bit rot *after* the CRC was taken: the
+                # in-memory apply proceeds untouched, only replay-time
+                # verification can tell this record is a lie
+                i = len(payload) // 2
+                payload = (payload[:i] + chr(ord(payload[i]) ^ 0x01)
+                           + payload[i + 1:])
+        self._wal.write(f"{crc:08x} {payload}\n")
         self._wal.flush()
         if self.fsync_wal:
             os.fsync(self._wal.fileno())
         self._stats["wal_records"] += 1
 
     def _checkpoint_locked(self, version: int) -> bool:
-        """Persist the run store (atomic) and truncate the WAL to the
-        uncovered tail.  Caller holds ``_wlock``.  Returns False when
-        the miner has no checkpointable run store (then the WAL alone
-        carries the whole stream — recovery replays from op 1)."""
+        """Persist the run store (atomic, CRC-framed) and truncate the
+        WAL to the uncovered tail; the prior blob is rotated to the
+        previous generation first.  Caller holds ``_wlock``.  Returns
+        False when the miner has no checkpointable run store (then the
+        WAL alone carries the whole stream — recovery replays from
+        op 1)."""
         state = getattr(self.miner, "state", None)
         if not isinstance(state, RS.RunStore):
             return False
         sv = int(self.miner.stream_version)
+        if os.path.exists(self._ckpt_path):
+            os.replace(self._ckpt_path, self._ckpt_prev_path)
         RS.save_checkpoint(state.checkpoint(), self._ckpt_path,
                            meta={"stream_version": sv,
                                  "version": int(version)})
+        if self._fault is not None:
+            f = self._fault.corrupt("checkpoint", int(version))
+            if f is not None:
+                # injected truncation of the just-persisted blob: the
+                # frame header survives but promises more bytes than
+                # the file holds — load must reject, recovery must
+                # fall back to the rotated previous generation
+                size = os.path.getsize(self._ckpt_path)
+                with open(self._ckpt_path, "r+b") as fh:
+                    fh.truncate(max(1, size // 2))
         # the checkpoint covers every op ≤ sv: start a fresh WAL
         if self._wal is not None:
             self._wal.close()
@@ -269,57 +349,286 @@ class TriclusterService:
         with self._wlock:
             return self._checkpoint_locked(self.version)
 
+    @staticmethod
+    def _parse_wal_line(raw: bytes) -> Optional[dict]:
+        """One WAL line → its record, or ``None`` when the frame fails
+        verification (bit rot / torn write).  Framed lines are
+        ``crc32-hex SP json``; legacy unframed JSON lines verify by
+        parse alone."""
+        try:
+            s = raw.decode("utf-8")
+        except UnicodeDecodeError:
+            return None
+        if len(s) > 9 and s[8] == " ":
+            try:
+                crc = int(s[:8], 16)
+            except ValueError:
+                crc = None
+            if crc is not None:
+                payload = s[9:]
+                if zlib.crc32(payload.encode("utf-8")) != crc:
+                    return None
+                try:
+                    return json.loads(payload)
+                except json.JSONDecodeError:
+                    return None
+        if s.lstrip().startswith("{"):
+            try:
+                return json.loads(s)
+            except json.JSONDecodeError:
+                return None
+        return None
+
     def _recover(self) -> None:
-        """Restore the store from the last checkpoint, replay the WAL
-        tail through the miner, and floor the publish version — the
-        crashed predecessor's writes and read-your-writes tokens
-        survive into this incarnation."""
+        """Restore the store from the newest *verified* checkpoint
+        generation, replay the verified WAL prefix through the miner,
+        and floor the publish version — the crashed predecessor's
+        writes and read-your-writes tokens survive into this
+        incarnation.
+
+        Corruption handling (DESIGN.md §9): a checkpoint generation
+        that fails its CRC frame is quarantined and recovery falls back
+        to the previous generation (bounding data loss to the ops
+        between the two).  A WAL whose *last* record fails is torn —
+        truncate to the verified prefix and resume in place.  A WAL
+        with verified records *after* a failed one is poisoned — the
+        ordering across the lost record is unknowable, so the whole
+        file is quarantined, the verified prefix replayed, and a fresh
+        checkpoint cut so the prefix stays durable."""
         os.makedirs(self.recover_dir, exist_ok=True)
         ckpt_sv = 0
-        if os.path.exists(self._ckpt_path):
-            blob, meta = RS.load_checkpoint(self._ckpt_path)
-            store = RS.RunStore.restore(blob)
+        ckpt_gen = ""
+        for path, gen in ((self._ckpt_path, "current"),
+                          (self._ckpt_prev_path, "previous")):
+            if not os.path.exists(path):
+                continue
+            try:
+                blob, meta = RS.load_checkpoint(path)
+                store = RS.RunStore.restore(blob)
+            except Exception as e:  # noqa: BLE001 — CRC frame, torn
+                # zip, or un-restorable blob: all poison this
+                # generation; quarantine it and fall back
+                q = self._quarantine(path)
+                self._stats["checkpoint_quarantined"] += 1
+                self._integrity_event(
+                    "checkpoint_quarantined",
+                    f"{gen} generation unreadable ({e!r}); "
+                    f"-> {os.path.basename(q)}")
+                continue
             self.miner.state = store
             ckpt_sv = int(meta.get("stream_version", 0))
+            ckpt_gen = gen
             self.miner.stream_version = ckpt_sv
             self.version_base = max(self.version_base,
                                     int(meta.get("version", 0)))
             # re-adopt plans/stats (and validate) through the miner
             if hasattr(self.miner, "_store"):
                 self.miner._store()
+            break
+        if ckpt_gen == "previous":
+            self._stats["checkpoint_generation_fallbacks"] += 1
+            self._integrity_event(
+                "checkpoint_generation_fallback",
+                f"restored previous generation at sv={ckpt_sv}")
         replayed = 0
+        wal_quarantined = ""
         if os.path.exists(self._wal_path):
-            with open(self._wal_path, encoding="utf-8") as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        rec = json.loads(line)
-                    except json.JSONDecodeError:
-                        break                # torn tail record: stop
-                    if int(rec.get("sv", 0)) <= ckpt_sv:
-                        continue
-                    rows = np.asarray(rec["rows"])
-                    vals = rec.get("values")
-                    op = rec.get("op", "add")
-                    if op == "delete":
-                        self.miner.delete(rows)
-                    elif op == "upsert":
-                        self.miner.upsert(rows, vals)
-                    else:
-                        self._ingest(rows, vals)
-                    # replay lands exactly at the logged version even
-                    # if an op maps to a different number of bumps
-                    self.miner.stream_version = int(rec["sv"])
-                    replayed += 1
+            with open(self._wal_path, "rb") as f:
+                raw = f.read()
+            entries: List[Tuple[int, bytes]] = []
+            off = 0
+            for ln in raw.split(b"\n"):
+                entries.append((off, ln))
+                off += len(ln) + 1
+            recs: List[Tuple[int, dict]] = []
+            bad: List[Tuple[int, int]] = []      # (line no, byte offset)
+            for i, (o, ln) in enumerate(entries):
+                if not ln.strip():
+                    continue
+                rec = self._parse_wal_line(ln)
+                if rec is None:
+                    bad.append((i, o))
+                else:
+                    recs.append((i, rec))
+            cut = len(entries)
+            if bad:
+                first_bad, bad_off = bad[0]
+                self._stats["wal_crc_errors"] += len(bad)
+                cut = first_bad
+                if any(i > first_bad for i, _ in recs):
+                    # interior poison: verified records beyond the rot
+                    # exist, but their ordering against the lost op is
+                    # unknowable — quarantine the whole file, keep the
+                    # verified prefix
+                    wal_quarantined = self._quarantine(self._wal_path)
+                    self._stats["wal_quarantined"] += 1
+                    self._integrity_event(
+                        "wal_quarantined",
+                        f"interior record corrupt at line "
+                        f"{first_bad + 1}; -> "
+                        f"{os.path.basename(wal_quarantined)}")
+                else:
+                    # torn tail: the crash interrupted the last append;
+                    # drop the half-record, resume appending in place
+                    self._stats["wal_torn_tail"] += 1
+                    with open(self._wal_path, "r+b") as f:
+                        f.truncate(bad_off)
+                    self._integrity_event(
+                        "wal_torn_tail",
+                        f"truncated to {bad_off} bytes "
+                        f"(line {first_bad + 1} torn)")
+            for i, rec in recs:
+                if i >= cut:
+                    continue
+                if int(rec.get("sv", 0)) <= ckpt_sv:
+                    continue
+                rows = np.asarray(rec["rows"])
+                vals = rec.get("values")
+                op = rec.get("op", "add")
+                if op == "delete":
+                    self.miner.delete(rows)
+                elif op == "upsert":
+                    self.miner.upsert(rows, vals)
+                else:
+                    self._ingest(rows, vals)
+                # replay lands exactly at the logged version even
+                # if an op maps to a different number of bumps
+                self.miner.stream_version = int(rec["sv"])
+                replayed += 1
         self._stats["recovered_ops"] = replayed
-        if ckpt_sv or replayed:
-            self._dirty = 1                  # force a publish on start()
-            self._recovered = {"checkpoint_stream_version": ckpt_sv,
-                               "replayed_ops": replayed,
-                               "stream_version": self.miner.stream_version,
-                               "version_base": self.version_base}
+        if wal_quarantined:
+            # the quarantined file no longer backs the replayed prefix:
+            # cut a checkpoint now so those ops survive the next crash
+            try:
+                with self._wlock:
+                    self._checkpoint_locked(self.version_base)
+            except Exception as e:  # noqa: BLE001 — recovery proceeds;
+                # worst case the prefix replays again from older state
+                self._stats["checkpoint_errors"] = \
+                    self._stats.get("checkpoint_errors", 0) + 1
+                self._stats["last_checkpoint_error"] = repr(e)
+        if (ckpt_sv or replayed or wal_quarantined
+                or self._stats["checkpoint_quarantined"]):
+            if ckpt_sv or replayed:
+                self._dirty = 1              # force a publish on start()
+            self._recovered = {
+                "checkpoint_stream_version": ckpt_sv,
+                "checkpoint_generation": ckpt_gen or "none",
+                "replayed_ops": replayed,
+                "stream_version": self.miner.stream_version,
+                "version_base": self.version_base,
+                "wal_crc_errors": self._stats["wal_crc_errors"],
+                "wal_torn_tail": self._stats["wal_torn_tail"],
+                "wal_quarantined": (os.path.basename(wal_quarantined)
+                                    if wal_quarantined else ""),
+                "checkpoint_quarantined":
+                    self._stats["checkpoint_quarantined"]}
+
+    # -- background scrubber (integrity plane) -------------------------------
+
+    def scrub(self, snap: Optional[Snapshot] = None) -> dict:
+        """Walk one published snapshot verifying the cross-structure
+        invariants that tie index, result, ranking and store together
+        (DESIGN.md §9): the index carries exactly ``result.keep``'s
+        signatures, packed signatures are sorted, the overlay lut is a
+        consistent bijection over live rows, run keys are monotone, and
+        every score/age is finite.  Violations mean a structure was
+        mutated after publish (or built from corrupt inputs) — they are
+        recorded in stats and flip ``scrub_clean`` so ``/health`` goes
+        503 and the balancer stops routing here."""
+        snap = self._snap if snap is None else snap
+        if snap is None:
+            return {"version": 0, "violations": [], "ms": 0.0}
+        t0 = time.perf_counter()
+        v: List[str] = []
+        idx = snap.index
+        ps = getattr(idx, "packed_sigs", None)
+        if ps is not None and ps.size > 1 and not bool(
+                np.all(ps[:-1] <= ps[1:])):
+            v.append("index packed_sigs not sorted")
+        res = snap.result
+        if res is not None and ps is not None:
+            keep = np.asarray(res.keep, bool)
+            if self.min_density:
+                keep = keep & (np.asarray(res.density)
+                               >= self.min_density)
+            want = np.sort(pack_sig_words(
+                np.asarray(res.sig_lo)[keep],
+                np.asarray(res.sig_hi)[keep]))
+            if want.size != ps.size or not bool(np.array_equal(want,
+                                                               ps)):
+                v.append(f"index/result divergence: index carries "
+                         f"{ps.size} signatures, result.keep "
+                         f"{want.size} (or contents differ)")
+        lut = getattr(idx, "_lut", None)
+        if lut is not None and len(idx):
+            id_of_row = getattr(idx, "_id_of_row", None)
+            live = lut[lut >= 0]
+            if live.size != len(idx) or not bool(np.array_equal(
+                    np.sort(live), np.arange(len(idx)))):
+                v.append("overlay lut is not a bijection onto rows")
+            elif id_of_row is not None and not bool(np.array_equal(
+                    lut[id_of_row], np.arange(len(idx)))):
+                v.append("overlay lut/id_of_row not inverse")
+        sc = getattr(snap.querier, "scores", None)
+        if sc is not None and not bool(np.all(np.isfinite(sc))):
+            v.append("non-finite ranking scores")
+        if snap.ages is not None and not bool(
+                np.all(np.isfinite(np.asarray(snap.ages)))):
+            v.append("non-finite cluster ages")
+        state = getattr(self.miner, "state", None)
+        if isinstance(state, RS.RunStore):
+            with self._wlock:
+                runs = list(state.runs)
+            for r in runs:
+                if any(k.size > 1 and not bool(np.all(k[:-1] <= k[1:]))
+                       for k in r.keys):
+                    v.append("run store: sorted-run keys not monotone")
+                    break
+        ms = (time.perf_counter() - t0) * 1e3
+        self._stats["scrubs"] += 1
+        self._stats["last_scrub_ms"] = ms
+        self._stats["last_scrub_version"] = snap.version
+        if v:
+            self._stats["scrub_errors"] += len(v)
+            self._stats["scrub_violations"] = v   # rebind, never mutate
+            for msg in v:
+                self._integrity_event("scrub_violation",
+                                      f"v{snap.version}: {msg}")
+        return {"version": snap.version, "violations": v, "ms": ms}
+
+    def _scrub_loop(self):
+        last = -1
+        while not self._stop_evt.is_set():
+            snap = self._snap
+            if snap is not None and snap.version != last:
+                try:
+                    self.scrub(snap)
+                    last = snap.version
+                except Exception as e:  # noqa: BLE001 — the scrubber
+                    # must survive anything; a scrub crash is itself
+                    # recorded, never fatal
+                    self._stats["scrub_errors"] += 1
+                    self._stats["last_scrub_error"] = repr(e)
+                    last = snap.version
+            self._stop_evt.wait(max(self.scrub_interval, 1e-3))
+
+    @property
+    def scrub_clean(self) -> bool:
+        """False once the scrubber found an invariant violation — the
+        /health 503 condition for silent corruption."""
+        return not self._stats["scrub_violations"]
+
+    def resilience_stats(self) -> dict:
+        """Integrity/recovery counters: the scrubber + quarantine
+        surface (mirrors the router's ``resilience_stats`` contract)."""
+        s = self._stats
+        return {k: s[k] for k in (
+            "scrubs", "scrub_errors", "last_scrub_ms",
+            "last_scrub_version", "scrub_violations", "wal_crc_errors",
+            "wal_torn_tail", "wal_quarantined",
+            "checkpoint_quarantined",
+            "checkpoint_generation_fallbacks")}
 
     # -- writer path ---------------------------------------------------------
 
@@ -559,6 +868,11 @@ class TriclusterService:
                                         name="tricluster-remine",
                                         daemon=True)
         self._thread.start()
+        if self.scrub_interval > 0 and self._scrub_thread is None:
+            self._scrub_thread = threading.Thread(
+                target=self._scrub_loop, name="tricluster-scrub",
+                daemon=True)
+            self._scrub_thread.start()
         self._started = True
         return self
 
@@ -568,6 +882,9 @@ class TriclusterService:
         if self._thread is not None:
             self._thread.join(timeout=30)
             self._thread = None
+        if self._scrub_thread is not None:
+            self._scrub_thread.join(timeout=30)
+            self._scrub_thread = None
         if self._wal is not None:
             self._wal.close()
             self._wal = None

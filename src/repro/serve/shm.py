@@ -21,10 +21,20 @@ copy, no deserialisation).
   without bumping the sequence.
 * ``{prefix}.v{version}`` — one immutable *data segment per snapshot*:
   an 8-byte header length, a JSON manifest (array names / dtypes /
-  shapes / offsets + snapshot meta), then the arrays, 64-byte aligned.
-  Data segments are never mutated after the control block names them —
-  single-reference swap semantics, exactly like the in-process
-  ``TriclusterService`` snapshot swap.
+  shapes / offsets / **per-array 64-bit checksums** + snapshot meta),
+  then the arrays, 64-byte aligned.  Data segments are never mutated after the
+  control block names them — single-reference swap semantics, exactly
+  like the in-process ``TriclusterService`` snapshot swap.
+
+**Integrity.**  The manifest checksums are the fail-silent defence
+(DESIGN.md §9): :class:`SnapshotBundle` verifies every array against
+its recorded :func:`checksum64` at attach time and refuses the segment
+with :class:`ShmCorruptionError` on mismatch, and :class:`ReplicaService`
+re-verifies the held bundle opportunistically (one rotating array per
+scrub tick) — a word flipped *after* attach is caught between swaps,
+not served.  Either detection escalates exactly like a dead writer:
+keep serving the last good snapshot, signal the supervisor
+(``on_writer_dead`` path) so the writer republishes under a new epoch.
 
 **Reclamation.**  After publishing version ``v`` the writer *unlinks*
 segment ``v-1``.  POSIX keeps the memory alive until the last process
@@ -48,7 +58,7 @@ import struct
 import threading
 import time
 from multiprocessing import shared_memory
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -64,6 +74,16 @@ _NAME_MAX = 200
 _DIRTY_OFF = 512         # outside the seqlock payload (see module doc)
 _PID_OFF = 520           # writer pid — the reader-side liveness probe
 _ALIGN = 64
+
+
+class ShmCorruptionError(RuntimeError):
+    """A mapped data segment failed its manifest checksums (or its
+    arrays violate structural invariants): the bytes in shared memory
+    are not the bytes the writer published.  Readers must not serve
+    from the segment — they keep their held snapshot and escalate along
+    the ``on_writer_dead`` path so the supervisor makes the writer
+    republish (a restart bumps the epoch; the next clean attach clears
+    the condition)."""
 
 
 class WriterDeadError(RuntimeError):
@@ -147,27 +167,98 @@ def _pad(n: int) -> int:
     return (n + _ALIGN - 1) // _ALIGN * _ALIGN
 
 
+_M64 = (1 << 64) - 1
+
+
+def checksum64(data) -> int:
+    """64-bit content checksum of an array or buffer: one single-pass
+    wrap-around ``uint64`` sum over the 8-byte words, tail bytes and
+    length folded in, finished with a splitmix64-style mix.
+
+    This is the **shared-memory manifest** checksum, chosen over
+    ``zlib.crc32`` deliberately: crc32 streams bytes through zlib at
+    ~1 GB/s, which on a small host is a visible fraction of every
+    snapshot-swap; the NumPy reduction runs at memory bandwidth
+    (>10 GB/s), keeping the clean-path verify cost inside the ≤5%
+    overhead budget (DESIGN.md §9).  Detection guarantee: *any*
+    corruption confined to a single 64-bit word — every bit-flip burst
+    the fault injector or real bit rot produces in one word — always
+    changes the sum (by ``w' - w ≠ 0 mod 2^64``); independent
+    multi-word damage escapes with probability ~2^-64, better odds
+    than crc32's 2^-32.  The mix step keeps single-word deltas from
+    producing correlated checksum deltas.  The WAL and checkpoint
+    frames keep CRC32: they are off the swap path, and byte-granular
+    torn-tail detection matters more there."""
+    if isinstance(data, np.ndarray):
+        mv = memoryview(np.ascontiguousarray(data)).cast("B")
+    else:
+        mv = memoryview(data).cast("B")
+    n = len(mv)
+    k = n - n % 8
+    s = 0
+    if k:
+        s = int(np.add.reduce(np.frombuffer(mv[:k], dtype="<u8"),
+                              dtype=np.uint64))
+    tail = int.from_bytes(mv[k:], "little") if k < n else 0
+    h = ((n ^ s) * 0x9E3779B97F4A7C15) & _M64
+    h ^= h >> 30
+    h = ((h ^ tail) * 0xBF58476D1CE4E5B9) & _M64
+    return (h ^ (h >> 31)) & _M64
+
+
 class SnapshotBundle:
     """One mapped data segment: zero-copy array views + snapshot meta.
     Holds the segment mapping alive exactly as long as any of its
-    arrays (or itself) is referenced."""
+    arrays (or itself) is referenced.
 
-    def __init__(self, seg: shared_memory.SharedMemory):
+    Attach is the integrity gate: every array is checksummed against
+    the manifest's recorded :func:`checksum64` before the bundle is
+    usable (``verify=False`` skips it — benchmark baseline only).
+    Legacy manifests without checksums attach unverified."""
+
+    def __init__(self, seg: shared_memory.SharedMemory,
+                 verify: bool = True):
         self._seg = seg
         (hlen,) = struct.unpack_from("<Q", seg.buf, 0)
         head = json.loads(bytes(seg.buf[8:8 + hlen]))
         self.meta: dict = head["meta"]
+        self.manifest: list = head["arrays"]
         self.version: int = int(self.meta["version"])
         self.epoch: int = int(self.meta.get("epoch", 1))
         self.stream_version: int = int(self.meta["stream_version"])
         self.published_wall: float = float(self.meta["published_wall"])
         self.arrays: dict = {}
-        for a in head["arrays"]:
+        for a in self.manifest:
             arr = np.frombuffer(seg.buf, dtype=np.dtype(a["dtype"]),
                                 count=int(np.prod(a["shape"], dtype=int)),
                                 offset=a["offset"]).reshape(a["shape"])
             arr.flags.writeable = False
             self.arrays[a["name"]] = arr
+        if verify:
+            bad = self.verify()
+            if bad:
+                raise ShmCorruptionError(
+                    f"segment {getattr(seg, 'name', '?')} v"
+                    f"{self.version}: checksum mismatch in "
+                    f"{', '.join(bad)}")
+
+    def verify(self, names: Optional[List[str]] = None) -> List[str]:
+        """Re-checksum mapped arrays against the manifest (all of them,
+        or just ``names``) and return the mismatching array names.
+        Runs over the raw segment bytes — no copies.  Entries without a
+        recorded checksum (legacy manifests) pass vacuously."""
+        bad: List[str] = []
+        for a in self.manifest:
+            if names is not None and a["name"] not in names:
+                continue
+            want = a.get("sum64")
+            if want is None:
+                continue
+            o = int(a["offset"])
+            nbytes = int(self.arrays[a["name"]].nbytes)
+            if checksum64(self._seg.buf[o:o + nbytes]) != int(want):
+                bad.append(a["name"])
+        return bad
 
 
 class ShmPublisher:
@@ -181,11 +272,15 @@ class ShmPublisher:
     data segment the crash leaked, and stamps this process's pid into
     the control block for the readers' stuck-odd liveness probe."""
 
-    def __init__(self, prefix: str, fault=None):
+    def __init__(self, prefix: str, fault=None, checksums: bool = True):
         if len(prefix) + 16 > _NAME_MAX:
             raise ValueError(f"prefix too long: {prefix!r}")
         self.prefix = prefix
         self.fault = fault
+        #: record per-array :func:`checksum64` values in the manifest
+        #: (the attach-time integrity gate); False is the
+        #: overhead-benchmark baseline
+        self.checksums = bool(checksums)
         self._seq = 0
         self.epoch = 1
         self.resumed_version = 0
@@ -247,12 +342,20 @@ class ShmPublisher:
         # reserve generously once, then lay arrays after it
         probe = json.dumps({"meta": dict(meta or {}), "arrays": [
             {"name": k, "dtype": str(v.dtype), "shape": list(v.shape),
-             "offset": 0} for k, v in items]}).encode()
+             "offset": 0, "sum64": _M64}
+            for k, v in items]}).encode()
         data_off = _pad(8 + len(probe) + 4096)
         offset = data_off
         for k, v in items:
-            manifest.append({"name": k, "dtype": str(v.dtype),
-                             "shape": list(v.shape), "offset": offset})
+            ent = {"name": k, "dtype": str(v.dtype),
+                   "shape": list(v.shape), "offset": offset}
+            if self.checksums:
+                # checksum the source array, not the segment copy: the
+                # manifest records what the writer *meant* to publish,
+                # so any later mutation of the shared bytes — torn
+                # write, stray DMA, injected flip — fails attach verify
+                ent["sum64"] = checksum64(v)
+            manifest.append(ent)
             offset = _pad(offset + v.nbytes)
         m = dict(meta or {})
         m.update(version=int(version), stream_version=int(stream_version),
@@ -268,6 +371,13 @@ class ShmPublisher:
         for spec, (_, v) in zip(manifest, items):
             o = spec["offset"]
             seg.buf[o:o + v.nbytes] = v.tobytes()
+        if self.fault is not None \
+                and self.fault.corrupt("shm", int(version)) is not None:
+            # injected bit rot: invert one aligned word of the first
+            # sizeable array *after* its checksum was recorded — the
+            # replicas' attach-time verify, not reader luck, is what
+            # stands between this segment and wrong answers
+            self._flip_word(seg, manifest)
         self._swing(version, stream_version, wall,
                     int(arrays.get("packed_sigs", np.zeros(0)).shape[0]),
                     name)
@@ -305,6 +415,17 @@ class ShmPublisher:
                             meta=meta,
                             published_wall=getattr(snap, "published_wall",
                                                    None))
+
+    @staticmethod
+    def _flip_word(seg, manifest) -> None:
+        for spec in manifest:
+            n = (int(np.prod(spec["shape"], dtype=int))
+                 * np.dtype(spec["dtype"]).itemsize)
+            if n >= 8:
+                o = int(spec["offset"]) + (n // 16) * 8
+                w = bytes(seg.buf[o:o + 8])
+                seg.buf[o:o + 8] = bytes(b ^ 0xFF for b in w)
+                return
 
     def _swing(self, version, stream_version, wall, n, name) -> None:
         nb = name.encode()
@@ -476,17 +597,26 @@ class ReplicaService:
     def __init__(self, prefix: str, poll_interval: float = 0.005,
                  connect_timeout: float = 60.0,
                  seqlock_spin_s: float = 1.0, on_writer_dead=None,
-                 dead_signal_cooldown: float = 5.0):
+                 dead_signal_cooldown: float = 5.0,
+                 scrub_interval: float = 0.5):
         self.replica = ShmReplica(prefix, connect_timeout=connect_timeout,
                                   seqlock_spin_s=seqlock_spin_s)
         self.poll_interval = float(poll_interval)
-        #: called (with the WriterDeadError) when the stuck-odd
-        #: protocol declares the publisher dead — the supervisor signal
+        #: called (with the WriterDeadError / ShmCorruptionError) when
+        #: the stuck-odd protocol declares the publisher dead or a
+        #: segment fails verification — the supervisor signal
         #: (``launch/cluster_serve.py`` wires a restart-flag file here);
         #: rate-limited by ``dead_signal_cooldown``
         self.on_writer_dead = on_writer_dead
         self.dead_signal_cooldown = float(dead_signal_cooldown)
         self._last_dead_signal = -float("inf")
+        #: opportunistic re-verify cadence (s): each tick checksums one
+        #: rotating array of the *held* bundle, so corruption landing
+        #: after a clean attach is caught between swaps; 0 disables
+        self.scrub_interval = float(scrub_interval)
+        self._last_scrub = 0.0
+        self._scrub_cursor = 0
+        self._corrupt = False
         self._ident = (0, 0)                  # (epoch, version) served
         self._cv = threading.Condition()
         self._snap = None
@@ -494,7 +624,9 @@ class ReplicaService:
         self._thread: Optional[threading.Thread] = None
         self._started = False
         self._stats = {"attaches": 0, "attach_errors": 0,
-                       "last_attach_ms": 0.0, "writer_dead_signals": 0}
+                       "last_attach_ms": 0.0, "writer_dead_signals": 0,
+                       "shm_corruptions": 0, "scrubs": 0,
+                       "scrub_violations": []}
 
     # -- snapshot maintenance ------------------------------------------------
 
@@ -505,6 +637,24 @@ class ReplicaService:
         t0 = time.perf_counter()
         n_modes = int(bundle.meta.get("n_modes", 0))
         a = bundle.arrays
+        # structural invariants on top of the checksum gate: they prove
+        # the bytes are what the writer published, these prove what it
+        # published is servable (a writer-side build gone wrong must
+        # not propagate to readers as garbage answers)
+        bad: list = []
+        ps = a["packed_sigs"]
+        if ps.size > 1 and not bool(np.all(ps[:-1] <= ps[1:])):
+            bad.append("packed_sigs not sorted")
+        if not bool(np.all(np.isfinite(a["scores"]))):
+            bad.append("non-finite scores")
+        for k in range(n_modes):
+            cb = a[f"comp_bounds_{k}"]
+            if cb.size > 1 and not bool(np.all(cb[:-1] <= cb[1:])):
+                bad.append(f"comp_bounds_{k} not monotone")
+        if bad:
+            raise ShmCorruptionError(
+                f"bundle v{bundle.version}: invariant violations: "
+                f"{'; '.join(bad)}")
         idx = ClusterIndex.from_arrays(
             a["packed_sigs"],
             [a[f"mode_pairs_{k}"] for k in range(n_modes)],
@@ -521,9 +671,10 @@ class ReplicaService:
         self._stats["last_attach_ms"] = (time.perf_counter() - t0) * 1e3
         return snap
 
-    def _writer_dead(self, err: WriterDeadError) -> None:
-        self._stats["writer_dead_signals"] += 1
-        self._stats["last_writer_dead"] = repr(err)
+    def _signal_supervisor(self, err) -> None:
+        """Rate-limited escalation callback — one path for a dead
+        writer and a corrupt segment (both mean: the writer must
+        republish; we keep serving the held snapshot meanwhile)."""
         cb = self.on_writer_dead
         now = time.monotonic()
         if (cb is not None and now - self._last_dead_signal
@@ -533,6 +684,16 @@ class ReplicaService:
                 cb(err)
             except Exception:                # noqa: BLE001 — advisory
                 pass
+
+    def _writer_dead(self, err: WriterDeadError) -> None:
+        self._stats["writer_dead_signals"] += 1
+        self._stats["last_writer_dead"] = repr(err)
+        self._signal_supervisor(err)
+
+    def _corruption(self, err: ShmCorruptionError) -> None:
+        self._stats["shm_corruptions"] += 1
+        self._stats["last_shm_corruption"] = repr(err)
+        self._signal_supervisor(err)
 
     def _maybe_attach(self) -> None:
         try:
@@ -545,22 +706,65 @@ class ReplicaService:
         ident = (ctl["epoch"], ctl["version"])
         if ctl["version"] == 0 or ident == self._ident:
             return
-        bundle = self.replica.current()
+        try:
+            bundle = self.replica.current()
+        except ShmCorruptionError as e:
+            # refused segment: serve the held snapshot, escalate — the
+            # exact opposite of silently serving the corrupt bytes
+            self._corruption(e)
+            return
         if bundle is None:
             return
         ident = (bundle.epoch, bundle.version)
         if ident == self._ident:
             return
-        snap = self._build(bundle)
+        try:
+            snap = self._build(bundle)
+        except ShmCorruptionError as e:
+            self._corruption(e)
+            return
         self._ident = ident
+        # a verified attach supersedes any corruption the scrubber
+        # found in the previous bundle
+        self._corrupt = False
+        self._stats["scrub_violations"] = []
         with self._cv:
             self._snap = snap                # the replica's atomic swap
             self._cv.notify_all()
+
+    def _maybe_scrub(self) -> None:
+        """Opportunistic held-bundle re-verify: one rotating array's
+        checksum per tick, so a full pass completes every
+        ``n_arrays * scrub_interval`` seconds without ever stalling
+        the attach loop."""
+        if self.scrub_interval <= 0:
+            return
+        now = time.monotonic()
+        if now - self._last_scrub < self.scrub_interval:
+            return
+        self._last_scrub = now
+        b = self.replica._bundle
+        if b is None or not b.manifest:
+            return
+        names = sorted(b.arrays)
+        name = names[self._scrub_cursor % len(names)]
+        self._scrub_cursor += 1
+        bad = b.verify([name])
+        self._stats["scrubs"] += 1
+        if bad:
+            self._corrupt = True
+            self._stats["scrub_violations"] = [
+                f"shm checksum mismatch in held bundle "
+                f"v{b.version}: {bad[0]}"]
+            self._corruption(ShmCorruptionError(
+                f"scrub: array {bad[0]!r} of held segment v"
+                f"{b.version} no longer matches its published checksum"))
 
     def _loop(self) -> None:
         while not self._stop_evt.is_set():
             try:
                 self._maybe_attach()
+                self._maybe_scrub()
             except Exception as e:           # noqa: BLE001 — keep
                 # serving the previous snapshot on any attach failure
                 self._stats["attach_errors"] += 1
@@ -652,6 +856,21 @@ class ReplicaService:
             return float("inf")
         return max(0.0, time.time() - snap.published_wall)
 
+    @property
+    def scrub_clean(self) -> bool:
+        """False while the held bundle is known corrupt (scrub found a
+        checksum mismatch and no verified attach has superseded it) — the
+        /health 503 condition for silent corruption."""
+        return not (self._corrupt or self._stats["scrub_violations"])
+
+    def resilience_stats(self) -> dict:
+        """Integrity/escalation counters (mirrors the writer-side and
+        router ``resilience_stats`` contract)."""
+        s = self._stats
+        return {k: s[k] for k in (
+            "scrubs", "scrub_violations", "shm_corruptions",
+            "writer_dead_signals", "attach_errors")}
+
     def stats(self) -> dict:
         out = dict(self._stats)
         snap = self._snap
@@ -660,6 +879,7 @@ class ReplicaService:
                    clusters=0 if snap is None else len(snap.index),
                    dirty=self.dirty, staleness_s=self.staleness_s(),
                    thread_alive=self.thread_alive,
+                   scrub_clean=self.scrub_clean,
                    sizes=list(self._meta_sizes()))
         return out
 

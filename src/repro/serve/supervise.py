@@ -31,10 +31,23 @@ Two restart triggers:
 Everything is driven by one monitor thread polling at
 ``poll_interval``; all state transitions are recorded in an ``events``
 list (name, event, detail tuples) so fault-injection tests can assert
-exact restart sequences instead of sleeping and hoping.
+exact restart sequences instead of sleeping and hoping.  The log is a
+*bounded tail*: past ``max_events`` entries it rotates atomically (a
+fresh list is bound in one assignment, led by a ``rotated`` marker
+carrying the cumulative drop count), so a long-running plane cannot
+leak memory through its own audit trail while readers holding the old
+reference still see a consistent list.
+
+Children can also *push* events into the log across the process
+boundary: :func:`write_event` appends JSON lines to
+``{flag_dir}/{name}.events``, which the monitor ingests (atomic
+rename + read) on every tick — the path the data-integrity plane uses
+to surface WAL/checkpoint quarantines (``serve.service``) in the same
+timeline as the restarts they explain.
 """
 from __future__ import annotations
 
+import json
 import os
 import threading
 import time
@@ -67,20 +80,25 @@ class Supervisor:
                  backoff_max: float = 5.0, max_restarts: int = 5,
                  restart_window: float = 60.0,
                  flag_dir: Optional[str] = None,
-                 poll_interval: float = 0.05):
+                 poll_interval: float = 0.05,
+                 max_events: int = 2048):
         self.restart_backoff = float(restart_backoff)
         self.backoff_max = float(backoff_max)
         self.max_restarts = int(max_restarts)
         self.restart_window = float(restart_window)
         self.flag_dir = flag_dir
         self.poll_interval = float(poll_interval)
+        self.max_events = max(8, int(max_events))
         self._children: Dict[str, _Child] = {}
         self._lock = threading.RLock()
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        #: append-only (name, event, detail) transition log — the
-        #: deterministic assertion surface for chaos tests
+        #: (name, event, detail) transition log — the deterministic
+        #: assertion surface for chaos tests.  Bounded: rotates to the
+        #: newest half past ``max_events`` (see :meth:`_event`)
         self.events: List[Tuple[str, str, str]] = []
+        #: total entries dropped by rotation so far
+        self.events_dropped = 0
 
     # -- registration / lifecycle --------------------------------------------
 
@@ -98,7 +116,18 @@ class Supervisor:
         return self
 
     def _event(self, name: str, event: str, detail: str = "") -> None:
-        self.events.append((name, event, detail))
+        with self._lock:
+            ev = self.events
+            ev.append((name, event, detail))
+            if len(ev) > self.max_events:
+                keep = self.max_events // 2
+                self.events_dropped += len(ev) - keep
+                # atomic rotation: bind a *new* list in one assignment —
+                # readers holding the old reference keep a consistent
+                # (if stale) view, and the tail they care about survives
+                self.events = [("<supervisor>", "rotated",
+                                f"dropped {self.events_dropped} older "
+                                f"events")] + ev[-keep:]
 
     def _launch(self, ch: _Child) -> None:
         ch.proc = ch.factory()
@@ -211,6 +240,42 @@ class Supervisor:
                     self._event(ch.name, "restarting",
                                 f"attempt {ch.restarts}")
                     self._launch(ch)
+        self._ingest_child_events()
+
+    def _ingest_child_events(self) -> None:
+        """Adopt events pushed by children via :func:`write_event` into
+        the supervisor's log.  The file is claimed by atomic rename
+        first, so a child appending concurrently either lands in this
+        batch or in a fresh file for the next tick — never lost."""
+        if self.flag_dir is None:
+            return
+        with self._lock:
+            names = list(self._children)
+        for name in names:
+            path = os.path.join(self.flag_dir, f"{name}.events")
+            claimed = f"{path}.ingest"
+            try:
+                os.replace(path, claimed)
+            except OSError:
+                continue
+            try:
+                with open(claimed, encoding="utf-8") as fh:
+                    data = fh.read()
+            finally:
+                try:
+                    os.unlink(claimed)
+                except OSError:
+                    pass
+            for line in data.splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    doc = json.loads(line)
+                except json.JSONDecodeError:
+                    doc = {"event": "child_event", "detail": line}
+                self._event(name, str(doc.get("event", "child_event")),
+                            str(doc.get("detail", "")))
 
     def _monitor(self) -> None:
         while not self._stop_evt.wait(self.poll_interval):
@@ -271,4 +336,18 @@ def write_restart_flag(flag_dir: str, name: str) -> str:
     path = os.path.join(flag_dir, f"{name}.restart")
     with open(path, "w") as fh:
         fh.write(str(time.time()))
+    return path
+
+
+def write_event(flag_dir: str, name: str, event: str,
+                detail: str = "") -> str:
+    """Push one event from child ``name`` into the supervisor's log
+    (appends a JSON line to ``{name}.events``; the monitor thread
+    ingests the file on its next tick).  The cross-process half of the
+    integrity plane's reporting: quarantines and scrub violations land
+    in the same ordered timeline as the restarts they explain."""
+    path = os.path.join(flag_dir, f"{name}.events")
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write(json.dumps({"event": str(event),
+                             "detail": str(detail)}) + "\n")
     return path

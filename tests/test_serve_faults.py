@@ -1,17 +1,21 @@
-"""Fault-tolerant serving plane (ISSUE 7): deterministic fault
-injection, degraded router fan-out, circuit-break + re-probe, crash-safe
-shm recovery, checkpoint+WAL writer recovery, and process supervision.
+"""Fault-tolerant serving plane (ISSUE 7) and data-integrity plane
+(ISSUE 8): deterministic fault injection, degraded router fan-out,
+circuit-break + re-probe, crash-safe shm recovery, checkpoint+WAL writer
+recovery with CRC verification, quarantine + generation fallback, the
+background scrubber, write backpressure, and process supervision.
 
 Every fault here triggers on a logical counter (seeded ``FaultPlan``),
 and every assertion synchronises on an observable state transition with
 a bounded wait — never on a bare sleep.
 """
+import glob
 import json
 import os
 import subprocess
 import sys
 import threading
 import time
+import types
 
 import numpy as np
 import pytest
@@ -112,6 +116,23 @@ class TestFaultPlan:
             inj.fire("request", 1)
         inj.clear("request")
         inj.fire("request", 2)               # no raise
+
+    def test_corruption_faults_round_trip_and_poll(self):
+        plan = FaultPlan.build(
+            FaultPlan.flip_wal_byte(0, at_stream_version=3),
+            FaultPlan.truncate_checkpoint(1, at_version=2),
+            FaultPlan.flip_shm_word(0, at_version=4))
+        assert FaultPlan.from_json(plan.to_json()) == plan
+        inj = plan.for_component("writer", 0)
+        assert len(inj.faults) == 2
+        # fire() never enacts corruption kinds — the owning call site
+        # polls corrupt() and rots its own bytes after the checksum
+        inj.fire("wal", 3)                   # no raise, no consumption
+        f = inj.corrupt("wal", 3)
+        assert f is not None and f.kind == "flip"
+        assert inj.corrupt("wal", 4) is None          # count=1 spent
+        assert inj.corrupt("shm", 4).kind == "flip"
+        assert inj.corrupt("checkpoint", 9) is None   # scoped to shard 1
 
 
 # ---------------------------------------------------------------------------
@@ -651,3 +672,455 @@ raise SystemExit("unreachable")
         finally:
             svc.stop()
             pub.close()
+
+
+# ---------------------------------------------------------------------------
+# Integrity plane (ISSUE 8): CRC-framed WAL/checkpoint, quarantine +
+# generation fallback, torn-tail truncation
+# ---------------------------------------------------------------------------
+
+def _chunks(seed, n_chunks=5, rows=4):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, SIZES,
+                        size=(n_chunks, rows, 3)).astype(np.int64)
+
+
+class TestCorruptionRecovery:
+    def test_interior_wal_flip_quarantines_and_replays_prefix(
+            self, tmp_path):
+        """A verified record *after* a corrupt one makes the WAL
+        poisoned: quarantine the file, replay only the verified prefix,
+        and cut a fresh checkpoint so the prefix stays durable."""
+        rec = str(tmp_path / "rec")
+        chunks = _chunks(31)
+        vic = TriclusterService(SIZES, seed=31, recover_dir=rec,
+                                checkpoint_every=10**6)
+        for c in chunks:
+            vic.add(c)
+        del vic                              # crash, WAL holds 5 records
+
+        wal = os.path.join(rec, "wal.jsonl")
+        with open(wal, "rb") as f:
+            lines = f.read().split(b"\n")
+        ln = lines[1]                        # rot record 2 of 5
+        pos = len(ln) - 3                    # inside the json payload
+        lines[1] = ln[:pos] + bytes([ln[pos] ^ 0x01]) + ln[pos + 1:]
+        with open(wal, "wb") as f:
+            f.write(b"\n".join(lines))
+
+        successor = TriclusterService(SIZES, seed=31, recover_dir=rec,
+                                      checkpoint_every=10**6)
+        r = successor.recovered
+        assert r["wal_crc_errors"] == 1
+        assert r["wal_quarantined"].startswith("wal.jsonl.quarantine.")
+        assert r["replayed_ops"] == 1        # the verified prefix only
+        assert successor.stream_version == 1
+        assert glob.glob(os.path.join(rec, "wal.jsonl.quarantine.*"))
+        # the replayed prefix was made durable immediately
+        assert successor.stats()["checkpoints"] >= 1
+        assert os.path.exists(os.path.join(rec, "ckpt.npz"))
+
+        ctl = TriclusterService(SIZES, seed=31)
+        ctl.add(chunks[0])
+        ctl.refresh()
+        successor.refresh()
+        assert _top_sigs(successor) == _top_sigs(ctl)
+        ctl.stop()
+        successor.stop()
+
+    def test_torn_tail_truncates_and_resumes_in_place(self, tmp_path):
+        """A corrupt *last* record is a torn append: drop it, truncate
+        the file, and keep appending — no quarantine, no data loss
+        beyond the half-written op that never acked."""
+        rec = str(tmp_path / "rec")
+        chunks = _chunks(37)
+        vic = TriclusterService(SIZES, seed=37, recover_dir=rec,
+                                checkpoint_every=10**6)
+        for c in chunks[:3]:
+            vic.add(c)
+        del vic
+        wal = os.path.join(rec, "wal.jsonl")
+        good = os.path.getsize(wal)
+        with open(wal, "ab") as f:           # the torn half-record
+            f.write(b'00000000 {"op": "add", "rows"')
+
+        successor = TriclusterService(SIZES, seed=37, recover_dir=rec,
+                                      checkpoint_every=10**6)
+        r = successor.recovered
+        assert r["wal_torn_tail"] == 1 and r["wal_quarantined"] == ""
+        assert r["replayed_ops"] == 3
+        assert successor.stream_version == 3
+        assert os.path.getsize(wal) == good  # truncated to the prefix
+        assert not glob.glob(wal + ".quarantine.*")
+        successor.add(chunks[3])             # resume appending in place
+        del successor
+
+        final = TriclusterService(SIZES, seed=37, recover_dir=rec,
+                                  checkpoint_every=10**6)
+        assert final.recovered["replayed_ops"] == 4
+        assert final.stream_version == 4
+        final.stop()
+
+    def test_truncated_checkpoint_falls_back_a_generation(
+            self, tmp_path):
+        """The injected checkpoint truncation: the framed header
+        promises more bytes than the file holds, load refuses, and
+        recovery restores the rotated previous generation + the WAL
+        tail — data loss bounded to the ops between the generations."""
+        rec = str(tmp_path / "rec")
+        chunks = _chunks(41)
+        plan = FaultPlan.build(
+            FaultPlan.truncate_checkpoint(0, at_version=2))
+        vic = TriclusterService(SIZES, seed=41, recover_dir=rec,
+                                checkpoint_every=2,
+                                fault=plan.for_component("writer", 0))
+        vic.add(chunks[0])
+        vic.add(chunks[1])
+        vic.refresh()                        # gen 1 (sv=2), version 1
+        vic.add(chunks[2])
+        vic.add(chunks[3])
+        vic.refresh()                        # gen 2 (sv=4) — truncated
+        vic.add(chunks[4])                   # WAL: sv=5
+        assert vic.stats()["checkpoints"] == 2
+        del vic
+
+        successor = TriclusterService(SIZES, seed=41, recover_dir=rec,
+                                      checkpoint_every=10**6)
+        r = successor.recovered
+        assert r["checkpoint_generation"] == "previous"
+        assert r["checkpoint_quarantined"] == 1
+        assert r["checkpoint_stream_version"] == 2
+        assert r["replayed_ops"] == 1        # sv=5 from the WAL
+        assert successor.stream_version == 5
+        assert glob.glob(os.path.join(rec, "ckpt.npz.quarantine.*"))
+        rs = successor.resilience_stats()
+        assert rs["checkpoint_generation_fallbacks"] == 1
+
+        # bit-identical to a control over the surviving ops (chunks
+        # 2/3 — the window between the generations — are the loss)
+        ctl = TriclusterService(SIZES, seed=41)
+        ctl.add(chunks[0])
+        ctl.add(chunks[1])
+        ctl.add(chunks[4])
+        ctl.refresh()
+        successor.refresh()
+        assert _top_sigs(successor) == _top_sigs(ctl)
+        ctl.stop()
+        successor.stop()
+
+    def test_injected_wal_flip_end_to_end(self, tmp_path):
+        """``flip_wal_byte`` at sv=3 of 5: the victim's in-memory state
+        is untouched (the lie is only on disk), the successor detects
+        it at replay, quarantines, and keeps the verified prefix."""
+        rec = str(tmp_path / "rec")
+        chunks = _chunks(43)
+        plan = FaultPlan.build(
+            FaultPlan.flip_wal_byte(0, at_stream_version=3))
+        vic = TriclusterService(SIZES, seed=43, recover_dir=rec,
+                                checkpoint_every=10**6,
+                                fault=plan.for_component("writer", 0))
+        for c in chunks:
+            vic.add(c)
+        assert vic.stream_version == 5       # victim never noticed
+        del vic
+
+        successor = TriclusterService(SIZES, seed=43, recover_dir=rec)
+        r = successor.recovered
+        assert r["wal_crc_errors"] == 1 and r["wal_quarantined"]
+        assert r["replayed_ops"] == 2 and successor.stream_version == 2
+        assert successor.resilience_stats()["wal_quarantined"] == 1
+        successor.stop()
+
+    def test_checkpoint_frame_rejects_bit_rot_and_truncation(
+            self, tmp_path):
+        from repro.core import runs as RS
+        rec = str(tmp_path)
+        svc = TriclusterService(SIZES, seed=47, recover_dir=rec)
+        svc.add(_chunks(47)[0])
+        assert svc.final_checkpoint()
+        svc.stop()
+        path = os.path.join(rec, "ckpt.npz")
+        RS.load_checkpoint(path)             # clean frame verifies
+        with open(path, "rb") as f:
+            data = f.read()
+        i = len(data) // 2
+        with open(path, "wb") as f:
+            f.write(data[:i] + bytes([data[i] ^ 0xFF]) + data[i + 1:])
+        with pytest.raises(RS.CheckpointCorruptError):
+            RS.load_checkpoint(path)
+        with open(path, "wb") as f:          # torn write: short payload
+            f.write(data[:len(data) // 2])
+        with pytest.raises(RS.CheckpointCorruptError):
+            RS.load_checkpoint(path)
+        with open(path, "wb") as f:          # trailing garbage
+            f.write(data + b"x")
+        with pytest.raises(RS.CheckpointCorruptError):
+            RS.load_checkpoint(path)
+
+
+# ---------------------------------------------------------------------------
+# Background scrubber: cross-structure invariants → /health 503
+# ---------------------------------------------------------------------------
+
+class TestScrubber:
+    def test_scrub_clean_then_violation_flips_health(self, tmp_path):
+        svc = _service(seed=9, scrub_interval=0.02,
+                       event_dir=str(tmp_path), event_name="w0")
+        svc.refresh()
+        svc.start()
+        try:
+            _wait_for(lambda: svc.resilience_stats()["scrubs"] >= 1,
+                      what="first background scrub")
+            rep = svc.scrub()
+            assert rep["violations"] == [] and svc.scrub_clean
+            rs = svc.resilience_stats()
+            assert rs["last_scrub_version"] == svc.version
+            h = health_doc(svc)
+            assert h["healthy"] and h["scrub_clean"]
+
+            # a snapshot whose ranking scores went non-finite: the
+            # scrubber must flag it and /health must eject the backend
+            snap = svc._snap
+            poisoned = types.SimpleNamespace(
+                version=snap.version + 1, index=snap.index,
+                result=snap.result,
+                querier=types.SimpleNamespace(
+                    scores=np.array([1.0, np.nan])),
+                ages=snap.ages)
+            rep = svc.scrub(poisoned)
+            assert "non-finite ranking scores" in rep["violations"]
+            assert not svc.scrub_clean
+            h = health_doc(svc)
+            assert not h["healthy"] and not h["scrub_clean"]
+            assert "scrub" in h["error"]
+            assert any(e[0] == "scrub_violation"
+                       for e in svc._stats["integrity_events"])
+            # the violation was mirrored to the supervisor event file
+            assert os.path.exists(str(tmp_path / "w0.events"))
+        finally:
+            svc.stop()
+
+    def test_scrub_catches_index_result_divergence(self):
+        svc = _service(seed=10)
+        svc.refresh()
+        snap = svc._snap
+        assert len(snap.index) > 1
+        # an index that silently lost a cluster row relative to
+        # result.keep — exactly the divergence delta maintenance bugs
+        # (or rotted inputs) would produce
+        smaller = types.SimpleNamespace(
+            packed_sigs=snap.index.packed_sigs[:-1])
+        poisoned = types.SimpleNamespace(
+            version=snap.version + 1, index=smaller, result=snap.result,
+            querier=snap.querier, ages=snap.ages)
+        rep = svc.scrub(poisoned)
+        assert any("divergence" in v for v in rep["violations"])
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# Shm integrity: manifest CRCs refuse a rotted segment; the replica
+# holds its snapshot, escalates, and recovers on the next clean publish
+# ---------------------------------------------------------------------------
+
+def _index_arrays(seed=1, n=80):
+    rng = np.random.default_rng(seed)
+    m = StreamingMiner(SIZES, seed=seed)
+    m.upsert(rng.integers(0, SIZES, size=(n, 3)).astype(np.int64))
+    idx = ClusterIndex.from_result(m.snapshot())
+    arrays = {"packed_sigs": idx.packed_sigs,
+              "any_pairs": idx.any_pairs,
+              "scores": np.zeros(len(idx)),
+              "ages": np.zeros(len(idx)),
+              "density": np.asarray(idx.density, np.float64),
+              "gen_count": np.asarray(idx.gen_count, np.int64),
+              "volume": np.asarray(idx.volume, np.float64)}
+    for k in range(idx.arity):
+        arrays[f"mode_pairs_{k}"] = idx.mode_pairs[k]
+        arrays[f"comp_ents_{k}"] = idx.comp_ents[k]
+        arrays[f"comp_bounds_{k}"] = idx.comp_bounds[k]
+    return arrays, idx.arity
+
+
+def _hit_sigs(out):
+    return [(int(v.signature[0]), int(v.signature[1]))
+            for v, _ in out.hits]
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"),
+                    reason="POSIX shm namespace required")
+class TestShmIntegrity:
+    def test_flip_fault_refused_at_attach(self):
+        from repro.serve.shm import (ShmCorruptionError, ShmPublisher,
+                                     ShmReplica)
+        prefix = f"tcor{os.getpid()}"
+        plan = FaultPlan.build(FaultPlan.flip_shm_word(0, at_version=2))
+        pub = ShmPublisher(prefix, fault=plan.for_component("writer", 0))
+        try:
+            pub.publish(1, 1, {"a": np.arange(64.)})
+            rep = ShmReplica(prefix, connect_timeout=10,
+                             seqlock_spin_s=0.2)
+            held = rep.current()
+            assert held.version == 1 and held.verify() == []
+            pub.publish(2, 2, {"a": np.arange(64.) * 2})
+            with pytest.raises(ShmCorruptionError, match="checksum"):
+                rep.current()
+            # the held bundle still serves the verified bytes
+            assert np.array_equal(held.arrays["a"], np.arange(64.))
+            rep.close()
+        finally:
+            pub.close()
+
+    def test_replica_holds_snapshot_escalates_and_recovers(self):
+        from repro.serve.shm import (ReplicaService, ShmCorruptionError,
+                                     ShmPublisher)
+        prefix = f"trsc{os.getpid()}"
+        plan = FaultPlan.build(FaultPlan.flip_shm_word(0, at_version=2))
+        pub = ShmPublisher(prefix, fault=plan.for_component("writer", 0))
+        arrays, n_modes = _index_arrays(seed=1)
+        pub.publish(1, 1, arrays, meta={"n_modes": n_modes})
+        deaths = []
+        svc = ReplicaService(prefix, poll_interval=0.01,
+                             connect_timeout=10, seqlock_spin_s=0.2,
+                             on_writer_dead=deaths.append,
+                             dead_signal_cooldown=0.0,
+                             scrub_interval=0.02)
+        svc.start(first_snapshot_timeout=30)
+        try:
+            assert svc.version == 1
+            base = _hit_sigs(svc.query(k=3))
+            pub.publish(2, 2, arrays, meta={"n_modes": n_modes})
+            _wait_for(lambda: (svc.resilience_stats()
+                               ["shm_corruptions"]) >= 1,
+                      what="corrupt segment refused")
+            # zero wrong answers: the rotted v2 never serves — the held
+            # v1 snapshot answers, bit-identical to before the rot
+            assert svc.version == 1
+            assert _hit_sigs(svc.query(k=3)) == base
+            assert deaths and isinstance(deaths[0], ShmCorruptionError)
+            # next clean publish recovers (the flip fault is spent)
+            pub.publish(3, 3, arrays, meta={"n_modes": n_modes})
+            _wait_for(lambda: svc.version == 3,
+                      what="clean republish attached")
+            assert svc.scrub_clean and health_doc(svc)["healthy"]
+            assert _hit_sigs(svc.query(k=3)) == base
+        finally:
+            svc.stop()
+            pub.close()
+
+    def test_opportunistic_scrub_catches_post_attach_rot(self):
+        from repro.serve.shm import ReplicaService, ShmPublisher
+        prefix = f"tsrb{os.getpid()}"
+        pub = ShmPublisher(prefix)
+        arrays, n_modes = _index_arrays(seed=2)
+        pub.publish(1, 1, arrays, meta={"n_modes": n_modes})
+        deaths = []
+        svc = ReplicaService(prefix, poll_interval=0.01,
+                             connect_timeout=10, seqlock_spin_s=0.2,
+                             on_writer_dead=deaths.append,
+                             dead_signal_cooldown=0.0,
+                             scrub_interval=0.01)
+        svc.start(first_snapshot_timeout=30)
+        try:
+            assert svc.version == 1 and svc.scrub_clean
+            # rot one byte of the held segment *after* the verified
+            # attach, through the writer's live mapping — only the
+            # rotating background re-verify can see this
+            spec = svc.replica._bundle.manifest[0]
+            o = int(spec["offset"])
+            pub._data.buf[o] = pub._data.buf[o] ^ 0xFF
+            _wait_for(lambda: not svc.scrub_clean,
+                      what="scrub caught held-bundle rot")
+            assert svc.resilience_stats()["scrub_violations"]
+            assert not health_doc(svc)["healthy"]
+            assert deaths                       # supervisor escalation
+            # a clean republish supersedes the corrupt bundle
+            pub.publish(2, 2, arrays, meta={"n_modes": n_modes})
+            _wait_for(lambda: svc.version == 2,
+                      what="clean republish attached")
+            assert svc.scrub_clean and health_doc(svc)["healthy"]
+        finally:
+            svc.stop()
+            pub.close()
+
+
+# ---------------------------------------------------------------------------
+# Write backpressure: 429 + Retry-After past --max-write-backlog
+# ---------------------------------------------------------------------------
+
+class TestBackpressure:
+    def test_429_retry_after_and_drain(self):
+        rng = np.random.default_rng(21)
+        svc = TriclusterService(SIZES, refresh_interval=0.05, seed=21)
+        svc.add(rng.integers(0, SIZES, size=(40, 3)).astype(np.int64))
+        svc.refresh()                        # warm the miner, dirty=0
+        server = make_server(svc, port=0, max_write_backlog=2)
+        threading.Thread(target=server.serve_forever,
+                         daemon=True).start()
+        try:
+            cl = ClusterClient(f"http://127.0.0.1:{server.port}",
+                               timeout=30)
+            assert cl.upsert([[0, 0, 0]])["stream_version"] == 2
+            assert cl.upsert([[1, 1, 1]])["stream_version"] == 3
+            # backlog at the limit: 429; the client honours Retry-After
+            # exactly once, the backlog is still there, error surfaces
+            t0 = time.monotonic()
+            with pytest.raises(RuntimeError, match="backlog"):
+                cl.upsert([[2, 2, 2]])
+            assert time.monotonic() - t0 >= 0.1      # 2x refresh_interval
+            assert server.throttled_writes == 2
+            assert svc.stream_version == 3           # write rejected
+            # direct drain: the very next write is admitted
+            svc.refresh()
+            assert cl.upsert([[2, 2, 2]])["stream_version"] == 4
+            assert cl.upsert([[3, 3, 3]])["stream_version"] == 5
+            # retry-once path that *succeeds*: a drain lands while the
+            # client sleeps its Retry-After
+            def _drain():
+                _wait_for(lambda: server.throttled_writes >= 3,
+                          what="third throttle")
+                svc.refresh()
+            t = threading.Thread(target=_drain, daemon=True)
+            t.start()
+            assert cl.upsert([[4, 4, 4]])["stream_version"] == 6
+            t.join(timeout=30)
+            assert server.throttled_writes == 3
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# Supervisor event log: bounded rotation + child event ingestion
+# ---------------------------------------------------------------------------
+
+class TestSupervisorEvents:
+    def test_event_log_rotates_bounded(self):
+        sup = Supervisor(max_events=8)
+        for i in range(30):
+            sup._event("x", "e", str(i))
+        assert len(sup.events) <= 8
+        assert sup.events[0][0] == "<supervisor>"
+        assert sup.events[0][1] == "rotated"
+        assert sup.events_dropped >= 20
+        assert sup.events[-1] == ("x", "e", "29")    # newest survive
+
+    def test_child_events_ingested_from_flag_dir(self, tmp_path):
+        from repro.serve.supervise import write_event
+        flag_dir = str(tmp_path)
+        write_event(flag_dir, "shard-0", "wal_quarantined",
+                    "interior record corrupt at line 3")
+        sup = Supervisor(poll_interval=0.02, flag_dir=flag_dir)
+        sup.add("shard-0", _sleeper)
+        with sup:
+            _wait_for(lambda: any(e[1] == "wal_quarantined"
+                                  for e in sup.events),
+                      what="child event ingested")
+        name, event, detail = [e for e in sup.events
+                               if e[1] == "wal_quarantined"][0]
+        assert name == "shard-0" and "line 3" in detail
+        assert not os.path.exists(
+            os.path.join(flag_dir, "shard-0.events"))
+        assert not os.path.exists(
+            os.path.join(flag_dir, "shard-0.events.ingest"))
