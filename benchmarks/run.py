@@ -72,6 +72,11 @@ def _mining_summary(results: dict, scale: float) -> dict:
         # normalisation (ROADMAP benchmark hygiene)
         out["runs_speedup"] = results["packed"]["runs_speedup"]
         out["calibration"] = results["packed"]["calibration"]
+        # windowed device pipeline (DESIGN.md §3c): bit-identity +
+        # equal-T throughput + peak-allocation ratios, schema-gated by
+        # benchmarks/validate.py (older raw docs lack the section)
+        if results["packed"].get("windowed"):
+            out["windowed"] = results["packed"]["windowed"]
     if results.get("serving"):
         # online query service: latency under a write trickle, swap
         # staleness, batch-vs-scalar speedup (benchmarks/serving.py);

@@ -28,6 +28,24 @@ RUNS_MODES = {"batch": ("in_core", "out_of_core"),
               "distributed": ("incremental", "full_resort")}
 RUNS_SPEEDUP_KEYS = ("out_of_core", "incremental_snapshot")
 CALIBRATION_KEYS = {"probe": str, "n": int, "ms": (int, float)}
+#: windowed device pipeline (``core.windowed``, DESIGN.md §3c): the
+#: streamed path must stay bit-identical to the monolithic one, mine a
+#: table >= MIN_WINDOWS x the window budget on-device, and at report
+#: scale (>= SCALE_FULL) keep >= MIN_WINDOWED_THROUGHPUT x monolithic
+#: throughput at equal in-core T while peaking at <= 1/MIN_PEAK_RATIO
+#: of the monolithic device allocation.  Below report scale the speed
+#: and memory gates relax to sanity bounds (tiny runs are dominated by
+#: fixed overheads) but bit-identity and window count always gate.
+WINDOWED_KEYS = {"n_tuples": int, "window_budget": int, "n_windows": int,
+                 "monolithic_ms": (int, float),
+                 "windowed_ms": (int, float),
+                 "equal_budget_ms": (int, float),
+                 "throughput_ratio": (int, float),
+                 "peak_monolithic_bytes": int, "peak_windowed_bytes": int,
+                 "peak_ratio": (int, float)}
+MIN_WINDOWED_THROUGHPUT = 0.8
+MIN_PEAK_RATIO = 2.0
+MIN_WINDOWS = 8
 #: online serving section (``benchmarks/serving.py``): the load-phase
 #: measurements, the swap-consistency proof, and the batched-query
 #: comparison (acceptance: ≥ 2× scalar at ≥ 64 entities).
@@ -167,6 +185,11 @@ def validate(doc: dict) -> list[str]:
                     errs.append(f"calibration: bad '{k}' ({cal.get(k)!r})")
             if isinstance(cal.get("ms"), (int, float)) and cal["ms"] <= 0:
                 errs.append("calibration: non-positive ms")
+    win = doc.get("windowed")
+    if win is not None:
+        scale = doc.get("scale")
+        errs.extend(_validate_windowed(
+            win, scale if isinstance(scale, (int, float)) else 0.0))
     srv = doc.get("serving")
     if srv is not None:
         errs.extend(_validate_serving(srv))
@@ -191,6 +214,48 @@ def validate(doc: dict) -> list[str]:
                     for k in ("stage1_sort", "end_to_end"):
                         if not isinstance(sp[v].get(k), (int, float)):
                             errs.append(f"{name}[{v}][{k}] missing")
+    return errs
+
+
+def _validate_windowed(sec, scale) -> list[str]:
+    errs = []
+    if not isinstance(sec, dict):
+        return ["'windowed' section is not a dict"]
+    missing = VARIANTS - set(sec)
+    if missing:
+        errs.append(f"windowed: missing variants {sorted(missing)}")
+    full_run = scale >= SCALE_FULL
+    for v, w in sec.items():
+        if not isinstance(w, dict):
+            errs.append(f"windowed[{v}]: not a dict")
+            continue
+        for key, typ in WINDOWED_KEYS.items():
+            if not isinstance(w.get(key), typ) or isinstance(w.get(key),
+                                                             bool):
+                errs.append(f"windowed[{v}]: bad '{key}' "
+                            f"({w.get(key)!r})")
+        if w.get("bit_identical") is not True:
+            errs.append(f"windowed[{v}]: 'bit_identical' is not True — "
+                        "the streamed pipeline diverged from the "
+                        "monolithic oracle")
+        nw = w.get("n_windows")
+        if isinstance(nw, int) and nw < MIN_WINDOWS:
+            errs.append(f"windowed[{v}]: only {nw} windows (the gate "
+                        f"needs a table >= {MIN_WINDOWS}x the budget)")
+        tr = w.get("throughput_ratio")
+        if isinstance(tr, (int, float)):
+            floor = MIN_WINDOWED_THROUGHPUT if full_run else 0.0
+            if tr <= floor:
+                errs.append(f"windowed[{v}]: equal-T throughput only "
+                            f"{tr:.2f}x monolithic (need > {floor}x at "
+                            f"scale={scale})")
+        pr = w.get("peak_ratio")
+        if isinstance(pr, (int, float)):
+            floor = MIN_PEAK_RATIO if full_run else 0.0
+            if pr <= floor:
+                errs.append(f"windowed[{v}]: peak allocation ratio "
+                            f"{pr:.2f}x (monolithic/windowed must be > "
+                            f"{floor} at scale={scale})")
     return errs
 
 
@@ -425,6 +490,10 @@ def main(argv=None):
              if "packed_speedup" in doc else "")
           + (f", calibration={doc['calibration']['ms']:.2f}ms"
              if "calibration" in doc else "")
+          + (f", windowed@T="
+             f"{doc['windowed']['prime']['throughput_ratio']:.2f}x "
+             f"peak={doc['windowed']['prime']['peak_ratio']:.1f}x"
+             if "windowed" in doc and "prime" in doc["windowed"] else "")
           + (f", serving p50={doc['serving']['p50_ms']:.3f}ms "
              f"batch@64={doc['serving']['batch_speedup_at_64']:.2f}x"
              if "serving" in doc else "")

@@ -16,6 +16,9 @@
 #     corruption must be detected (zero silently-wrong answers),
 #     recovery bit-identical, clean-path checksum cost <= 5% of a
 #     snapshot swap (serving_integrity schema gate);
+#   * window smoke — mine a small context through the windowed device
+#     pipeline (DESIGN.md §3c) with a deliberately tiny budget
+#     (>= 8 windows) and assert bit-parity against the monolithic path;
 #   * trend smoke — render the calibration-normalised cross-PR trend
 #     report from the git history of results/BENCH_mining.json.
 # Usage: scripts/ci.sh [extra pytest args...]
@@ -91,6 +94,32 @@ from benchmarks.chaos import run_integrity
 run_integrity(scale=0.004, out_name="integrity_smoke.json")
 EOF
 python -m benchmarks.validate results/integrity_smoke.json
+
+echo "== window smoke (>= 8 HBM windows, bit-parity vs monolithic) =="
+# a tiny window budget forces the seam-carry machinery through many
+# windows on a real (valued, NOAC) context; every result leaf —
+# permutations and signatures included — must equal the monolithic run
+python - <<'EOF'
+import dataclasses
+import numpy as np
+from repro.core import mine
+from repro.data import synthetic
+ctx = synthetic.movielens_like(n_tuples=4000, seed=0).deduplicated()
+budget = -(-ctx.tuples.shape[0] // 8)
+for variant, kw in (("prime", {}), ("noac", {"delta": 1.0})):
+    mono = mine(ctx, backend="batch", variant=variant, **kw)
+    win = mine(ctx, backend="batch", variant=variant,
+               window_budget=budget, **kw)
+    n_windows = -(-ctx.tuples.shape[0] // budget)
+    assert n_windows >= 8, n_windows
+    for f in dataclasses.fields(mono.result):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono.result, f.name)),
+            np.asarray(getattr(win.result, f.name)),
+            err_msg=f"{variant}:{f.name}")
+    print(f"[window-smoke] {variant}: {n_windows} windows, "
+          f"{win.n_clusters} clusters, bit-identical")
+EOF
 
 echo "== trend smoke (calibration-normalised cross-PR report) =="
 python scripts/render_trend.py --limit 8

@@ -107,6 +107,12 @@ def trend_rows(hist: list) -> list:
             row["delta_sp"] = (scale.get("delta") or {}).get("speedup")
             row["qps_ratio"] = (scale.get("replica_scaleout") or {}).get(
                 "qps_ratio")
+            # windowed device pipeline (DESIGN.md §3c): equal-T
+            # throughput ratio + peak-allocation ratio; docs predating
+            # the section render dashes
+            win = (doc.get("windowed") or {}).get("prime") or {}
+            row["win_tp"] = win.get("throughput_ratio")
+            row["win_peak"] = win.get("peak_ratio")
         except (TypeError, ValueError, AttributeError):
             # malformed historical document: keep the rev visible with
             # whatever was extracted before the fault
@@ -121,7 +127,8 @@ HEADERS = [("rev", "rev"), ("cal_ms", "cal ms"),
            ("inc_snapshot_sp", "inc-snap sp"),
            ("serve_p50_x_cal", "serve p50 ×cal"),
            ("serve_batch_sp", "batch sp"),
-           ("delta_sp", "delta sp"), ("qps_ratio", "qps ratio")]
+           ("delta_sp", "delta sp"), ("qps_ratio", "qps ratio"),
+           ("win_tp", "win tp"), ("win_peak", "win peak")]
 
 
 def render(rows: list) -> str:

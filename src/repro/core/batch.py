@@ -50,10 +50,12 @@ class BatchMiner(P.PipelineMiner):
                  seed: int = 0x5EED, packed: Optional[bool] = None,
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
-                 prune_values: bool = True):
+                 prune_values: bool = True,
+                 window_budget: Optional[int] = None):
         super().__init__(sizes, theta=theta, seed=seed, packed=packed,
                          sort_backend=sort_backend, use_pallas=use_pallas,
-                         prune_values=prune_values)
+                         prune_values=prune_values,
+                         window_budget=window_budget)
 
     def mine_context(self, ctx: PolyadicContext, only_kept: bool = True):
         if ctx.sizes != self.sizes:

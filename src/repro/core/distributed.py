@@ -345,9 +345,15 @@ class DistributedMiner:
                  packed: Optional[bool] = None,
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
-                 prune_values: bool = True):
+                 prune_values: bool = True,
+                 window_budget: Optional[int] = None):
         self.sizes = tuple(int(s) for s in sizes)
         self.prune_values = bool(prune_values)
+        #: shared streaming unit (DESIGN.md §3c): windows the incremental
+        #: serving snapshot's device pipeline and rounds the shuffle's
+        #: per-link dispatch capacity up to whole windows
+        self.window_budget = (None if window_budget is None
+                              else int(window_budget))
         self.mesh = mesh
         self.axes: Axis = (axes,) if isinstance(axes, str) else tuple(axes)
         self.delta = None if delta is None else float(delta)
@@ -440,6 +446,12 @@ class DistributedMiner:
         axes, nsh = self.axes, self.n_shards
         tl, n = tuples.shape
         capacity = max(1, int(np.ceil(tl / nsh * self.capacity_factor)))
+        if self.window_budget:
+            # per-link batches ship in whole windows of the shared plan
+            # (capacity only sizes the dispatch buffers / overflow check,
+            # so rounding up never changes a mined bit)
+            wb = int(self.window_budget)
+            capacity = -(-capacity // wb) * wb
         # rebuild the plans with the (replicated) value domain's slot
         # count — vdom is empty when pruning is off, restoring the
         # 32-bit float lane
@@ -789,8 +801,22 @@ class DistributedMiner:
             perms = RS.padded_perms(run, self.key_plans, rows[:1],
                                     None if vals is None else vals[:1],
                                     count, cap)
-            res = self._serve_fn(targs, self._lo, self._hi, values=vargs,
-                                 perms=jnp.asarray(perms, jnp.int32))
+            if self.window_budget and self.packed_active:
+                # windowed serving remine (DESIGN.md §3c): the merged
+                # global perms feed the bounded device window loop —
+                # bit-identical to the monolithic perms call below
+                from . import windowed as WD
+                res = WD.mine_windowed(
+                    rows, vals, perms, plans=self.key_plans,
+                    hash_lo=self._lo, hash_hi=self._hi, delta=self.delta,
+                    theta=self.theta, minsup=self.minsup,
+                    window_budget=self.window_budget,
+                    sort_backend=self.resolved_sort_backend,
+                    use_pallas=self.use_pallas)
+            else:
+                res = self._serve_fn(targs, self._lo, self._hi,
+                                     values=vargs,
+                                     perms=jnp.asarray(perms, jnp.int32))
         if self.track_dirty_sigs:
             sigs = PL.kept_sig_words(res)
             self.last_dirty_sigs = PL.dirty_sig_count(

@@ -91,9 +91,13 @@ def mine(ctx: PolyadicContext, backend: str = "batch",
     distributed backend switches it to chunked ingestion + merged
     per-shard-run snapshots), ``chunk_budget`` (batch: out-of-core
     chunked Stage 1 via ``mine_chunked`` — host-sorted runs, the device
-    never sorts).  All incremental/chunked paths run on the shared
-    ``core.runs`` storage layer (DESIGN.md §4).  ``variant='noac'``
-    requires ``delta``.
+    never sorts), ``window_budget`` (the fully windowed device
+    pipeline, DESIGN.md §3c: Stage 1–3 stream through bounded device
+    windows; on the batch backend via ``mine_windowed``, on streaming/
+    distributed it windows the incremental snapshot remine and sizes
+    the shuffle's per-link dispatch batches).  All incremental/chunked
+    paths run on the shared ``core.runs`` storage layer (DESIGN.md §4).
+    ``variant='noac'`` requires ``delta``.
     """
     if variant == "noac" and params.get("delta") is None:
         raise ValueError("variant='noac' requires delta=<float>")
@@ -126,7 +130,8 @@ def _pipe_kw(p):
     return {"packed": p.get("packed"),
             "sort_backend": p.get("sort_backend"),
             "use_pallas": p.get("use_pallas"),
-            "prune_values": p.get("prune_values", True)}
+            "prune_values": p.get("prune_values", True),
+            "window_budget": p.get("window_budget")}
 
 
 def _timed(step, block=True):
@@ -144,8 +149,15 @@ def _timed(step, block=True):
 
 
 def _batch_step(miner, p, tuples, values=None):
-    """One-shot in-core mining, or out-of-core chunked Stage 1 when the
-    ``chunk_budget`` knob is set (``PipelineMiner.mine_chunked``)."""
+    """One-shot in-core mining; out-of-core chunked Stage 1 when
+    ``chunk_budget`` is set (``PipelineMiner.mine_chunked``); the fully
+    windowed device pipeline when ``window_budget`` is set
+    (``PipelineMiner.mine_windowed`` — host run sort *and* bounded
+    device windows sharing the one budget)."""
+    wb = p.get("window_budget")
+    if wb:
+        return lambda: miner.mine_windowed(tuples, values=values,
+                                           window_budget=int(wb))
     budget = p.get("chunk_budget")
     if budget:
         return lambda: miner.mine_chunked(tuples, values=values,

@@ -49,11 +49,13 @@ class NOACMiner(P.PipelineMiner):
                  packed: Optional[bool] = None,
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
-                 prune_values: bool = True):
+                 prune_values: bool = True,
+                 window_budget: Optional[int] = None):
         super().__init__(sizes, theta=rho_min, delta=delta, minsup=minsup,
                          seed=seed, packed=packed,
                          sort_backend=sort_backend, use_pallas=use_pallas,
-                         prune_values=prune_values)
+                         prune_values=prune_values,
+                         window_budget=window_budget)
         self.rho_min = float(rho_min)
 
     def mine_context(self, ctx: PolyadicContext):

@@ -1,0 +1,71 @@
+"""Peak device-allocation probe for the windowed pipeline benchmarks.
+
+Three measurement sources, best available first:
+
+* ``device.memory_stats()`` — real allocator telemetry on accelerator
+  backends (TPU/GPU expose ``bytes_in_use``; the probe prefers it and
+  resets nothing, reporting deltas from the probe's baseline).
+* ``jax.live_arrays()`` — on backends without allocator stats (XLA-CPU)
+  the summed ``nbytes`` of live device buffers is an exact census of
+  *materialised* arrays.  Sampled at stage boundaries it misses
+  transient compiler scratch, but that scratch is itself sized by the
+  operand shapes being compared, so the O(window)-vs-O(T) contrast the
+  benchmark gates on survives the approximation.
+* RSS delta (``resource.getrusage``) — last-resort fallback when jax
+  introspection is unavailable; peak RSS only grows, so only useful as
+  a coarse upper bound.
+
+``MemProbe`` is the ``probe`` callback of ``core.windowed``: call it
+with a stage name at each sampling point; ``peak_bytes`` / ``stages``
+report high-water deltas from the construction-time baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+
+def device_bytes() -> int:
+    """Current device allocation estimate in bytes (see module doc)."""
+    try:
+        dev = jax.local_devices()[0]
+        stats = dev.memory_stats()
+        if stats and "bytes_in_use" in stats:
+            return int(stats["bytes_in_use"])
+    except Exception:
+        pass
+    try:
+        return int(sum(a.nbytes for a in jax.live_arrays()))
+    except Exception:
+        import resource
+        return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024)
+
+
+class MemProbe:
+    """High-water allocation tracker relative to a baseline sample."""
+
+    def __init__(self):
+        self.baseline = device_bytes()
+        self.stages: Dict[str, int] = {}
+        self.peak_bytes = 0
+
+    def __call__(self, stage: str = "total") -> int:
+        delta = max(0, device_bytes() - self.baseline)
+        self.stages[stage] = max(self.stages.get(stage, 0), delta)
+        self.peak_bytes = max(self.peak_bytes, delta)
+        return delta
+
+    def report(self) -> Dict[str, int]:
+        return {"peak_bytes": int(self.peak_bytes),
+                "stages": {k: int(v) for k, v in sorted(self.stages.items())}}
+
+
+def measure_result_bytes(result) -> int:
+    """Device bytes held live by a result pytree (0 for host/numpy
+    leaves) — what a monolithic run keeps resident after it returns."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(result):
+        if isinstance(leaf, jax.Array):
+            total += int(leaf.nbytes)
+    return total

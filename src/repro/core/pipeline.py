@@ -588,8 +588,11 @@ class PipelineMiner:
                  seed: int = 0x5EED, packed: Optional[bool] = None,
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
-                 prune_values: bool = True):
+                 prune_values: bool = True,
+                 window_budget: Optional[int] = None):
         self.sizes = tuple(int(s) for s in sizes)
+        self.window_budget = (None if window_budget is None
+                              else int(window_budget))
         self.theta = float(theta)
         self.delta = None if delta is None else float(delta)
         if self.delta is not None and self.delta < 0:
@@ -667,11 +670,19 @@ class PipelineMiner:
         ``chunks`` is a single (T, N) table or an iterable of row
         chunks (``values`` aligned likewise for the δ variant);
         ``chunk_budget`` bounds rows-per-chunk, re-splitting anything
-        larger.  Valued tables get the constructor's last-write-wins
+        larger.  A budget *smaller than the largest key segment* is
+        fine — chunk runs merge stably, so a segment spanning many
+        chunks reassembles exactly (``tests/test_window_property.py``
+        regression-tests this); only degenerate budgets (< 1) raise.
+        Valued tables get the constructor's last-write-wins
         canonicalisation (``core.runs``) — already-canonical contexts
         pass through unchanged.  Contexts whose key exceeds 64 bits
         fall back to one device sort of the assembled table."""
         from . import runs as RS
+        if chunk_budget is not None and int(chunk_budget) < 1:
+            raise ValueError(
+                f"chunk_budget must be >= 1, got {chunk_budget}; pass "
+                "None to ingest chunks as offered")
         store = RS.RunStore(self.key_plans,
                             radix=self.resolved_sort_backend == "radix",
                             incremental=self.key_plans[0].fits,
@@ -694,3 +705,55 @@ class PipelineMiner:
                             value_domain=self.value_domain(vals))
         return self._fn(targs, self._lo, self._hi, values=vargs,
                         perms=jnp.asarray(perms, jnp.int32))
+
+    def mine_windowed(self, chunks, values=None,
+                      window_budget: Optional[int] = None,
+                      stats: Optional[dict] = None,
+                      probe=None) -> PipelineResult:
+        """Fully windowed out-of-core mining (DESIGN.md §3c): the host
+        run sort of :meth:`mine_chunked` *and* a device pipeline that
+        streams Stage 1–3 through ``window_budget``-sized slices of
+        the merged sorted order (``core.windowed``), so peak
+        incremental device memory is O(window), not O(T).  The sort
+        chunking and the device window loop share the one budget
+        (``radix.plan_windows``).  Bit-identical to the in-core
+        ``__call__`` on the same table; ``window_budget=None`` runs a
+        single in-core window through the same code path.
+
+        Raises for configurations the windowed path cannot honour
+        bit-exactly (>64-bit keys, the forced-lexsort baseline) and
+        for degenerate budgets — never a silent seam split."""
+        from . import runs as RS
+        from . import windowed as WD
+        if window_budget is None:
+            window_budget = self.window_budget
+        if not self.key_plans[0].fits:
+            raise ValueError(
+                "mine_windowed needs 64-bit-packable keys; this "
+                "context's key exceeds 64 bits — use mine_chunked")
+        backend = self.resolved_sort_backend
+        if backend == "lexsort":
+            raise ValueError(
+                "mine_windowed has no lexsort path (packed=False / "
+                "sort_backend='lexsort'); use the monolithic pipeline "
+                "for the lexsort baseline")
+        if window_budget is not None and int(window_budget) < 1:
+            raise ValueError(
+                f"window_budget must be >= 1, got {window_budget}; "
+                "pass None for a single in-core window")
+        store = RS.RunStore(self.key_plans, radix=backend == "radix",
+                            incremental=True,
+                            stats=stats if stats is not None else {})
+        for rows, vals in RS.iter_chunks(chunks, values, window_budget,
+                                         with_values=self.delta is not None):
+            store.add(rows, vals)
+        store.prepare()
+        if store.count == 0:
+            raise ValueError("no data ingested")
+        rows, vals = store.table()
+        return WD.mine_windowed(
+            rows, vals, store.perms(), plans=self.key_plans,
+            hash_lo=self._lo, hash_hi=self._hi, delta=self.delta,
+            theta=self.theta, minsup=self.minsup,
+            window_budget=window_budget, sort_backend=backend,
+            use_pallas=self.use_pallas, probe=probe)

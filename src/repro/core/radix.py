@@ -213,6 +213,51 @@ def radix_argsort_host(keys: np.ndarray, live_bits: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Window plan (shared sort/reduce streaming unit)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    """Static schedule of contiguous ``[start, stop)`` slices covering a
+    length-``t`` sorted order in ``budget``-row windows.  This is the
+    *one* streaming unit of the out-of-core path (DESIGN.md §3c): the
+    host run sort chunks on it (``RunStore`` ``chunk_budget``), the
+    device Stage-1/2/3 window loop iterates it, and the distributed
+    shuffle rounds its per-link capacity up to a multiple of it — the
+    same way the radix histogram sweep's block grid tiles one pass."""
+    t: int
+    budget: int
+
+    @property
+    def n_windows(self) -> int:
+        return -(-self.t // self.budget)
+
+    @property
+    def bounds(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple((lo, min(lo + self.budget, self.t))
+                     for lo in range(0, self.t, self.budget))
+
+
+def plan_windows(t: int, budget: Optional[int] = None) -> WindowPlan:
+    """Build the shared window plan.  ``budget=None`` (or >= t) is a
+    single in-core window.  Degenerate budgets raise instead of being
+    silently clamped: a silently-widened or silently-split window is
+    exactly the failure mode the seam-carry contract exists to rule
+    out, so misuse must be loud."""
+    t = int(t)
+    if t < 1:
+        raise ValueError(f"window plan needs a non-empty table, got t={t}")
+    if budget is None:
+        return WindowPlan(t, t)
+    budget = int(budget)
+    if budget < 1:
+        raise ValueError(
+            f"window_budget must be >= 1, got {budget}; pass None for a "
+            "single in-core window")
+    return WindowPlan(t, min(budget, t))
+
+
+# ---------------------------------------------------------------------------
 # Backend resolution (single source of truth for every engine)
 # ---------------------------------------------------------------------------
 

@@ -75,7 +75,8 @@ class StreamingMiner(P.PipelineMiner):
                  packed: Optional[bool] = None,
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
-                 prune_values: bool = True):
+                 prune_values: bool = True,
+                 window_budget: Optional[int] = None):
         # prune_values is accepted for registry-kwarg uniformity but has
         # no effect on snapshots: the streaming device pipeline shares
         # the host store's un-pruned float value lane (see module
@@ -84,7 +85,8 @@ class StreamingMiner(P.PipelineMiner):
                                        else theta),
                          delta=delta, minsup=minsup, seed=seed,
                          packed=packed, sort_backend=sort_backend,
-                         use_pallas=use_pallas, prune_values=prune_values)
+                         use_pallas=use_pallas, prune_values=prune_values,
+                         window_budget=window_budget)
         # host packing shares the device pipeline's bit-width plans
         # (core.keys) — the packers are bit-identical by construction
         self._codecs = self.key_plans
@@ -177,8 +179,21 @@ class StreamingMiner(P.PipelineMiner):
             res = self._fn(targs, self._lo, self._hi, values=vargs)
         else:
             perms = s.perms(cap)
-            res = self._fn(targs, self._lo, self._hi, values=vargs,
-                           perms=jnp.asarray(perms, jnp.int32))
+            if self.window_budget and self.packed_active:
+                # windowed snapshot remine (DESIGN.md §3c): the merged
+                # perms feed the bounded device window loop instead of
+                # one monolithic O(T) pipeline call — bit-identical
+                from . import windowed as WD
+                res = WD.mine_windowed(
+                    buf, vals, perms, plans=self.key_plans,
+                    hash_lo=self._lo, hash_hi=self._hi, delta=self.delta,
+                    theta=self.theta, minsup=self.minsup,
+                    window_budget=self.window_budget,
+                    sort_backend=self.resolved_sort_backend,
+                    use_pallas=self.use_pallas)
+            else:
+                res = self._fn(targs, self._lo, self._hi, values=vargs,
+                               perms=jnp.asarray(perms, jnp.int32))
         if self.track_dirty_sigs:
             self._note_sigs(res)
         return res

@@ -61,6 +61,12 @@ def main(argv=None):
                     help="batch: out-of-core chunked Stage 1 — sort at "
                          "most this many rows per host chunk "
                          "(core.runs store; 0 = in-core)")
+    ap.add_argument("--window-budget", type=int, default=0,
+                    help="windowed device pipeline (DESIGN.md §3c): "
+                         "stream Stage 1-3 through sorted-order windows "
+                         "of at most this many rows — peak incremental "
+                         "device memory O(window), bit-identical to the "
+                         "monolithic path (0 = off)")
     ap.add_argument("--incremental", action="store_true",
                     help="distributed: chunked ingestion into per-shard "
                          "run stores + merged-run snapshots instead of "
@@ -118,6 +124,7 @@ def main(argv=None):
                    rho_min=args.rho_min, minsup=args.minsup,
                    strategy=args.strategy, chunks=args.chunks,
                    chunk_budget=args.chunk_budget or None,
+                   window_budget=args.window_budget or None,
                    **({} if incremental is None
                       else {"incremental": incremental}),
                    packed=packed[args.sort_path],

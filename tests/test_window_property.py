@@ -1,0 +1,295 @@
+"""Seam-adversarial properties of the windowed device pipeline
+(``core.windowed``, DESIGN.md §3c):
+
+* windowed ≡ monolithic **bit-for-bit** — every ``PipelineResult``
+  leaf, permutations and signatures included — for prime and NOAC,
+  across sort backends, and for budgets ∈ {tiny, exact divisor,
+  non-divisor, == T, > T, None},
+* the seam-carry contract survives adversarial layouts: a single key
+  segment spanning ≥ 3 windows, NOAC δ-windows straddling window
+  seams, duplicate rows split across seams,
+* the engines that adopt the window budget (batch ``mine_windowed``,
+  streaming snapshots, distributed serving snapshots, the engine
+  registry's ``window_budget=`` param) all reproduce their monolithic
+  twins exactly,
+* the budget guards (ISSUE 9 satellite): sub-segment budgets are
+  *exact* in both ``mine_chunked`` and ``mine_windowed`` — merged runs
+  and seam carries make a segment larger than the budget safe, so the
+  regression is "no silent seam split", not an error — while genuinely
+  degenerate configurations (budget < 1, >64-bit keys, the lexsort
+  baseline) raise clear errors instead of silently widening/splitting.
+
+The seeded tests below always run; the hypothesis classes widen the
+search in CI (the container has no hypothesis — same pattern as
+``tests/test_radix_property.py``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import BatchMiner, NOACMiner, StreamingMiner, mine
+from repro.core import radix as RX
+from repro.core import windowed as WD
+from repro.core.context import PolyadicContext
+
+
+def _assert_results_identical(a, b):
+    for f in dataclasses.fields(a):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
+            err_msg=f.name)
+
+
+def _random_ctx(rng, sizes, t, values):
+    """Random context; valued contexts get UNIQUE tuples (V must be a
+    function of the tuple, and the windowed path's run store treats a
+    valued add as an upsert — duplicate rows would shrink the survivor
+    table vs the raw monolithic call)."""
+    if values:
+        total = int(np.prod(sizes))
+        t = min(t, total)
+        flat = rng.choice(total, t, replace=False)
+        tuples = np.stack(np.unravel_index(flat, sizes),
+                          1).astype(np.int32)
+        vals = rng.uniform(0.001, 1000.0, t).astype(np.float32)
+        return tuples, vals
+    tuples = np.stack([rng.integers(0, s, t, dtype=np.int32)
+                       for s in sizes], 1)
+    return tuples, None
+
+
+def _giant_segment_ctx(t, values=False, seed=0):
+    """A context where mode 2's key segment (the other two columns) is
+    ONE segment covering the whole table — any budget < t forces that
+    segment across every window seam.  The prime variant includes
+    duplicate rows (they exercise the first-occurrence carry); the
+    valued variant keeps tuples unique (see _random_ctx)."""
+    rng = np.random.default_rng(seed)
+    if values:
+        e = rng.permutation(t).astype(np.int32)
+        sizes = (2, 2, t)
+        vals = rng.uniform(0.0, 10.0, t).astype(np.float32)
+    else:
+        e = rng.integers(0, max(2, t // 2), t, dtype=np.int32)  # dups
+        sizes = (2, 2, max(2, t // 2))
+        vals = None
+    tuples = np.stack([np.zeros(t, np.int32), np.zeros(t, np.int32), e], 1)
+    return sizes, tuples, vals
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across budgets, backends, variants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["radix", "lax"])
+@pytest.mark.parametrize("budget", [1, 7, 60, 120, 121, 500, None])
+def test_windowed_prime_bit_identical(backend, budget):
+    sizes = (9, 7, 5)
+    rng = np.random.default_rng(3)
+    tuples, _ = _random_ctx(rng, sizes, 120, values=False)
+    bm = BatchMiner(sizes, sort_backend=backend)
+    _assert_results_identical(
+        bm(tuples), bm.mine_windowed(tuples, window_budget=budget))
+
+
+@pytest.mark.parametrize("backend", ["radix", "lax"])
+@pytest.mark.parametrize("budget", [1, 13, 50, 100, 777, None])
+@pytest.mark.parametrize("delta", [0.0, 50.0])
+def test_windowed_noac_bit_identical(backend, budget, delta):
+    sizes = (7, 6, 5)
+    rng = np.random.default_rng(11)
+    tuples, vals = _random_ctx(rng, sizes, 100, values=True)
+    nm = NOACMiner(sizes, delta=delta, sort_backend=backend)
+    _assert_results_identical(
+        nm(tuples, vals),
+        nm.mine_windowed(tuples, values=vals, window_budget=budget))
+
+
+def test_windowed_matches_every_monolithic_backend():
+    """The windowed path (one result) equals the monolithic pipeline
+    under ALL sort backends — lexsort included (the backends are
+    mutually bit-identical, so windowed must match each of them)."""
+    sizes = (8, 6, 4)
+    rng = np.random.default_rng(5)
+    tuples, vals = _random_ctx(rng, sizes, 90, values=True)
+    win = NOACMiner(sizes, delta=10.0).mine_windowed(
+        tuples, values=vals, window_budget=17)
+    for backend in ("radix", "lax", "lexsort"):
+        mono = NOACMiner(sizes, delta=10.0, sort_backend=backend,
+                         prune_values=False)(tuples, vals)
+        _assert_results_identical(mono, win)
+
+
+# ---------------------------------------------------------------------------
+# Seam-adversarial layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [5, 16, 49])
+def test_single_segment_spans_many_windows(budget):
+    """One key segment covering the whole table: with budget 5 at
+    T=200 the segment spans 40 windows; the masked-prefix seam carry
+    must reassemble it exactly (signatures, cardinalities, bounds)."""
+    sizes, tuples, _ = _giant_segment_ctx(200, seed=1)
+    assert -(-200 // budget) >= 3
+    bm = BatchMiner(sizes)
+    _assert_results_identical(
+        bm(tuples), bm.mine_windowed(tuples, window_budget=budget))
+
+
+@pytest.mark.parametrize("budget", [7, 32])
+def test_delta_window_straddles_seams(budget):
+    """δ large enough that every tuple's value window covers most of
+    the (single, table-spanning) segment — the δ-range bounds and the
+    prefix differences both cross many window seams."""
+    sizes, tuples, vals = _giant_segment_ctx(150, values=True, seed=2)
+    nm = NOACMiner(sizes, delta=5.0)
+    _assert_results_identical(
+        nm(tuples, vals),
+        nm.mine_windowed(tuples, values=vals, window_budget=budget))
+
+
+def test_duplicate_rows_across_seams():
+    """Duplicate rows adjacent in sorted order but split by a window
+    seam: the carried first-occurrence comparison must mask the copy
+    in the next window (and tfirst/stage-3 dedup must agree)."""
+    sizes = (4, 3, 3)
+    rng = np.random.default_rng(7)
+    base, _ = _random_ctx(rng, sizes, 30, values=False)
+    tuples = np.concatenate([base, base, base[:11]], 0)  # heavy dups
+    bm = BatchMiner(sizes)
+    for budget in (1, 2, 9):
+        _assert_results_identical(
+            bm(tuples), bm.mine_windowed(tuples, window_budget=budget))
+
+
+# ---------------------------------------------------------------------------
+# Engine adoption (registry param, streaming + distributed snapshots)
+# ---------------------------------------------------------------------------
+
+def _ctx(sizes, tuples, vals=None):
+    return PolyadicContext(sizes, tuples, vals)
+
+
+def test_engine_registry_window_budget():
+    sizes = (9, 7, 5)
+    rng = np.random.default_rng(13)
+    tuples, vals = _random_ctx(rng, sizes, 160, values=True)
+    for variant, v in (("prime", None), ("noac", vals)):
+        kw = {} if variant == "prime" else {"delta": 2.0}
+        ctx = _ctx(sizes, tuples, v)
+        mono = mine(ctx, backend="batch", variant=variant, **kw)
+        win = mine(ctx, backend="batch", variant=variant,
+                   window_budget=23, **kw)
+        _assert_results_identical(mono.result, win.result)
+        assert mono.n_clusters == win.n_clusters
+
+
+def test_streaming_snapshot_windowed():
+    sizes = (9, 7, 5)
+    rng = np.random.default_rng(17)
+    tuples, vals = _random_ctx(rng, sizes, 150, values=True)
+    ref = StreamingMiner(sizes, delta=3.0)
+    win = StreamingMiner(sizes, delta=3.0, window_budget=31)
+    for lo in range(0, 150, 50):
+        ref.add(tuples[lo:lo + 50], vals[lo:lo + 50])
+        win.add(tuples[lo:lo + 50], vals[lo:lo + 50])
+    _assert_results_identical(ref.snapshot(), win.snapshot())
+
+
+def test_distributed_serving_snapshot_windowed():
+    sizes = (9, 7, 5)
+    rng = np.random.default_rng(19)
+    tuples, _ = _random_ctx(rng, sizes, 128, values=False)
+    ctx = _ctx(sizes, tuples)
+    ref = mine(ctx, backend="distributed", variant="prime",
+               incremental=True)
+    win = mine(ctx, backend="distributed", variant="prime",
+               incremental=True, window_budget=19)
+    _assert_results_identical(ref.miner.serving_snapshot(),
+                              win.miner.serving_snapshot())
+
+
+# ---------------------------------------------------------------------------
+# Budget guards (satellite: no silent seam split, loud degenerate cases)
+# ---------------------------------------------------------------------------
+
+def test_sub_segment_budget_is_exact_not_split():
+    """Regression: a budget smaller than the largest segment's row
+    count must NOT silently split the segment — both out-of-core paths
+    stay bit-exact (merged runs / seam carries)."""
+    sizes, tuples, vals = _giant_segment_ctx(120, values=True, seed=23)
+    nm = NOACMiner(sizes, delta=1.0, prune_values=False)
+    mono = nm(tuples, vals)
+    # largest segment = 120 rows; budget 11 is far below it
+    _assert_results_identical(
+        mono, nm.mine_chunked(tuples, values=vals, chunk_budget=11))
+    _assert_results_identical(
+        mono, nm.mine_windowed(tuples, values=vals, window_budget=11))
+
+
+@pytest.mark.parametrize("budget", [0, -3])
+def test_degenerate_budgets_raise(budget):
+    sizes = (4, 3, 3)
+    rng = np.random.default_rng(29)
+    tuples, _ = _random_ctx(rng, sizes, 20, values=False)
+    bm = BatchMiner(sizes)
+    with pytest.raises(ValueError, match="window_budget"):
+        bm.mine_windowed(tuples, window_budget=budget)
+    with pytest.raises(ValueError, match="chunk_budget"):
+        bm.mine_chunked(tuples, chunk_budget=budget)
+    with pytest.raises(ValueError, match="window_budget"):
+        RX.plan_windows(20, budget)
+
+
+def test_windowed_rejects_lexsort_and_oversized_keys():
+    sizes = (4, 3, 3)
+    rng = np.random.default_rng(31)
+    tuples, _ = _random_ctx(rng, sizes, 20, values=False)
+    with pytest.raises(ValueError, match="lexsort"):
+        BatchMiner(sizes, packed=False).mine_windowed(tuples,
+                                                      window_budget=5)
+    big = (1 << 20, 1 << 20, 1 << 20, 1 << 20)   # 80-bit key
+    rows = np.stack([rng.integers(0, 64, 10, dtype=np.int32)
+                     for _ in big], 1)
+    with pytest.raises(ValueError, match="64"):
+        BatchMiner(big).mine_windowed(rows, window_budget=5)
+
+
+def test_plan_windows_shared_unit():
+    p = RX.plan_windows(100, 32)
+    assert p.n_windows == 4
+    assert p.bounds[0] == (0, 32) and p.bounds[-1] == (96, 100)
+    assert RX.plan_windows(100, None).n_windows == 1
+    assert RX.plan_windows(100, 1000).budget == 100
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis widening (CI only; mirrors tests/test_radix_property.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # pragma: no cover - CI installs it
+    st = None
+
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 7), st.integers(2, 7), st.integers(2, 7),
+           st.integers(1, 60), st.integers(1, 70), st.integers(0, 2**16),
+           st.one_of(st.none(), st.floats(0.0, 500.0)),
+           st.sampled_from(["radix", "lax"]))
+    def test_hypothesis_windowed_bit_identical(a, b, c, t, budget, seed,
+                                               delta, backend):
+        sizes = (a, b, c)
+        rng = np.random.default_rng(seed)
+        tuples, vals = _random_ctx(rng, sizes, t, values=delta is not None)
+        if delta is None:
+            m = BatchMiner(sizes, sort_backend=backend)
+            _assert_results_identical(
+                m(tuples), m.mine_windowed(tuples, window_budget=budget))
+        else:
+            m = NOACMiner(sizes, delta=delta, sort_backend=backend)
+            _assert_results_identical(
+                m(tuples, vals),
+                m.mine_windowed(tuples, values=vals, window_budget=budget))
