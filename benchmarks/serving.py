@@ -413,6 +413,106 @@ def _replica_scaleout(scale: float, seed: int = 5) -> dict:
     return out
 
 
+def _obs_overhead(scale: float, repeat: int, seed: int = 7) -> dict:
+    """Instrumentation-overhead measurement (DESIGN.md §11 overhead
+    budget): the same data served over HTTP twice — once with the
+    observability plane off, once with ``--metrics``-equivalent wiring
+    (request spans + registry + slow-query log, and the service-side
+    swap-path timers) — with client rounds interleaved so drift hits
+    both sides equally.  Reports query p50 on/off, snapshot-swap
+    latency on/off (best-of: the like-for-like floor), the overhead
+    percentages validate.py gates at full scale, and the p99 *derived
+    from the registry histogram* — the column render_trend.py tracks
+    against the exact client-side p99."""
+    from repro.obs import Obs
+    from repro.serve.protocol import make_server
+    from repro.serve.router import PooledClient
+
+    n = max(2_000, int(1_000_000 * scale))
+    ctx = synthetic.movielens_like(n_tuples=n, seed=seed)
+
+    def build(obs):
+        svc = TriclusterService(ctx.sizes, refresh_interval=3600.0,
+                                dirty_threshold=1 << 30, seed=seed,
+                                obs=obs)
+        svc.add(ctx.tuples)
+        svc.refresh()
+        return svc
+
+    # default slow-query threshold: the overhead budget is for the
+    # production configuration, not the log-everything debug setting
+    obs_on = Obs.create(service="bench")
+    svc_off, svc_on = build(None), build(obs_on)
+    servers, clients = [], {}
+    lat = {"off": [], "on": []}
+    swap = {"off": float("inf"), "on": float("inf")}
+    try:
+        for key, svc, obs in (("off", svc_off, None),
+                              ("on", svc_on, obs_on)):
+            srv = make_server(svc, port=0, obs=obs)
+            threading.Thread(target=srv.serve_forever,
+                             daemon=True).start()
+            servers.append(srv)
+            clients[key] = PooledClient(f"http://127.0.0.1:{srv.port}")
+
+        rng = np.random.default_rng(seed)
+
+        def q():
+            return {"entity": int(rng.integers(0, ctx.sizes[0])),
+                    "mode": 0, "k": TOP_K}
+
+        for cl in clients.values():               # warm both paths
+            for _ in range(20):
+                cl.call("/query", q())
+        per_round, target = 50, max(400, int(4_000 * scale))
+        while len(lat["off"]) < target:
+            for key, cl in clients.items():
+                for _ in range(per_round):
+                    doc = q()
+                    t0 = time.perf_counter()
+                    cl.call("/query", doc)
+                    lat[key].append((time.perf_counter() - t0) * 1e3)
+
+        wrng = np.random.default_rng(seed + 1)
+        for _ in range(max(2, repeat)):
+            rows = wrng.integers(0, ctx.sizes, size=(8, 3)) \
+                       .astype(np.int64)
+            for key, svc in (("off", svc_off), ("on", svc_on)):
+                svc.upsert(rows)
+                t0 = time.perf_counter()
+                svc.refresh()
+                swap[key] = min(swap[key],
+                                (time.perf_counter() - t0) * 1e3)
+    finally:
+        for srv in servers:
+            srv.shutdown()
+            srv.server_close()
+        svc_off.stop()
+        svc_on.stop()
+
+    off, on = np.asarray(lat["off"]), np.asarray(lat["on"])
+    p50_off = float(np.percentile(off, 50))
+    p50_on = float(np.percentile(on, 50))
+    # the registry-derived p99 reads the same series protocol.py wrote
+    h = obs_on.metrics.histogram("server_request_ms",
+                                 endpoint="/query", role="writer")
+    assert h.count >= on.size, "instrumented path missed requests"
+    return {"scale": float(scale), "n_tuples": int(n),
+            "queries_per_side": int(off.size),
+            "query_p50_off_ms": p50_off,
+            "query_p50_on_ms": p50_on,
+            "query_overhead_pct": 100.0 * (p50_on - p50_off)
+            / max(p50_off, 1e-9),
+            "query_p99_exact_ms": float(np.percentile(on, 99)),
+            "query_p99_hist_ms": float(h.quantile(0.99)),
+            "swap_off_ms": float(swap["off"]),
+            "swap_on_ms": float(swap["on"]),
+            "swap_overhead_pct": 100.0 * (swap["on"] - swap["off"])
+            / max(swap["off"], 1e-9),
+            "on_samples": int(obs_on.metrics.sample_count()),
+            "on_spans": int(len(obs_on.tracer))}
+
+
 def run(scale: float = 0.12, repeat: int = 3) -> dict:
     n = max(2_000, int(1_000_000 * scale))
     ctx = synthetic.movielens_like(n_tuples=n, seed=0)
@@ -441,6 +541,7 @@ def run(scale: float = 0.12, repeat: int = 3) -> dict:
     raw["serving_scale"] = {"scale": float(scale),
                             "delta": _delta_probe(scale, repeat),
                             "replica_scaleout": _replica_scaleout(scale)}
+    raw["serving_obs"] = _obs_overhead(scale, repeat)
     print_table(
         "serving: query latency under write trickle",
         ["n_tuples", "queries", "qps", "p50_ms", "p99_ms", "p99_wait",
@@ -472,6 +573,18 @@ def run(scale: float = 0.12, repeat: int = 3) -> dict:
           f"{s['baseline']['qps']:,.0f}", f"{s['plane']['qps']:,.0f}",
           f"{s['qps_ratio']:.2f}x", s["consistent"],
           s["read_your_writes"]]])
+    o = raw["serving_obs"]
+    print_table(
+        "serving_obs: instrumentation overhead (metrics on vs off)",
+        ["queries", "p50_off", "p50_on", "q_ovh_pct", "swap_off",
+         "swap_on", "s_ovh_pct", "p99_exact", "p99_hist"],
+        [[o["queries_per_side"], f"{o['query_p50_off_ms']:.3f}",
+          f"{o['query_p50_on_ms']:.3f}",
+          f"{o['query_overhead_pct']:+.2f}%",
+          f"{o['swap_off_ms']:.1f}", f"{o['swap_on_ms']:.1f}",
+          f"{o['swap_overhead_pct']:+.2f}%",
+          f"{o['query_p99_exact_ms']:.3f}",
+          f"{o['query_p99_hist_ms']:.3f}"]])
     save_json("serving.json", raw)
     return raw
 

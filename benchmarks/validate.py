@@ -72,6 +72,25 @@ SCALE_LOAD_KEYS = {"queries": int, "qps": (int, float), "write_ops": int}
 SCALE_FULL = 0.1
 MIN_DELTA_SPEEDUP = 5.0
 MIN_QPS_RATIO = 2.5
+#: observability section (``benchmarks/serving.py`` serving_obs,
+#: DESIGN.md §11): the instrumentation must stay within the overhead
+#: budget at report scale (>= SCALE_FULL) — metrics-on query p50 and
+#: snapshot-swap latency each <= OBS_OVERHEAD_BOUND_PCT above the
+#: metrics-off run.  Below report scale the budget relaxes to a sanity
+#: bound (tiny runs are noise-dominated) but the schema, the recorded
+#: sample/span evidence and histogram-p99 sanity always gate.
+OBS_KEYS = {"scale": (int, float), "n_tuples": int,
+            "queries_per_side": int,
+            "query_p50_off_ms": (int, float),
+            "query_p50_on_ms": (int, float),
+            "query_overhead_pct": (int, float),
+            "query_p99_exact_ms": (int, float),
+            "query_p99_hist_ms": (int, float),
+            "swap_off_ms": (int, float), "swap_on_ms": (int, float),
+            "swap_overhead_pct": (int, float),
+            "on_samples": int, "on_spans": int}
+OBS_OVERHEAD_BOUND_PCT = 3.0
+OBS_OVERHEAD_RELAXED_PCT = 50.0
 #: chaos section (``benchmarks/chaos.py``): kill-and-restart cycles
 #: must surface zero gateway 5xx (degradation, never an error page),
 #: recover full coverage inside the bound, restart both injected
@@ -196,6 +215,9 @@ def validate(doc: dict) -> list[str]:
     scale_sec = doc.get("serving_scale")
     if scale_sec is not None:
         errs.extend(_validate_serving_scale(scale_sec))
+    obs_sec = doc.get("serving_obs")
+    if obs_sec is not None:
+        errs.extend(_validate_serving_obs(obs_sec))
     paths = {r.get("sort_path") for r in rows}
     if SORT_PATHS & paths:
         if not SORT_PATHS <= paths:
@@ -360,6 +382,35 @@ def _validate_serving_scale(sec) -> list[str]:
     return errs
 
 
+def _validate_serving_obs(sec) -> list[str]:
+    errs = []
+    if not isinstance(sec, dict):
+        return ["'serving_obs' section is not a dict"]
+    for key, typ in OBS_KEYS.items():
+        if not isinstance(sec.get(key), typ) or isinstance(sec.get(key),
+                                                           bool):
+            errs.append(f"serving_obs: bad '{key}' ({sec.get(key)!r})")
+    scale = sec.get("scale")
+    full_run = isinstance(scale, (int, float)) and scale >= SCALE_FULL
+    bound = OBS_OVERHEAD_BOUND_PCT if full_run \
+        else OBS_OVERHEAD_RELAXED_PCT
+    for which in ("query", "swap"):
+        pct = sec.get(f"{which}_overhead_pct")
+        if isinstance(pct, (int, float)) and pct > bound:
+            errs.append(f"serving_obs: {which} instrumentation overhead "
+                        f"{pct:.2f}% > {bound}% budget (scale={scale})")
+    # the instrumented side must actually have recorded evidence, and
+    # the bucket-derived p99 must be a positive latency
+    if isinstance(sec.get("on_samples"), int) and sec["on_samples"] <= 0:
+        errs.append("serving_obs: metrics-on run recorded no samples")
+    if isinstance(sec.get("on_spans"), int) and sec["on_spans"] <= 0:
+        errs.append("serving_obs: metrics-on run recorded no spans")
+    p99h = sec.get("query_p99_hist_ms")
+    if isinstance(p99h, (int, float)) and p99h <= 0:
+        errs.append("serving_obs: non-positive histogram-derived p99")
+    return errs
+
+
 def _validate_serving_faults(sec) -> list[str]:
     errs = []
     if not isinstance(sec, dict):
@@ -500,7 +551,11 @@ def main(argv=None):
           + (f", delta={doc['serving_scale']['delta']['speedup']:.1f}x"
              f" plane="
              f"{doc['serving_scale']['replica_scaleout']['qps_ratio']:.1f}x"
-             if "serving_scale" in doc else ""))
+             if "serving_scale" in doc else "")
+          + (f", obs overhead q="
+             f"{doc['serving_obs']['query_overhead_pct']:+.2f}% swap="
+             f"{doc['serving_obs']['swap_overhead_pct']:+.2f}%"
+             if "serving_obs" in doc else ""))
     return 0
 
 

@@ -19,6 +19,9 @@
 #   * window smoke — mine a small context through the windowed device
 #     pipeline (DESIGN.md §3c) with a deliberately tiny budget
 #     (>= 8 windows) and assert bit-parity against the monolithic path;
+#   * obs smoke — boot a 2x1 plane with --metrics, scrape /metrics and
+#     assert one query's trace id reconstructs the router span tree
+#     (/debug/trace) and lands in the slow log (/debug/slow);
 #   * trend smoke — render the calibration-normalised cross-PR trend
 #     report from the git history of results/BENCH_mining.json.
 # Usage: scripts/ci.sh [extra pytest args...]
@@ -120,6 +123,78 @@ for variant, kw in (("prime", {}), ("noac", {"delta": 1.0})):
     print(f"[window-smoke] {variant}: {n_windows} windows, "
           f"{win.n_clusters} clusters, bit-identical")
 EOF
+
+echo "== obs smoke (metrics scrape + cross-process trace round-trip) =="
+# 2x1 plane booted with --metrics: one fanned-out query's trace id
+# must reconstruct a span tree on the router (/debug/trace — root +
+# one router.shard span per shard), appear in the slow log with its
+# queue-wait/handler split (--slow-query-ms 0 records everything),
+# and the Prometheus exposition (/metrics) must carry both the
+# registry instruments and the folded resilience collectors
+PORT_FILE="$(mktemp)"
+rm -f "$PORT_FILE"
+python -m repro.launch.cluster_serve --dataset random --n-tuples 1024 \
+    --shards 2 --replicas 1 --metrics --slow-query-ms 0 \
+    --port 0 --port-file "$PORT_FILE" &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+PORT_FILE="$PORT_FILE" python - <<'EOF'
+import json, os, re, time, urllib.request
+
+def get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.read().decode()
+
+def post(url, doc):
+    req = urllib.request.Request(
+        url, data=json.dumps(doc).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=30) as r:
+        return json.loads(r.read().decode())
+
+path = os.environ["PORT_FILE"]
+deadline = time.monotonic() + 120
+while not (os.path.exists(path) and open(path).read().strip()):
+    assert time.monotonic() < deadline, "router port file"
+    time.sleep(0.05)
+base = f"http://127.0.0.1:{int(open(path).read())}"
+while True:
+    try:
+        get(f"{base}/metrics")
+        break
+    except OSError:
+        assert time.monotonic() < deadline, "router /metrics"
+        time.sleep(0.05)
+
+out = post(f"{base}/query", {"k": 5})
+tid = out["trace_id"]
+assert re.fullmatch(r"[0-9a-f]{16}", tid), tid
+# router records span -> metrics -> slow entry after replying: the
+# slow entry arriving means the whole trace is in the ring
+while not any(e.get("trace_id") == tid
+              for e in json.loads(get(f"{base}/debug/slow"))["slowest"]):
+    assert time.monotonic() < deadline, "slow-log entry"
+    time.sleep(0.05)
+spans = json.loads(get(f"{base}/debug/trace?trace_id={tid}"))["spans"]
+names = [s["name"] for s in spans]
+(root,) = [s for s in spans if s["name"] == "router/query"]
+assert root["parent_id"] is None
+shards = {s["attrs"]["shard"] for s in spans
+          if s["name"] == "router.shard"}
+assert shards == {0, 1}, shards
+text = get(f"{base}/metrics")
+assert 'repro_router_request_ms_count{endpoint="/query"}' in text
+assert "repro_router_breaker_open" in text
+ent = next(e for e in json.loads(get(f"{base}/debug/slow"))["slowest"]
+           if e["trace_id"] == tid)
+assert ent["handler_ms"] is not None and ent["wait_ms"] is not None
+post(f"{base}/shutdown", {})
+print(f"[obs-smoke] trace {tid}: {len(spans)} router spans "
+      f"({sorted(set(names))}), slow log + exposition OK")
+EOF
+wait "$SERVE_PID"
+trap - EXIT
+rm -f "$PORT_FILE"
 
 echo "== trend smoke (calibration-normalised cross-PR report) =="
 python scripts/render_trend.py --limit 8

@@ -113,6 +113,15 @@ def trend_rows(hist: list) -> list:
             win = (doc.get("windowed") or {}).get("prime") or {}
             row["win_tp"] = win.get("throughput_ratio")
             row["win_peak"] = win.get("peak_ratio")
+            # observability plane (DESIGN.md §11): instrumentation
+            # overhead on query p50 (within-run %, machine-independent)
+            # and the registry histogram's own p99 estimate in
+            # calibration units; docs predating the section get dashes
+            obs = doc.get("serving_obs") or {}
+            row["obs_ovh"] = obs.get("query_overhead_pct")
+            p99h = obs.get("query_p99_hist_ms")
+            row["obs_p99_x_cal"] = (None if not cal or not p99h
+                                    else p99h / cal)
         except (TypeError, ValueError, AttributeError):
             # malformed historical document: keep the rev visible with
             # whatever was extracted before the fault
@@ -128,7 +137,8 @@ HEADERS = [("rev", "rev"), ("cal_ms", "cal ms"),
            ("serve_p50_x_cal", "serve p50 ×cal"),
            ("serve_batch_sp", "batch sp"),
            ("delta_sp", "delta sp"), ("qps_ratio", "qps ratio"),
-           ("win_tp", "win tp"), ("win_peak", "win peak")]
+           ("win_tp", "win tp"), ("win_peak", "win peak"),
+           ("obs_ovh", "obs ovh%"), ("obs_p99_x_cal", "obs p99 ×cal")]
 
 
 def render(rows: list) -> str:

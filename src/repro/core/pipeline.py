@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -577,11 +578,25 @@ def dirty_sig_count(prev: Optional[np.ndarray],
     return int(cur.size) + int(prev.size) - 2 * int(inter)
 
 
+def _active_obs(obs):
+    """The enabled observability hub or None — the pipeline's
+    zero-overhead-when-disabled gate.  Duck-typed (``.enabled``,
+    ``.metrics``, ``.tracer``) so ``core`` never imports ``repro.obs``;
+    callers pass a ``repro.obs.Obs`` (or nothing)."""
+    return obs if (obs is not None
+                   and getattr(obs, "enabled", False)) else None
+
+
 class PipelineMiner:
     """Base driver: jit-compiled single-shard pipeline over fixed sizes.
 
     Subclasses (``BatchMiner``, ``NOACMiner``) pin the component operator;
-    everything else — hashing, jit caching, materialisation — is shared."""
+    everything else — hashing, jit caching, materialisation — is shared.
+
+    ``obs`` (an enabled ``repro.obs.Obs``) turns on per-stage wall-time
+    profiling: host run-sort vs device mine split, per-window stage
+    timings and memory peaks on the windowed path.  ``obs=None`` (the
+    default) keeps every hot loop at a single predicate test."""
 
     def __init__(self, sizes: Sequence[int], *, theta: float = 0.0,
                  delta: Optional[float] = None, minsup: int = 0,
@@ -589,7 +604,9 @@ class PipelineMiner:
                  sort_backend: Optional[str] = None,
                  use_pallas: Optional[bool] = None,
                  prune_values: bool = True,
-                 window_budget: Optional[int] = None):
+                 window_budget: Optional[int] = None,
+                 obs=None):
+        self.obs = obs
         self.sizes = tuple(int(s) for s in sizes)
         self.window_budget = (None if window_budget is None
                               else int(window_budget))
@@ -635,6 +652,8 @@ class PipelineMiner:
         return jnp.asarray(K.value_domain_host(values))
 
     def __call__(self, tuples, values=None) -> PipelineResult:
+        obs = _active_obs(self.obs)
+        t0 = time.perf_counter() if obs is not None else 0.0
         tuples = jnp.asarray(tuples, jnp.int32)
         if self.delta is not None:
             if values is None:
@@ -646,8 +665,17 @@ class PipelineMiner:
             values = jnp.asarray(values, jnp.float32)
         else:
             values, vdom = None, None
-        return self._fn(tuples, self._lo, self._hi, values=values,
-                        value_domain=vdom)
+        res = self._fn(tuples, self._lo, self._hi, values=values,
+                       value_domain=vdom)
+        if obs is not None:
+            # profiling forces the async dispatch to completion: the
+            # measured figure is the real device wall time, and the
+            # next stage's timer starts clean
+            jax.block_until_ready(res)
+            obs.metrics.histogram(
+                "pipeline_stage_ms", stage="mine_monolithic").observe(
+                    (time.perf_counter() - t0) * 1e3)
+        return res
 
     def materialise(self, result: PipelineResult, tuples=None,
                     only_kept: bool = True):
@@ -683,6 +711,8 @@ class PipelineMiner:
             raise ValueError(
                 f"chunk_budget must be >= 1, got {chunk_budget}; pass "
                 "None to ingest chunks as offered")
+        obs = _active_obs(self.obs)
+        t0 = time.perf_counter() if obs is not None else 0.0
         store = RS.RunStore(self.key_plans,
                             radix=self.resolved_sort_backend == "radix",
                             incremental=self.key_plans[0].fits,
@@ -691,6 +721,12 @@ class PipelineMiner:
                                          with_values=self.delta is not None):
             store.add(rows, vals)
         store.prepare()
+        if obs is not None:
+            # the host run sort IS Stage 1's sort on this path
+            obs.metrics.histogram(
+                "pipeline_stage_ms", stage="stage1_sort").observe(
+                    (time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
         if store.count == 0:
             raise ValueError("no data ingested")
         rows, vals = store.table()
@@ -701,10 +737,17 @@ class PipelineMiner:
             # one device sort of the assembled table — with the same
             # value-lane pruning __call__ applies, so a key rescued by
             # the rank-coded lane still takes the packed path
-            return self._fn(targs, self._lo, self._hi, values=vargs,
-                            value_domain=self.value_domain(vals))
-        return self._fn(targs, self._lo, self._hi, values=vargs,
-                        perms=jnp.asarray(perms, jnp.int32))
+            res = self._fn(targs, self._lo, self._hi, values=vargs,
+                           value_domain=self.value_domain(vals))
+        else:
+            res = self._fn(targs, self._lo, self._hi, values=vargs,
+                           perms=jnp.asarray(perms, jnp.int32))
+        if obs is not None:
+            jax.block_until_ready(res)
+            obs.metrics.histogram(
+                "pipeline_stage_ms", stage="device_mine").observe(
+                    (time.perf_counter() - t0) * 1e3)
+        return res
 
     def mine_windowed(self, chunks, values=None,
                       window_budget: Optional[int] = None,
@@ -741,6 +784,8 @@ class PipelineMiner:
             raise ValueError(
                 f"window_budget must be >= 1, got {window_budget}; "
                 "pass None for a single in-core window")
+        obs = _active_obs(self.obs)
+        t0 = time.perf_counter() if obs is not None else 0.0
         store = RS.RunStore(self.key_plans, radix=backend == "radix",
                             incremental=True,
                             stats=stats if stats is not None else {})
@@ -748,6 +793,10 @@ class PipelineMiner:
                                          with_values=self.delta is not None):
             store.add(rows, vals)
         store.prepare()
+        if obs is not None:
+            obs.metrics.histogram(
+                "pipeline_stage_ms", stage="stage1_sort").observe(
+                    (time.perf_counter() - t0) * 1e3)
         if store.count == 0:
             raise ValueError("no data ingested")
         rows, vals = store.table()
@@ -756,4 +805,4 @@ class PipelineMiner:
             hash_lo=self._lo, hash_hi=self._hi, delta=self.delta,
             theta=self.theta, minsup=self.minsup,
             window_budget=window_budget, sort_backend=backend,
-            use_pallas=self.use_pallas, probe=probe)
+            use_pallas=self.use_pallas, probe=probe, obs=obs)

@@ -58,6 +58,7 @@ results through ``np.asarray`` anyway.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -241,8 +242,8 @@ def mine_windowed(rows, values, perms, *,
                   window_budget: Optional[int] = None,
                   sort_backend: str = "radix",
                   use_pallas: Optional[bool] = None,
-                  probe: Optional[Callable[[str], None]] = None
-                  ) -> P.PipelineResult:
+                  probe: Optional[Callable[[str], None]] = None,
+                  obs=None) -> P.PipelineResult:
     """Mine ``rows`` through bounded device windows; bit-identical to
     ``pipeline.mine_tuples`` on the same table (every ``PipelineResult``
     leaf, permutations included).
@@ -257,6 +258,14 @@ def mine_windowed(rows, values, perms, *,
     ``probe`` (optional) is called with a :data:`STAGES` name after
     each device window dispatch completes — the peak-memory
     instrumentation hook of ``benchmarks/packed.py``.
+
+    ``obs`` (an *enabled* ``repro.obs.Obs``, duck-typed) turns on
+    per-stage profiling: per-window and per-stage wall-time
+    histograms, the seam-carry count (windows entered mid-segment),
+    and — when no ``probe`` is supplied — a ``core.memprobe`` peak
+    sample per stage, all folded into the hub's registry plus one
+    ``pipeline.windowed`` span.  ``obs=None`` keeps the loop at one
+    predicate test per window.
 
     Raises ``ValueError`` for degenerate budgets (< 1) and for
     configurations the windowed path cannot honour bit-exactly
@@ -296,6 +305,22 @@ def mine_windowed(rows, values, perms, *,
     wplan = RX.plan_windows(t, window_budget)   # raises on budget < 1
     budget = wplan.budget
 
+    prof = obs if (obs is not None
+                   and getattr(obs, "enabled", False)) else None
+    mp = None
+    if prof is not None:
+        if probe is None:
+            from . import memprobe as MP
+            mp = MP.MemProbe()
+            probe = mp
+        win_hist = {st: prof.metrics.histogram("pipeline_window_ms",
+                                               stage=st)
+                    for st in STAGES}
+        stage_ms = {st: 0.0 for st in STAGES}
+        seam_carries = 0
+        sp = prof.tracer.start("pipeline.windowed", rows=t, modes=n,
+                               budget=budget, windows=len(wplan.bounds))
+
     hash_lo = [jnp.asarray(h) for h in hash_lo]
     hash_hi = [jnp.asarray(h) for h in hash_hi]
 
@@ -317,10 +342,12 @@ def mine_windowed(rows, values, perms, *,
         pref_cnt = np.zeros(t + 1, np.int32)
         c_lo, c_hi, c_cnt = (jnp.uint32(0), jnp.uint32(0), jnp.int32(0))
         for w0, w1 in wplan.bounds:
+            tw = time.perf_counter() if prof is not None else 0.0
             win = _pad_tail(sk[w0:w1], budget)
             words = tuple(jnp.asarray(w) for w in
                           _split_words(win, plan.words))
-            f0 = jnp.asarray(bool(w0 == 0 or sk[w0] != sk[w0 - 1]))
+            first0 = bool(w0 == 0 or sk[w0] != sk[w0 - 1])
+            f0 = jnp.asarray(first0)
             lo, hi, cnt, c_lo, c_hi, c_cnt = scan(
                 words, f0, c_lo, c_hi, c_cnt, hash_lo[k], hash_hi[k])
             pref_lo[w0 + 1:w1 + 1] = np.asarray(lo)[:w1 - w0]
@@ -328,6 +355,12 @@ def mine_windowed(rows, values, perms, *,
             pref_cnt[w0 + 1:w1 + 1] = np.asarray(cnt)[:w1 - w0]
             if probe is not None:
                 probe("stage1_scan")
+            if prof is not None:
+                if not first0:      # entered mid-segment: a seam carry
+                    seam_carries += 1
+                ms = (time.perf_counter() - tw) * 1e3
+                stage_ms["stage1_scan"] += ms
+                win_hist["stage1_scan"].observe(ms)
         # component windows in sorted order: whole key segment (prime)
         # or the δ-value range inside it (NOAC, global self-clamping
         # search — the host twin of keys.search_words)
@@ -366,6 +399,7 @@ def mine_windowed(rows, values, perms, *,
     sig_hi = np.empty(t, np.uint32)
     volume = np.empty(t, np.float32)
     for w0, w1 in wplan.bounds:
+        tw = time.perf_counter() if prof is not None else 0.0
         wl = w1 - w0
         pad = budget - wl
         slo = np.pad(mode_sig_lo[:, w0:w1], ((0, 0), (0, pad)))
@@ -378,11 +412,16 @@ def mine_windowed(rows, values, perms, *,
         volume[w0:w1] = np.asarray(vol)[:wl]
         if probe is not None:
             probe("stage2_mix")
+        if prof is not None:
+            ms = (time.perf_counter() - tw) * 1e3
+            stage_ms["stage2_mix"] += ms
+            win_hist["stage2_mix"].observe(ms)
 
     # ---- Stage 3: per-window device signature sorts + host combine
     s3fn = _s3_fn(sort_backend, use_pallas)
     parts = []
     for w0, w1 in wplan.bounds:
+        tw = time.perf_counter() if prof is not None else 0.0
         wl = w1 - w0
         s_lo, s_hi, idx = s3fn(
             jnp.asarray(_pad_tail(sig_lo[w0:w1], budget, fill=0)),
@@ -399,6 +438,10 @@ def mine_windowed(rows, values, perms, *,
         parts.append((word, (w0 + idx[m]).astype(np.int64)))
         if probe is not None:
             probe("stage3_sort")
+        if prof is not None:
+            ms = (time.perf_counter() - tw) * 1e3
+            stage_ms["stage3_sort"] += ms
+            win_hist["stage3_sort"].observe(ms)
     s_word, order = _kway_combine(parts)
     # group stats on the combined order — the monolithic stage3_dedup
     # prefix-difference formulas on host
@@ -421,6 +464,21 @@ def mine_windowed(rows, values, perms, *,
     if minsup:
         for k in range(n):
             keep = keep & (mode_card[k] >= minsup)
+    if prof is not None:
+        m = prof.metrics
+        for st in STAGES:
+            m.histogram("pipeline_stage_ms", stage=st).observe(
+                stage_ms[st])
+            sp.set(f"{st}_ms", stage_ms[st])
+        m.counter("pipeline_seam_carries_total").inc(seam_carries)
+        m.gauge("pipeline_windows").set(len(wplan.bounds))
+        m.gauge("pipeline_window_budget").set(budget)
+        if mp is not None:
+            for st, peak in mp.report()["stages"].items():
+                m.gauge("pipeline_window_peak_bytes", stage=st).set(peak)
+            sp.set("peak_bytes", mp.peak_bytes)
+        sp.set("seam_carries", seam_carries)
+        sp.finish()
     return P.PipelineResult(
         sig_lo=sig_lo, sig_hi=sig_hi, is_unique=is_unique,
         gen_count=gen_count, volume=volume, density=density, keep=keep,

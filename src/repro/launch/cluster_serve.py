@@ -49,6 +49,16 @@ def _load_fault_plan(spec: str):
     return FaultPlan.from_json(spec)
 
 
+def _make_obs(enabled: bool, slow_query_ms: float, service: str):
+    """One per-process observability hub (``repro.obs.Obs``) or None.
+    Each process of a topology builds its own — metrics and spans are
+    process-local; the trace id stitches them back together."""
+    if not enabled:
+        return None
+    from ..obs import Obs
+    return Obs.create(service=service, slow_query_ms=slow_query_ms)
+
+
 def _install_sigterm(server, flag: dict) -> None:
     """Graceful SIGTERM: mark the shutdown as supervisor-driven (shm
     segments are *kept* so a successor can adopt the epoch watermark)
@@ -75,6 +85,7 @@ def _serve(args) -> int:
                            w_recency=args.w_recency)
     plan = _load_fault_plan(args.fault_plan)
     inj = None if plan is None else plan.for_component("writer", 0)
+    obs = _make_obs(args.metrics, args.slow_query_ms, "writer")
     svc = TriclusterService(
         ctx.sizes, backend=args.backend, theta=args.theta,
         delta=args.delta, rho_min=args.rho_min, minsup=args.minsup,
@@ -83,7 +94,7 @@ def _serve(args) -> int:
         delta_index=not args.no_delta_index, seed=args.seed or 0x5EED,
         recover_dir=args.recover_dir or None,
         checkpoint_every=args.checkpoint_every,
-        scrub_interval=args.scrub_interval, fault=inj)
+        scrub_interval=args.scrub_interval, fault=inj, obs=obs)
     n = ctx.tuples.shape[0]
     if not svc.recovered:                    # a recovered store already
         step = -(-n // max(1, args.preload_chunks))  # holds the data
@@ -98,7 +109,7 @@ def _serve(args) -> int:
                          health_max_staleness=(args.health_max_staleness
                                                or None),
                          max_write_backlog=args.max_write_backlog,
-                         fault=inj)
+                         fault=inj, obs=obs)
     flag = {"unlink": True}
     _install_sigterm(server, flag)
     if args.port_file:
@@ -182,6 +193,9 @@ def _child_writer(cfg: dict) -> None:
     from .tricluster import load_dataset
 
     inj = _child_injector(cfg, "writer")
+    obs = _make_obs(cfg.get("metrics", False),
+                    cfg.get("slow_query_ms", 100.0),
+                    f"shard-{cfg['shard']}")
     ctx = load_dataset(cfg["dataset"], cfg["n_tuples"], cfg["seed"])
     publisher = None
     if cfg["shm_prefix"]:
@@ -202,7 +216,7 @@ def _child_writer(cfg: dict) -> None:
         event_name=f"shard-{cfg['shard']}",
         version_base=(0 if publisher is None
                       else publisher.resumed_version),
-        fault=inj)
+        fault=inj, obs=obs)
     if svc.recovered:
         print(f"[shard-{cfg['shard']}] recovered {svc.recovered}",
               flush=True)
@@ -230,7 +244,7 @@ def _child_writer(cfg: dict) -> None:
             svc, host=cfg["host"], port=p, verbose=cfg["verbose"],
             health_max_staleness=cfg.get("health_max_staleness"),
             max_write_backlog=cfg.get("max_write_backlog", 0),
-            fault=inj),
+            fault=inj, obs=obs),
         _stable_port(cfg))
     flag = {"unlink": True}
     _install_sigterm(server, flag)
@@ -265,6 +279,9 @@ def _child_replica(cfg: dict) -> None:
     from ..serve.shm import ReplicaService
 
     inj = _child_injector(cfg, "replica")
+    obs = _make_obs(cfg.get("metrics", False),
+                    cfg.get("slow_query_ms", 100.0),
+                    f"replica-{cfg['shard']}.{cfg['replica']}")
     on_dead = None
     if cfg.get("flag_dir"):
         from ..serve.supervise import write_restart_flag
@@ -282,7 +299,7 @@ def _child_replica(cfg: dict) -> None:
         lambda p: make_server(
             svc, host=cfg["host"], port=p, verbose=cfg["verbose"],
             health_max_staleness=cfg.get("health_max_staleness"),
-            fault=inj),
+            fault=inj, obs=obs),
         _stable_port(cfg))
     flag = {"unlink": True}
     _install_sigterm(server, flag)
@@ -333,6 +350,7 @@ def _serve_topology(args) -> int:
         "max_write_backlog": args.max_write_backlog,
         "scrub_interval": args.scrub_interval,
         "flag_dir": "" if args.no_supervise else tmp,
+        "metrics": args.metrics, "slow_query_ms": args.slow_query_ms,
     }
     sup = Supervisor(flag_dir=tmp,
                      restart_backoff=args.restart_backoff,
@@ -370,7 +388,25 @@ def _serve_topology(args) -> int:
             shards.append(Shard(
                 f"http://{args.host}:{wp}",
                 [f"http://{args.host}:{rp}" for rp in rps]))
-        router = RouterService(shards, timeout=args.router_timeout)
+        router = RouterService(
+            shards, timeout=args.router_timeout,
+            obs=_make_obs(args.metrics, args.slow_query_ms, "router"))
+        if router.obs.enabled:
+            # supervisor counters fold into the same registry the
+            # router scrapes — restarts and crash-loop state are part
+            # of the plane's one /metrics source of truth (DESIGN.md
+            # §11); scrape-time collector, so /stats keeps its shape
+            def _sup_collect():
+                yield ("supervisor_events_dropped", {},
+                       sup.events_dropped)
+                for name, ch in sup.stats()["children"].items():
+                    lbl = {"child": name}
+                    yield "supervisor_child_restarts", lbl, \
+                        ch["restarts"]
+                    yield "supervisor_child_alive", lbl, ch["alive"]
+                    yield ("supervisor_child_failed", lbl,
+                           ch["state"] == "failed")
+            router.obs.metrics.register_collector(_sup_collect)
         server = make_router_server(
             router, host=args.host, port=args.port,
             allow_shutdown=not args.no_shutdown,
@@ -573,6 +609,15 @@ def main(argv=None):
     ap.add_argument("--router-timeout", type=float, default=15.0,
                     help="router per-request deadline budget (s) — "
                          "shard retries + degradation live under this")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the observability plane: /metrics "
+                         "(Prometheus text), /debug/trace (cross-"
+                         "process spans) and /debug/slow on every "
+                         "endpoint of the plane")
+    ap.add_argument("--slow-query-ms", type=float, default=100.0,
+                    help="slow-query log threshold (ms); requests at "
+                         "or above it are kept in /debug/slow "
+                         "(needs --metrics; negative disables the log)")
     ap.add_argument("--smoke-client", action="store_true",
                     help="run the CI smoke sequence against a running "
                          "server and exit (needs --port or --port-file)")

@@ -66,7 +66,9 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib import error as _uerror
 from urllib import request as _urequest
+from urllib.parse import parse_qs
 
+from ..obs import NULL_OBS, TRACE_HEADER, parse_trace_header
 from .faults import DropRequest
 from .service import QueryResult, TriclusterService
 
@@ -139,6 +141,54 @@ def _query_doc(res: QueryResult, batched: bool,
             "hits": hits}
 
 
+#: GET routes served by the observability plane (DESIGN.md §11) — the
+#: same three on the service endpoint and the router
+OBS_PATHS = ("/metrics", "/debug/trace", "/debug/slow")
+
+
+def handle_obs_get(handler, obs) -> bool:
+    """Serve the observability GET routes on any JSON handler that has
+    a ``_reply(doc, status)`` method.  Returns True when ``handler.path``
+    was one of :data:`OBS_PATHS` (whether it answered data or the
+    disabled-404); False means "not mine, keep dispatching".
+
+    * ``/metrics`` — Prometheus text exposition of the process registry
+      (native instruments + collector-folded stats dicts).
+    * ``/debug/trace[?trace_id=..&limit=N]`` — the span ring as JSON.
+    * ``/debug/slow`` — the slow-query ring, slowest first.
+    """
+    path, _, qs = handler.path.partition("?")
+    if path not in OBS_PATHS:
+        return False
+    if obs is None or not obs.enabled:
+        handler._reply({"error": "observability disabled — launch "
+                        "with --metrics"}, 404)
+        return True
+    if path == "/metrics":
+        body = obs.metrics.expose().encode()
+        handler.send_response(200)
+        handler.send_header("Content-Type",
+                            "text/plain; version=0.0.4; charset=utf-8")
+        handler.send_header("Content-Length", str(len(body)))
+        handler.end_headers()
+        handler.wfile.write(body)
+    elif path == "/debug/trace":
+        params = parse_qs(qs)
+        tid = (params.get("trace_id") or [None])[0]
+        try:
+            limit = int((params.get("limit") or [0])[0])
+        except ValueError:
+            limit = 0
+        handler._reply({"service": obs.service,
+                        "dropped": obs.tracer.dropped,
+                        "spans": obs.tracer.spans(tid, limit)})
+    else:
+        handler._reply({"service": obs.service,
+                        "stats": obs.slow.stats(),
+                        "slowest": obs.slow.entries()})
+    return True
+
+
 class _Handler(BaseHTTPRequestHandler):
     # quiet by default: the load generator would otherwise spam stderr
     def log_message(self, fmt, *args):
@@ -147,6 +197,7 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _reply(self, doc: dict, status: int = 200,
                headers: Optional[dict] = None) -> None:
+        self._status = status            # for the request instruments
         body = json.dumps(doc).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
@@ -185,14 +236,60 @@ class _Handler(BaseHTTPRequestHandler):
                 self._reply(doc, 200 if doc["healthy"] else 503)
             elif self.path == "/stats":
                 self._reply(svc.stats())
+            elif handle_obs_get(self, self.server.obs):
+                pass
             else:
                 self._reply({"error": f"unknown path {self.path}"}, 404)
 
     def do_POST(self):
+        t_recv = time.perf_counter()
         if not self._enter():
             return
         with self.server.track_request():
-            self._post()
+            obs = self.server.obs
+            if not obs.enabled:
+                return self._post()
+            # adopt the caller's trace (router fan-out) or mint a fresh
+            # one — this span is the backend's "handled it" record
+            tid, pid = parse_trace_header(self.headers.get(TRACE_HEADER))
+            role = ("replica" if getattr(self._service(), "read_only",
+                                         False) else "writer")
+            sp = obs.tracer.start(f"serve{self.path}", trace_id=tid,
+                                  parent_id=pid, role=role)
+            self._cur_span = sp
+            self._status = 200
+            t0 = time.perf_counter()
+            try:
+                self._post()
+            finally:
+                now = time.perf_counter()
+                handler_ms = (now - t0) * 1e3
+                total_ms = (now - t_recv) * 1e3
+                status = self._status
+                sp.set("status", status)
+                if status >= 500:
+                    sp.error(f"HTTP {status}")
+                sp.finish()
+                ep = (self.path if self.path in
+                      ("/query", "/upsert", "/delete", "/refresh",
+                       "/shutdown") else "other")
+                pair = self.server._req_instruments.get((ep, status))
+                if pair is None:
+                    pair = (obs.metrics.histogram("server_request_ms",
+                                                  endpoint=ep, role=role),
+                            obs.metrics.counter("server_requests_total",
+                                                endpoint=ep,
+                                                code=str(status),
+                                                role=role))
+                    self.server._req_instruments[(ep, status)] = pair
+                pair[0].observe(handler_ms)
+                pair[1].inc()
+                if ep == "/query":
+                    # wait = receive-to-handler (fault delays, body
+                    # read); handler = the dispatch itself
+                    obs.slow.record(ep, total_ms, handler_ms=handler_ms,
+                                    wait_ms=total_ms - handler_ms,
+                                    trace_id=sp.trace_id)
 
     def _post(self):
         svc = self._service()
@@ -258,6 +355,9 @@ class _Handler(BaseHTTPRequestHandler):
         # handler wall time: the client subtracts this from its own
         # round-trip to attribute tail latency (queue vs handler)
         out["server_ms"] = (time.perf_counter() - t0) * 1e3
+        sp = getattr(self, "_cur_span", None)
+        if sp is not None and sp.trace_id:
+            out["trace_id"] = sp.trace_id
         return out
 
     def _mutate(self, svc: TriclusterService, doc: dict,
@@ -300,7 +400,7 @@ class ClusterServeServer(ThreadingHTTPServer):
     def __init__(self, service: TriclusterService, addr=("127.0.0.1", 0),
                  allow_shutdown: bool = True, verbose: bool = False,
                  health_max_staleness: Optional[float] = None,
-                 fault=None, max_write_backlog: int = 0):
+                 fault=None, max_write_backlog: int = 0, obs=None):
         super().__init__(addr, _Handler)
         self.service = service
         self.allow_shutdown = allow_shutdown
@@ -313,6 +413,33 @@ class ClusterServeServer(ThreadingHTTPServer):
         self.throttled_writes = 0
         self._inflight = 0
         self._idle = threading.Condition()
+        #: observability hub (DESIGN.md §11) — request histograms,
+        #: trace spans and the slow-query ring; NULL_OBS when absent
+        self.obs = obs if obs is not None else NULL_OBS
+        #: hot-path instrument handles keyed ``(endpoint, status)`` —
+        #: the registry's label-key lookup is too slow to re-enter per
+        #: request (benign race: the registry memoises, so duplicate
+        #: builders converge on the same instruments)
+        self._req_instruments: dict = {}
+        if self.obs.enabled:
+            self.obs.metrics.register_collector(self._collect_metrics)
+
+    def _collect_metrics(self):
+        """Scrape-time rows: server-local counters, plus the service's
+        stats dict when the service does not carry its own obs hub
+        (shared-memory replicas) — so /stats and /metrics stay two
+        views of the same numbers."""
+        yield "server_throttled_writes", {}, self.throttled_writes
+        yield "server_inflight", {}, self.inflight
+        svc = self.service
+        if getattr(svc, "obs", None) is not self.obs:
+            role = ("replica" if getattr(svc, "read_only", False)
+                    else "writer")
+            try:
+                for k, val in svc.stats().items():
+                    yield f"service_{k}", {"role": role}, val
+            except Exception:    # noqa: BLE001 — scrape must survive
+                return           # a service mid-teardown
 
     @property
     def port(self) -> int:
@@ -350,14 +477,16 @@ def make_server(service: TriclusterService, host: str = "127.0.0.1",
                 verbose: bool = False,
                 health_max_staleness: Optional[float] = None,
                 fault=None,
-                max_write_backlog: int = 0) -> ClusterServeServer:
+                max_write_backlog: int = 0,
+                obs=None) -> ClusterServeServer:
     """Bind (port 0 = ephemeral; read ``server.port``) without serving;
     call ``serve_forever()`` — typically on a thread — to go live."""
     return ClusterServeServer(service, (host, port),
                               allow_shutdown=allow_shutdown, verbose=verbose,
                               health_max_staleness=health_max_staleness,
                               fault=fault,
-                              max_write_backlog=max_write_backlog)
+                              max_write_backlog=max_write_backlog,
+                              obs=obs)
 
 
 def _version_token(v):

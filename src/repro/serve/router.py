@@ -63,6 +63,10 @@ import http.client
 
 import numpy as np
 
+from ..obs import NULL_OBS, TRACE_HEADER, parse_trace_header
+from ..obs.metrics import Histogram
+from .protocol import handle_obs_get
+
 
 class GatewayTimeout(TimeoutError):
     """HTTP 504 from a backend: the backend is *alive* — it answered —
@@ -180,9 +184,13 @@ class PooledClient:
         self._local.conn = None
 
     def call(self, path: str, doc: Optional[dict] = None,
-             timeout: Optional[float] = None) -> dict:
+             timeout: Optional[float] = None,
+             headers: Optional[dict] = None) -> dict:
         body = None if doc is None else json.dumps(doc).encode()
         method = "GET" if doc is None else "POST"
+        hdrs = {"Content-Type": "application/json"}
+        if headers:
+            hdrs.update(headers)
         t = self.timeout if timeout is None else max(0.01, float(timeout))
         for attempt in (0, 1):
             try:
@@ -191,8 +199,7 @@ class PooledClient:
                     c.timeout = t
                     if c.sock is not None:
                         c.sock.settimeout(t)
-                c.request(method, path, body=body,
-                          headers={"Content-Type": "application/json"})
+                c.request(method, path, body=body, headers=hdrs)
                 r = c.getresponse()
                 data = r.read()
                 break
@@ -271,11 +278,24 @@ class RouterService:
     def __init__(self, shards: Sequence[Shard], sizes=None,
                  timeout: float = 30.0, retry_base: float = 0.05,
                  retry_cap: float = 0.5, probe_interval: float = 0.25,
-                 probe_timeout: float = 1.0):
+                 probe_timeout: float = 1.0, obs=None):
         if not shards:
             raise ValueError("router needs at least one shard")
         self.shards = list(shards)
         self.timeout = timeout
+        self.obs = obs if obs is not None else NULL_OBS
+        # per-endpoint handler latency lives in plain always-on
+        # histograms (not the registry): resilience_stats() must stay
+        # auditable even when the plane runs without --metrics
+        self._endpoint_hist: dict = {}
+        self._ep_lock = threading.Lock()
+        #: hot-path registry-instrument handles keyed ``(endpoint,
+        #: status)`` — the per-request label lookup is too slow to
+        #: re-enter in the handler (benign race: the registry memoises,
+        #: so duplicate builders converge on the same instruments)
+        self._req_instruments: dict = {}
+        if self.obs.enabled:
+            self.obs.metrics.register_collector(self._collect_metrics)
         #: capped exponential backoff between per-shard retries, all
         #: under one per-request deadline budget (``timeout``)
         self.retry_base = float(retry_base)
@@ -315,6 +335,38 @@ class RouterService:
                     except Exception:        # noqa: BLE001 — stays open
                         c.breaker.fail()
 
+    # -- observability -------------------------------------------------------
+
+    def observe_endpoint(self, endpoint: str, ms: float) -> None:
+        """Record one handler latency for ``endpoint`` — always on, so
+        the per-endpoint latency the handler measures actually reaches
+        :meth:`resilience_stats` (it used to be computed and thrown
+        away)."""
+        h = self._endpoint_hist.get(endpoint)
+        if h is None:
+            with self._ep_lock:
+                h = self._endpoint_hist.setdefault(endpoint, Histogram())
+        h.observe(ms)
+
+    def _collect_metrics(self):
+        """Scrape-time fold of the router's stats dict and breaker
+        states into the registry (one source of truth: `/stats`,
+        `/metrics` render the same counters)."""
+        for k, v in self._stats.items():
+            yield f"router_{k}", {}, v
+        for s, sh in enumerate(self.shards):
+            for c in sh.endpoints():
+                lbl = {"shard": s, "endpoint": c.base_url}
+                yield "router_breaker_open", lbl, int(c.breaker.is_open)
+                yield "router_breaker_trips", lbl, c.breaker.trips
+        with self._ep_lock:
+            hists = dict(self._endpoint_hist)
+        for ep, h in hists.items():
+            lbl = {"endpoint": ep}
+            yield "router_endpoint_latency_ms_count", lbl, h.count
+            yield "router_endpoint_latency_ms_p50", lbl, h.quantile(0.5)
+            yield "router_endpoint_latency_ms_p99", lbl, h.quantile(0.99)
+
     # -- partitioning --------------------------------------------------------
 
     @property
@@ -349,16 +401,23 @@ class RouterService:
                 for c, path, doc in calls]
         return [f.result(timeout=self.timeout + 5) for f in futs]
 
-    def _retrying(self, pick, path: str, doc, budget: float) -> dict:
+    def _retrying(self, pick, path: str, doc, budget: float,
+                  trace=(None, None), shard=None) -> dict:
         """One logical backend call under a deadline budget: transport
         failures retry with capped exponential backoff against whatever
         endpoint ``pick()`` currently favours (breaker-aware, so
         retries migrate off an ejected replica).  A :class:`GatewayTimeout`
         (HTTP 504 — live backend, unmet freshness token) and HTTP-level
-        errors propagate immediately: the backend answered."""
+        errors propagate immediately: the backend answered.
+
+        When tracing is on, every *attempt* gets its own span (child of
+        ``trace``) whose id rides the :data:`TRACE_HEADER` to the
+        backend — the failed attempts are part of the story."""
         deadline = time.monotonic() + budget
         delay = self.retry_base
         last: Optional[BaseException] = None
+        tracer = self.obs.tracer if self.obs.enabled else None
+        attempt = 0
         while True:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
@@ -366,23 +425,43 @@ class RouterService:
                        else TimeoutError(f"{path}: retry budget "
                                          f"({budget:.1f}s) exhausted"))
             c = pick()
+            sp = headers = None
+            if tracer is not None:
+                sp = tracer.start("router.attempt", trace_id=trace[0],
+                                  parent_id=trace[1], path=path,
+                                  attempt=attempt, endpoint=c.base_url)
+                if shard is not None:
+                    sp.set("shard", shard)
+                headers = {TRACE_HEADER: sp.header()}
+            attempt += 1
             try:
                 # per-attempt timeout: the endpoint's own bound, capped
                 # by the remaining budget — one hung backend must not
                 # swallow the whole deadline in a single attempt
-                out = c.call(path, doc, timeout=min(remaining, c.timeout))
+                out = c.call(path, doc, timeout=min(remaining, c.timeout),
+                             headers=headers)
                 c.breaker.ok()
+                if sp is not None:
+                    sp.set("outcome", "ok").finish()
                 return out
-            except GatewayTimeout:
+            except GatewayTimeout as e:
                 c.breaker.ok()               # it answered — alive
+                if sp is not None:
+                    sp.set("outcome", "gateway_timeout")
+                    sp.error(str(e)).finish()
                 raise
-            except RuntimeError:
+            except RuntimeError as e:
                 c.breaker.ok()               # HTTP error from a live
-                raise                        # backend, not a transport
+                if sp is not None:           # backend, not a transport
+                    sp.set("outcome", "http_error")
+                    sp.error(str(e)).finish()
+                raise
             except (TimeoutError, ConnectionError,
                     http.client.HTTPException, OSError) as e:
                 c.breaker.fail()
                 last = e
+                if sp is not None:
+                    sp.set("outcome", "retry").error(repr(e)).finish()
             if time.monotonic() + delay >= deadline:
                 raise last
             self._stats["retries"] += 1
@@ -406,7 +485,7 @@ class RouterService:
     def query(self, entity=None, mode=None, signature=None, k: int = 10,
               at_least_version=None, timeout=None,
               include_components: bool = False,
-              require_all: bool = False) -> dict:
+              require_all: bool = False, trace=(None, None)) -> dict:
         doc = {"k": int(k), "include_components": bool(include_components)}
         if entity is not None:
             doc["entity"] = int(entity)
@@ -414,7 +493,8 @@ class RouterService:
             doc["mode"] = int(mode)
         if signature is not None:
             doc["signature"] = [int(signature[0]), int(signature[1])]
-        res = self._fan_query(doc, at_least_version, timeout, require_all)
+        res = self._fan_query(doc, at_least_version, timeout, require_all,
+                              trace)
         hits = _merge_hits([r["hits"] for r in res if r is not None],
                            int(k))
         return self._doc(res, hits)
@@ -422,19 +502,49 @@ class RouterService:
     def query_batch(self, entities, mode=None, k: int = 10,
                     at_least_version=None, timeout=None,
                     include_components: bool = False,
-                    require_all: bool = False) -> dict:
+                    require_all: bool = False,
+                    trace=(None, None)) -> dict:
         doc = {"entities": [int(e) for e in entities], "k": int(k),
                "include_components": bool(include_components)}
         if mode is not None:
             doc["mode"] = int(mode)
-        res = self._fan_query(doc, at_least_version, timeout, require_all)
+        res = self._fan_query(doc, at_least_version, timeout, require_all,
+                              trace)
         hits = [_merge_hits([r["hits"][i] for r in res if r is not None],
                             int(k))
                 for i in range(len(doc["entities"]))]
         return self._doc(res, hits)
 
+    def _shard_query(self, s: int, sh: Shard, doc: dict, budget: float,
+                     trace=(None, None)) -> dict:
+        """One shard's slice of a fan-out, wrapped in a ``router.shard``
+        span that records which endpoints the circuit breakers were
+        holding ejected when the shard was dispatched."""
+        if not self.obs.enabled:
+            return self._retrying(sh.reader, "/query", doc, budget)
+        # is_open (not allow()) — allow() consumes the half-open probe
+        # slot, and observability must never perturb breaker behaviour
+        skipped = [c.base_url for c in sh.endpoints() if c.breaker.is_open]
+        sp = self.obs.tracer.start("router.shard", trace_id=trace[0],
+                                   parent_id=trace[1], shard=s)
+        if skipped:
+            sp.set("breakers_open", skipped)
+            self.obs.metrics.counter("router_breaker_skips",
+                                     shard=s).inc(len(skipped))
+        try:
+            out = self._retrying(sh.reader, "/query", doc, budget,
+                                 trace=(sp.trace_id, sp.span_id), shard=s)
+            sp.set("version", out.get("version"))
+            return out
+        except BaseException as e:
+            sp.error(repr(e))
+            raise
+        finally:
+            sp.finish()
+
     def _fan_query(self, doc: dict, at_least_version, timeout,
-                   require_all: bool = False) -> list:
+                   require_all: bool = False,
+                   trace=(None, None)) -> list:
         """Fan a /query to every shard with per-shard retry under the
         deadline budget.  Returns one response per shard, ``None`` for
         a shard whose retry budget was exhausted — **degraded partial
@@ -445,22 +555,29 @@ class RouterService:
         tokens = self._tokens(at_least_version)
         budget = float(timeout) if timeout is not None else self.timeout
         futs = []
-        for sh, tok in zip(self.shards, tokens):
+        for s, (sh, tok) in enumerate(zip(self.shards, tokens)):
             d = dict(doc)
             if tok is not None:
                 d["at_least_version"] = tok
                 d["timeout"] = timeout
             futs.append(self._pool.submit(
-                self._retrying, sh.reader, "/query", d, budget))
+                self._shard_query, s, sh, d, budget, trace))
         res: List[Optional[dict]] = []
         first_err: Optional[BaseException] = None
-        for f in futs:
+        for s, f in enumerate(futs):
             try:
                 res.append(f.result(timeout=budget + 5))
             except GatewayTimeout:
                 raise
             except Exception as e:           # noqa: BLE001 — transport
                 self._stats["shard_failures"] += 1
+                if self.obs.enabled:
+                    # the drop leaves a mark in the trace: a degraded
+                    # answer is reconstructable after the fact
+                    drop = self.obs.tracer.start(
+                        "router.degraded_drop", trace_id=trace[0],
+                        parent_id=trace[1], shard=s)
+                    drop.error(repr(e)).finish()
                 if first_err is None:
                     first_err = e
                 res.append(None)
@@ -491,7 +608,8 @@ class RouterService:
 
     # -- writes --------------------------------------------------------------
 
-    def _scatter(self, op: str, rows, values=None) -> dict:
+    def _scatter(self, op: str, rows, values=None,
+                 trace=(None, None)) -> dict:
         rows = [list(map(int, r)) for r in rows]
         if not rows:
             raise ValueError(f"/{op} needs non-empty 'rows'")
@@ -511,8 +629,9 @@ class RouterService:
         # deadline budget, so a writer mid-restart absorbs the write
         # once its supervisor brings it back
         futs = [self._pool.submit(self._retrying,
-                                  (lambda c=c: c), path, doc, self.timeout)
-                for c, path, doc in calls]
+                                  (lambda c=c: c), path, doc, self.timeout,
+                                  trace, s)
+                for (c, path, doc), s in zip(calls, touched)]
         res = [f.result(timeout=self.timeout + 5) for f in futs]
         svs = [0] * len(self.shards)
         dirty = [0] * len(self.shards)
@@ -522,11 +641,11 @@ class RouterService:
         return {"shards": touched, "stream_versions": svs,
                 "dirty": sum(dirty)}
 
-    def upsert(self, rows, values=None) -> dict:
-        return self._scatter("upsert", rows, values)
+    def upsert(self, rows, values=None, trace=(None, None)) -> dict:
+        return self._scatter("upsert", rows, values, trace)
 
-    def delete(self, rows) -> dict:
-        return self._scatter("delete", rows)
+    def delete(self, rows, trace=(None, None)) -> dict:
+        return self._scatter("delete", rows, trace=trace)
 
     def refresh(self) -> dict:
         """Synchronous re-mine + swap on every shard; the returned
@@ -592,13 +711,21 @@ class RouterService:
 
     def resilience_stats(self) -> dict:
         """Router-local failure-handling counters + per-endpoint
-        breaker states (no backend round-trips)."""
+        breaker states (no backend round-trips), plus the per-endpoint
+        handler-latency digests that make breaker decisions auditable
+        after the fact."""
         out = dict(self._stats)
         out["breakers"] = [
             {"shard": s, "endpoint": c.base_url,
              "state": c.breaker.state(), "trips": c.breaker.trips}
             for s, sh in enumerate(self.shards)
             for c in sh.endpoints()]
+        with self._ep_lock:
+            hists = dict(self._endpoint_hist)
+        out["endpoint_latency_ms"] = {
+            ep: {"count": h.count, "p50": h.quantile(0.5),
+                 "p99": h.quantile(0.99)}
+            for ep, h in sorted(hists.items())}
         return out
 
     def stats(self) -> dict:
@@ -633,6 +760,7 @@ class _RouterHandler(BaseHTTPRequestHandler):
             super().log_message(fmt, *args)
 
     def _reply(self, doc: dict, status: int = 200) -> None:
+        self._status = status            # for the request instruments
         body = json.dumps(doc).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
@@ -647,6 +775,8 @@ class _RouterHandler(BaseHTTPRequestHandler):
                 self._reply(router.health())
             elif self.path == "/stats":
                 self._reply(router.stats())
+            elif handle_obs_get(self, router.obs):
+                pass
             else:
                 self._reply({"error": f"unknown path {self.path}"}, 404)
         except TimeoutError as e:
@@ -655,14 +785,28 @@ class _RouterHandler(BaseHTTPRequestHandler):
             self._reply({"error": f"backend failure: {e}"}, 502)
 
     def do_POST(self):
+        t_recv = time.perf_counter()
         router: RouterService = self.server.router
+        obs = router.obs
         try:
             n = int(self.headers.get("Content-Length") or 0)
             doc = json.loads(self.rfile.read(n) or b"{}")
         except (ValueError, json.JSONDecodeError) as e:
             return self._reply({"error": f"bad JSON body: {e}"}, 400)
+        ep = (self.path if self.path in
+              ("/query", "/upsert", "/delete", "/refresh", "/shutdown")
+              else "other")
+        sp = None
+        trace = (None, None)
+        if obs.enabled:
+            tid, pid = parse_trace_header(self.headers.get(TRACE_HEADER))
+            sp = obs.tracer.start(f"router{self.path}", trace_id=tid,
+                                  parent_id=pid, role="router")
+            trace = (sp.trace_id, sp.span_id)
+        self._status = 200
+        coverage = None
+        t0 = time.perf_counter()
         try:
-            t0 = time.perf_counter()
             if self.path == "/query":
                 if "entities" in doc:
                     out = router.query_batch(
@@ -672,7 +816,8 @@ class _RouterHandler(BaseHTTPRequestHandler):
                         timeout=doc.get("timeout"),
                         include_components=bool(
                             doc.get("include_components", False)),
-                        require_all=bool(doc.get("require_all", False)))
+                        require_all=bool(doc.get("require_all", False)),
+                        trace=trace)
                 else:
                     sig = doc.get("signature")
                     out = router.query(
@@ -684,14 +829,19 @@ class _RouterHandler(BaseHTTPRequestHandler):
                         timeout=doc.get("timeout"),
                         include_components=bool(
                             doc.get("include_components", False)),
-                        require_all=bool(doc.get("require_all", False)))
+                        require_all=bool(doc.get("require_all", False)),
+                        trace=trace)
                 out["server_ms"] = (time.perf_counter() - t0) * 1e3
+                coverage = out.get("coverage")
+                if sp is not None and sp.trace_id:
+                    out["trace_id"] = sp.trace_id
                 self._reply(out)
             elif self.path == "/upsert":
                 self._reply(router.upsert(doc.get("rows") or [],
-                                          doc.get("values")))
+                                          doc.get("values"), trace=trace))
             elif self.path == "/delete":
-                self._reply(router.delete(doc.get("rows") or []))
+                self._reply(router.delete(doc.get("rows") or [],
+                                          trace=trace))
             elif self.path == "/refresh":
                 self._reply(router.refresh())
             elif self.path == "/shutdown":
@@ -712,6 +862,38 @@ class _RouterHandler(BaseHTTPRequestHandler):
             self._reply({"error": str(e)}, 400)
         except (RuntimeError, OSError) as e:
             self._reply({"error": f"backend failure: {e}"}, 502)
+        finally:
+            now = time.perf_counter()
+            handler_ms = (now - t0) * 1e3
+            total_ms = (now - t_recv) * 1e3
+            status = getattr(self, "_status", 200)
+            # the fix for the dropped server_ms: handler latency now
+            # reaches resilience_stats() through the always-on digests
+            router.observe_endpoint(ep, handler_ms)
+            if sp is not None:
+                sp.set("status", status)
+                if coverage is not None:
+                    sp.set("coverage", coverage)
+                if status >= 500:
+                    sp.error(f"HTTP {status}")
+                sp.finish()
+            if obs.enabled:
+                pair = router._req_instruments.get((ep, status))
+                if pair is None:
+                    pair = (obs.metrics.histogram("router_request_ms",
+                                                  endpoint=ep),
+                            obs.metrics.counter("router_requests_total",
+                                                endpoint=ep,
+                                                code=str(status)))
+                    router._req_instruments[(ep, status)] = pair
+                pair[0].observe(handler_ms)
+                pair[1].inc()
+                if ep == "/query":
+                    obs.slow.record(
+                        ep, total_ms, handler_ms=handler_ms,
+                        wait_ms=total_ms - handler_ms,
+                        trace_id=sp.trace_id if sp is not None else "",
+                        coverage=coverage)
 
 
 class RouterServer(ThreadingHTTPServer):

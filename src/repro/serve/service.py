@@ -51,6 +51,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import runs as RS
+from ..obs import NULL_OBS
 from . import ranking as R
 from .clusters import ClusterIndex, ClusterView, pack_sig_words
 
@@ -131,6 +132,7 @@ class TriclusterService:
                  scrub_interval: float = 0.5,
                  event_dir: Optional[str] = None,
                  event_name: str = "writer",
+                 obs=None,
                  mesh=None, miner=None, **miner_kw):
         self.sizes = tuple(int(s) for s in sizes)
         self.refresh_interval = float(refresh_interval)
@@ -235,6 +237,17 @@ class TriclusterService:
                        "scrubs": 0, "scrub_errors": 0,
                        "last_scrub_ms": 0.0, "last_scrub_version": 0,
                        "scrub_violations": []}
+        #: observability hub (DESIGN.md §11): swap-path timings land in
+        #: its histograms, and ``_stats`` is folded into /metrics via a
+        #: scrape-time collector — the dict stays the single source,
+        #: the registry renders it
+        self.obs = obs if obs is not None else NULL_OBS
+        if self.obs.enabled:
+            self.obs.metrics.register_collector(self._collect_metrics)
+            # per-stage pipeline profiling rides the same hub (the
+            # miner's hook is duck-typed; see core.pipeline)
+            if hasattr(self.miner, "obs"):
+                self.miner.obs = self.obs
         if self.recover_dir:
             self._recover()
 
@@ -589,6 +602,8 @@ class TriclusterService:
         self._stats["scrubs"] += 1
         self._stats["last_scrub_ms"] = ms
         self._stats["last_scrub_version"] = snap.version
+        if self.obs.enabled:
+            self.obs.metrics.histogram("service_scrub_ms").observe(ms)
         if v:
             self._stats["scrub_errors"] += len(v)
             self._stats["scrub_violations"] = v   # rebind, never mutate
@@ -727,6 +742,15 @@ class TriclusterService:
             out["recovered"] = dict(self._recovered)
         return out
 
+    def _collect_metrics(self):
+        """Scrape-time collector: every numeric ``stats()`` entry as a
+        ``service_<key>{role=...}`` gauge — /stats and /metrics render
+        the same counters from the same dict."""
+        role = "replica" if getattr(self, "read_only", False) \
+            else "writer"
+        for k, val in self.stats().items():
+            yield f"service_{k}", {"role": role}, val
+
     # -- mining / publication ------------------------------------------------
 
     def refresh(self) -> Snapshot:
@@ -741,6 +765,8 @@ class TriclusterService:
             if not force and snap is not None and self._dirty == 0:
                 return snap
             t0 = time.perf_counter()
+            # no-op span when tracing is off; covers the whole swap
+            sp = self.obs.tracer.start("service.swap")
             with self._wlock:
                 # the store mutates under snapshot() (compaction/merge):
                 # writers hold off while we mine, readers don't care
@@ -762,12 +788,14 @@ class TriclusterService:
                 index = ClusterIndex.delta_from_result(
                     prev.index, result, min_density=self.min_density)
                 self._stats["delta_builds"] += 1
+                build_kind = "delta"
             else:
                 index = ClusterIndex.from_result(
                     result, min_density=self.min_density)
                 self._stats["full_builds"] += 1
-            self._stats["last_index_build_ms"] = \
-                (time.perf_counter() - t1) * 1e3
+                build_kind = "full"
+            build_ms = (time.perf_counter() - t1) * 1e3
+            self._stats["last_index_build_ms"] = build_ms
             version = (self.version_base if self._snap is None
                        else self._snap.version) + 1
             fs = self._first_seen
@@ -800,7 +828,9 @@ class TriclusterService:
             # that then demands at_least_version=v from a replica can
             # only block on the replica's attach latency, never on an
             # unpublished segment
+            shm_publish_ms = 0.0
             if self.publisher is not None:
+                t2 = time.perf_counter()
                 try:
                     self.publisher.publish_snapshot(snap, sizes=self.sizes)
                     self.publisher.update_dirty(self._dirty)
@@ -809,6 +839,8 @@ class TriclusterService:
                     # on the previous segment
                     self._stats["publish_errors"] += 1
                     self._stats["last_publish_error"] = repr(e)
+                shm_publish_ms = (time.perf_counter() - t2) * 1e3
+                self._stats["last_shm_publish_ms"] = shm_publish_ms
             self._last_mine = time.monotonic()
             self._stats["publishes"] += 1
             self._stats["last_mine_ms"] = mine_ms
@@ -816,6 +848,25 @@ class TriclusterService:
             with self._cv:
                 self._snap = snap            # THE atomic swap
                 self._cv.notify_all()
+            if self.obs.enabled:
+                # swap-path profile (DESIGN.md §11): one histogram per
+                # stage of the publish — mine, index build (delta vs
+                # full), shm mirror, end-to-end — plus the span opened
+                # at swap entry, carrying the per-stage split
+                m = self.obs.metrics
+                swap_ms = (time.perf_counter() - t0) * 1e3
+                m.histogram("service_mine_ms").observe(mine_ms)
+                m.histogram("service_index_build_ms",
+                            kind=build_kind).observe(build_ms)
+                if self.publisher is not None:
+                    m.histogram("service_shm_publish_ms").observe(
+                        shm_publish_ms)
+                m.histogram("service_swap_ms").observe(swap_ms)
+                sp.set("version", version).set("build", build_kind)
+                sp.set("mine_ms", mine_ms)
+                sp.set("index_build_ms", build_ms)
+                sp.set("shm_publish_ms", shm_publish_ms)
+            sp.finish()
             # durable checkpoint on publish cadence: the blob covers
             # everything this snapshot covers, the WAL shrinks to the
             # writes that landed during the mine

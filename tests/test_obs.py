@@ -1,0 +1,507 @@
+"""Unified observability plane (ISSUE 10): histogram bucket math vs
+exact quantiles, registry thread-safety under concurrent writers,
+trace-id propagation across a live 2-shard router fan-out (including an
+injected retry and a degraded drop, stitched by one trace id across
+three processes), and the metrics-disabled path producing zero
+spans/samples.
+
+The live test follows the chaos-test conventions of
+``test_serve_faults.py``: every fault fires on a logical request
+counter (seeded :class:`FaultPlan`), and every assertion synchronises
+on an observable state transition with a bounded wait.
+"""
+import json
+import math
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs import (NULL_OBS, TRACE_HEADER, Histogram, NullInstrument,
+                       Obs, Registry, SlowQueryLog, Tracer,
+                       format_trace_header, parse_trace_header)
+from repro.serve.faults import FaultPlan
+from repro.serve.protocol import make_server
+from repro.serve.service import TriclusterService
+
+SIZES = (24, 12, 8)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    return env
+
+
+def _wait_for(cond, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"{what} not reached in {timeout}s")
+        time.sleep(0.01)
+
+
+def _service(seed=3, n=160, **kw):
+    rng = np.random.default_rng(seed)
+    svc = TriclusterService(SIZES, refresh_interval=0.05,
+                            dirty_threshold=4, seed=seed, **kw)
+    svc.add(rng.integers(0, SIZES, size=(n, 3)).astype(np.int64))
+    return svc
+
+
+def _serve(svc, obs=None):
+    server = make_server(svc, port=0, obs=obs)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    return server
+
+
+def _get_text(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.read().decode()
+
+
+def _get_json(url, timeout=10.0):
+    return json.loads(_get_text(url, timeout))
+
+
+def _post_json(url, doc, timeout=10.0, headers=None):
+    hdrs = {"Content-Type": "application/json"}
+    if headers:
+        hdrs.update(headers)
+    req = urllib.request.Request(url, data=json.dumps(doc).encode(),
+                                 headers=hdrs)
+    with urllib.request.urlopen(req, timeout=timeout) as r:
+        return json.loads(r.read().decode())
+
+
+# ---------------------------------------------------------------------------
+# Histogram bucket math vs exact quantiles
+# ---------------------------------------------------------------------------
+
+class TestHistogram:
+    def test_bucket_quantiles_track_exact_order_statistics(self):
+        """The geometric-bucket estimate must sit within the documented
+        relative error bound — ``sqrt(ratio) - 1`` — of the exact order
+        statistic at the same rank, across a heavy-tailed sample."""
+        rng = np.random.default_rng(7)
+        samples = np.sort(rng.lognormal(mean=2.0, sigma=1.2, size=5000))
+        h = Histogram()
+        for v in rng.permutation(samples):
+            h.observe(float(v))
+        tol = math.sqrt(h.ratio) - 1.0
+        for q in (0.10, 0.50, 0.90, 0.99):
+            exact = float(samples[int(math.floor(q * (len(samples) - 1)))])
+            est = h.quantile(q)
+            assert est is not None
+            assert abs(est - exact) / exact <= tol + 1e-9, \
+                f"q={q}: est {est} vs exact {exact}"
+
+    def test_estimates_clamped_to_observed_range(self):
+        h = Histogram()
+        for v in (5.0, 7.0, 11.0):
+            h.observe(v)
+        tol = math.sqrt(h.ratio) - 1.0
+        # min/max are tracked exactly and clamp every bucket estimate
+        for q in (0.0, 0.25, 0.5, 0.75, 1.0):
+            assert 5.0 <= h.quantile(q) <= 11.0
+        assert abs(h.quantile(0.0) - 5.0) / 5.0 <= tol
+        assert abs(h.quantile(1.0) - 11.0) / 11.0 <= tol
+        assert h.count == 3
+        assert h.sum == 23.0
+
+    def test_underflow_and_overflow_buckets(self):
+        h = Histogram(lo=1.0, hi=10.0)
+        h.observe(0.0)        # below lo (underflow bucket)
+        h.observe(1e6)        # above hi (overflow bucket)
+        assert h.count == 2
+        assert h.quantile(0.0) == 1.0     # underflow represented as lo
+        assert h.quantile(1.0) == 1e6     # overflow uses the exact max
+        snap = h.snapshot()
+        assert snap["count"] == 2 and snap["min"] == 0.0
+        assert snap["buckets"][-1][0] == math.inf
+
+    def test_empty_and_bad_q(self):
+        h = Histogram()
+        assert h.quantile(0.5) is None
+        assert h.percentiles() == {"p50": None, "p99": None}
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+
+
+# ---------------------------------------------------------------------------
+# Registry: thread-safety, kind binding, collectors, exposition
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_concurrent_writers_lose_nothing(self):
+        reg = Registry()
+        n_threads, n_iter = 8, 400
+        errors = []
+
+        def work(i):
+            try:
+                for j in range(n_iter):
+                    # re-enter the registry every time: the memoised
+                    # lookup path is part of what must be thread-safe
+                    reg.counter("hits", worker=i % 2).inc()
+                    reg.histogram("lat_ms").observe(float(j + 1))
+                    reg.gauge("depth", worker=i % 2).set(j)
+            except Exception as e:             # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        total = (reg.counter("hits", worker=0).value
+                 + reg.counter("hits", worker=1).value)
+        assert total == n_threads * n_iter
+        h = reg.histogram("lat_ms")
+        assert h.count == n_threads * n_iter
+        assert h.quantile(0.0) == 1.0
+        tol = math.sqrt(h.ratio) - 1.0
+        assert abs(h.quantile(1.0) - n_iter) / n_iter <= tol
+        text = reg.expose()
+        assert 'repro_hits{worker="0"}' in text
+        assert f"repro_lat_ms_count {n_threads * n_iter}" in text
+
+    def test_name_bound_to_one_kind(self):
+        reg = Registry()
+        reg.counter("x")
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+
+    def test_collector_folds_and_filters(self):
+        reg = Registry()
+        reg.register_collector(lambda: [
+            ("stat_a", {"role": "writer"}, 3),
+            ("stat_inf", {}, float("inf")),     # non-finite: dropped
+            ("stat_str", {}, "nope"),           # non-numeric: dropped
+            ("stat_flag", {}, True),            # bool → 1.0
+        ])
+        text = reg.expose()
+        assert 'repro_stat_a{role="writer"} 3.0' in text
+        assert "stat_inf" not in text and "stat_str" not in text
+        assert "repro_stat_flag 1.0" in text
+        # collectors never mutate instruments: still zero native samples
+        assert reg.sample_count() == 0
+
+    def test_broken_collector_does_not_break_scrape(self):
+        reg = Registry()
+        reg.register_collector(lambda: (_ for _ in ()).throw(RuntimeError))
+        reg.counter("ok").inc()
+        assert "repro_ok 1.0" in reg.expose()
+
+
+# ---------------------------------------------------------------------------
+# Trace spans, header contract, slow-query log
+# ---------------------------------------------------------------------------
+
+class TestTrace:
+    def test_header_round_trip_and_malformed(self):
+        assert parse_trace_header(
+            format_trace_header("ab12", "cd34")) == ("ab12", "cd34")
+        assert parse_trace_header("ab12") == ("ab12", None)
+        for bad in (None, "", 42, "XYZ/1", "/orphan", "  /  "):
+            assert parse_trace_header(bad) == (None, None)
+
+    def test_span_parentage_and_ring_bound(self):
+        tr = Tracer(service="t", ring=16)
+        with tr.span("root") as root:
+            child = tr.start("child", trace_id=root.trace_id,
+                             parent_id=root.span_id)
+            child.set("k", 1).finish()
+        spans = tr.spans(root.trace_id)
+        assert [s["name"] for s in spans] == ["child", "root"]
+        assert spans[0]["parent_id"] == root.span_id
+        assert spans[0]["attrs"]["k"] == 1
+        assert spans[1]["parent_id"] is None
+        assert all(s["pid"] == os.getpid() for s in spans)
+        for _ in range(40):
+            with tr.span("filler"):
+                pass
+        assert len(tr) == 16 and tr.dropped > 0
+
+    def test_ctx_manager_marks_exceptions(self):
+        tr = Tracer()
+        with pytest.raises(KeyError):
+            with tr.span("boom"):
+                raise KeyError("k")
+        (sp,) = tr.spans()
+        assert sp["status"] == "error" and "KeyError" in sp["attrs"]["error"]
+
+    def test_slow_log_keeps_n_slowest(self):
+        log = SlowQueryLog(threshold_ms=10.0, keep=3)
+        assert not log.record("/query", 5.0)       # under threshold
+        for ms in (20.0, 40.0, 30.0, 50.0, 25.0):
+            log.record("/query", ms, handler_ms=ms - 1.0, wait_ms=1.0,
+                       trace_id=f"t{int(ms)}", coverage=[0, 1])
+        ents = log.entries()
+        assert [e["total_ms"] for e in ents] == [50.0, 40.0, 30.0]
+        assert ents[0]["trace_id"] == "t50"
+        assert ents[0]["wait_ms"] == 1.0 and ents[0]["coverage"] == [0, 1]
+        assert log.stats() == {"threshold_ms": 10.0, "keep": 3,
+                               "kept": 3, "recorded": 5}
+        off = SlowQueryLog(threshold_ms=-1.0)
+        assert not off.record("/query", 1e9)
+        assert off.entries() == []
+
+
+# ---------------------------------------------------------------------------
+# Disabled path: zero samples, zero spans, 404 endpoints
+# ---------------------------------------------------------------------------
+
+class TestDisabled:
+    def test_null_obs_records_nothing(self):
+        obs = NULL_OBS
+        assert not obs.enabled and Obs.disabled() is obs
+        c = obs.metrics.counter("never")
+        assert isinstance(c, NullInstrument)
+        c.inc()
+        obs.metrics.histogram("h").observe(1.0)
+        obs.metrics.gauge("g").set(9.0)
+        assert obs.metrics.sample_count() == 0
+        assert obs.metrics.expose() == ""
+        sp = obs.tracer.start("x")
+        assert sp.set("a", 1).error("boom") is sp
+        assert sp.header() is None and sp.trace_id == ""
+        sp.finish()
+        with obs.tracer.span("y") as y:
+            assert y.trace_id == ""
+        assert len(obs.tracer) == 0
+        assert not obs.slow.record("/query", 1e9)
+
+    def test_disabled_registry_is_inert(self):
+        reg = Registry(enabled=False)
+        reg.histogram("h").observe(5.0)
+        reg.register_collector(lambda: [("a", {}, 1)])
+        assert reg.sample_count() == 0
+        assert reg.expose() == "" and reg.to_dict() == {}
+
+    def test_obs_endpoints_404_without_metrics(self):
+        svc = _service().start()
+        server = _serve(svc)          # no obs hub → endpoints refuse
+        try:
+            for p in ("/metrics", "/debug/trace", "/debug/slow"):
+                with pytest.raises(urllib.error.HTTPError) as ei:
+                    _get_text(f"http://127.0.0.1:{server.port}{p}")
+                assert ei.value.code == 404
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# In-process server: header adoption + /metrics + /debug views
+# ---------------------------------------------------------------------------
+
+class TestServerObs:
+    def test_backend_adopts_trace_header(self):
+        obs = Obs.create(service="unit", slow_query_ms=0.0)
+        svc = _service(obs=obs).start()
+        server = _serve(svc, obs=obs)
+        base = f"http://127.0.0.1:{server.port}"
+        try:
+            out = _post_json(f"{base}/query", {"k": 3},
+                             headers={TRACE_HEADER: "aabbccdd/11223344"})
+            assert "hits" in out
+            # the handler records its span *after* replying — poll for
+            # the ring to catch up rather than racing it
+            trace_url = f"{base}/debug/trace?trace_id=aabbccdd"
+            _wait_for(lambda: _get_json(trace_url)["spans"],
+                      timeout=10.0, what="serve/query span in ring")
+            spans = _get_json(trace_url)
+            (sp,) = [s for s in spans["spans"]
+                     if s["name"] == "serve/query"]
+            assert sp["parent_id"] == "11223344"
+            assert sp["service"] == "unit" and sp["status"] == "ok"
+            text = _get_text(f"{base}/metrics")
+            assert 'repro_server_request_ms_count{endpoint="/query"' in text
+            assert "repro_server_requests_total" in text
+            slow = _get_json(f"{base}/debug/slow")
+            assert any(e["trace_id"] == "aabbccdd"
+                       for e in slow["slowest"])
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# Live plane: one trace id across router + two replica processes,
+# with an injected retry and a degraded drop along the way
+# ---------------------------------------------------------------------------
+
+class TestLiveTracePropagation:
+    def test_trace_stitches_across_processes(self, tmp_path):
+        """Boot a real 2-shard × 1-replica plane with --metrics and a
+        fault plan that (a) drops replica-0.0's next two requests — the
+        router must retry and succeed — and (b) delays replica-1.0's
+        next request past the router budget — shard 1 must degrade.
+        One trace id must stitch the whole story across ≥3 processes.
+
+        Request-counter arithmetic: the launcher's single boot-time
+        ``router.health()`` is request #1 at every backend, so ``at=2``
+        aims both faults at the test's one query (readiness is polled
+        via GET /metrics, which is router-local and does not fan out).
+        """
+        plan = FaultPlan.build(
+            FaultPlan.drop_requests("replica", 0, at=2, every=1, count=2),
+            FaultPlan.slow_requests("replica", 1, at=2, delay_s=5.0),
+            seed=11)
+        plan_file = tmp_path / "plan.json"
+        plan_file.write_text(plan.to_json())
+        port_file = tmp_path / "router.port"
+        cmd = [sys.executable, "-m", "repro.launch.cluster_serve",
+               "--dataset", "random", "--n-tuples", "2000",
+               "--shards", "2", "--replicas", "1",
+               "--metrics", "--slow-query-ms", "0",
+               "--no-supervise", "--router-timeout", "2",
+               "--port", "0", "--port-file", str(port_file),
+               "--fault-plan", str(plan_file)]
+        proc = subprocess.Popen(cmd, env=_env(), text=True,
+                                stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT)
+        lines = []
+        pump = threading.Thread(
+            target=lambda: lines.extend(proc.stdout),  # type: ignore
+            daemon=True)
+        pump.start()
+
+        def backend_ports():
+            # the topology's port files live in a subprocess-private
+            # tmp dir; children announce their ports on stdout instead.
+            # children share one pipe, so two announcements can land on
+            # one line — match every [tag]...port=N pair, never letting
+            # a greedy wildcard cross into the next announcement
+            ports = {}
+            for ln in list(lines):
+                for m in re.finditer(r"\[(replica-\d+\.\d+|shard-\d+)\]"
+                                     r"[^\[]*port=(\d+)", ln):
+                    ports[m.group(1)] = int(m.group(2))
+            return ports
+
+        try:
+            _wait_for(lambda: port_file.exists()
+                      and port_file.read_text().strip(),
+                      timeout=120, what="router port file")
+            base = f"http://127.0.0.1:{int(port_file.read_text())}"
+
+            def router_up():
+                try:
+                    return bool(_get_text(f"{base}/metrics", timeout=2.0))
+                except OSError:
+                    return False
+            _wait_for(router_up, timeout=60, what="router /metrics")
+            _wait_for(lambda: {"replica-0.0", "replica-1.0"}
+                      <= set(backend_ports()),
+                      timeout=60, what="replica port announcements")
+            ports = backend_ports()
+
+            # -- the one query: shard 0 retries, shard 1 degrades ------
+            out = _post_json(f"{base}/query", {"k": 5}, timeout=30)
+            assert out["degraded"] is True
+            assert out["coverage"] == [0]
+            tid = out["trace_id"]
+            assert re.fullmatch(r"[0-9a-f]{16}", tid)
+
+            # the router records root span → request metrics → slow-log
+            # entry *after* replying; the slow entry is last, so its
+            # arrival means every router-side record is in place
+            _wait_for(lambda: any(e.get("trace_id") == tid for e in
+                                  _get_json(f"{base}/debug/slow")
+                                  ["slowest"]),
+                      timeout=30, what="router slow-log entry")
+
+            # -- router-side spans -------------------------------------
+            doc = _get_json(f"{base}/debug/trace?trace_id={tid}")
+            rspans = doc["spans"]
+            by_name = {}
+            for s in rspans:
+                by_name.setdefault(s["name"], []).append(s)
+            (root,) = by_name["router/query"]
+            assert root["parent_id"] is None
+            shard_sp = {s["attrs"]["shard"]: s
+                        for s in by_name["router.shard"]}
+            assert set(shard_sp) == {0, 1}
+            assert all(s["parent_id"] == root["span_id"]
+                       for s in shard_sp.values())
+            attempts = by_name["router.attempt"]
+            assert all(a["parent_id"] == shard_sp[a["attrs"]["shard"]]
+                       ["span_id"] for a in attempts)
+            s0 = [a["attrs"]["outcome"] for a in attempts
+                  if a["attrs"]["shard"] == 0]
+            assert "retry" in s0 and s0[-1] == "ok"    # injected retry
+            s1 = [a["attrs"]["outcome"] for a in attempts
+                  if a["attrs"]["shard"] == 1]
+            assert "ok" not in s1                      # budget blown
+            (drop,) = by_name["router.degraded_drop"]
+            assert drop["attrs"]["shard"] == 1
+            assert drop["status"] == "error"
+            assert drop["parent_id"] == root["span_id"]
+
+            # -- backend spans: same trace id, distinct pids -----------
+            attempt_ids = {a["span_id"] for a in attempts}
+
+            def replica_spans(name):
+                url = (f"http://127.0.0.1:{ports[name]}"
+                       f"/debug/trace?trace_id={tid}")
+                try:
+                    return [s for s in _get_json(url)["spans"]
+                            if s["name"] == "serve/query"]
+                except OSError:
+                    return []
+
+            _wait_for(lambda: replica_spans("replica-0.0"),
+                      timeout=30, what="replica-0.0 serve/query span")
+            # replica-1.0's handler only finishes after the injected 5 s
+            # delay — well after the router already returned degraded
+            _wait_for(lambda: replica_spans("replica-1.0"),
+                      timeout=30, what="replica-1.0 serve/query span")
+            r0 = replica_spans("replica-0.0")
+            r1 = replica_spans("replica-1.0")
+            assert all(s["parent_id"] in attempt_ids for s in r0 + r1)
+            pids = ({s["pid"] for s in rspans}
+                    | {s["pid"] for s in r0 + r1})
+            assert len(pids) >= 3       # router + both replica procs
+
+            # -- slow log + always-on endpoint latency -----------------
+            slow = _get_json(f"{base}/debug/slow")
+            (ent,) = [e for e in slow["slowest"]
+                      if e.get("trace_id") == tid]
+            assert ent["endpoint"] == "/query"
+            assert ent["handler_ms"] is not None
+            assert ent["wait_ms"] is not None
+            assert ent["coverage"] == [0]
+            text = _get_text(f"{base}/metrics")
+            assert ('repro_router_endpoint_latency_ms_count'
+                    '{endpoint="/query"} 1.0') in text
+            assert 'repro_router_request_ms_count{endpoint="/query"} 1' \
+                in text
+            assert "repro_router_breaker_open" in text
+
+            try:
+                _post_json(f"{base}/shutdown", {}, timeout=10)
+            except OSError:
+                pass
+            proc.wait(timeout=90)
+        finally:
+            if proc.poll() is None:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=15)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
